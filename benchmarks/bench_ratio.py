@@ -1,0 +1,50 @@
+"""Paper Figures 4 & 5: the variance ratio Var_MH / Var_{sigma,pi}.
+
+Fig 4: the ratio is constant in J for fixed (D, f, K) — Prop 3.5.
+Fig 5: the ratio grows with K and with f (for fixed D).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import theory
+
+from .common import emit
+
+
+def run() -> None:
+    # Figure 4: constant in J (D=1000, K=800 in the paper). The ratio is very
+    # sensitive to E~ noise at K=800 ((K-1) amplification), so this cell uses
+    # a large MC sample; the exact-enumeration version of Prop 3.5 is pinned
+    # to 1e-9 in tests/test_theory.py.
+    D, f, K = 1000, 200, 800
+    t0 = time.perf_counter()
+    ratios = []
+    for a in (20, 60, 100, 140, 180):
+        r = theory.variance_ratio(D, f, a, K, method="mc",
+                                  n_samples=1_500_000, seed=a)
+        ratios.append(r)
+    us = (time.perf_counter() - t0) * 1e6 / len(ratios)
+    spread = (max(ratios) - min(ratios)) / min(ratios)
+    emit(f"fig4_ratio_constant_D{D}_f{f}_K{K}", us,
+         "|".join(f"J={a/f:.2f}:{r:.3f}" for a, r in
+                  zip((20, 60, 100, 140, 180), ratios))
+         + f"|rel_spread={spread:.3f}")
+
+    # Figure 5: ratio vs (f, K) for D=500 and D=1000
+    for D in (500, 1000):
+        for f in (D // 10, D // 4, D // 2):
+            row = []
+            t0 = time.perf_counter()
+            for K in (D // 4, D // 2, D):
+                r = theory.variance_ratio(D, f, f // 2, K, method="mc",
+                                          n_samples=120_000, seed=f + K)
+                row.append((K, r))
+            us = (time.perf_counter() - t0) * 1e6 / len(row)
+            emit(f"fig5_ratio_D{D}_f{f}", us,
+                 "|".join(f"K={k}:{r:.3f}" for k, r in row))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Systems benchmark (paper §5 discussion): signature-generation throughput and
+the K-permutations -> 2-permutations memory win.
+
+Classical MinHash must stream K*D permutation entries; C-MinHash streams the
+data once against a single pi. The 'derived' column reports docs/s and the
+parameter-memory ratio. CPU wall-clock is a proxy (the TPU path is the Pallas
+kernel, validated in interpret mode; its roofline lives in EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cminhash, minhash
+from repro.core.engine import SketchConfig, SketchEngine
+from repro.core.permutations import make_two_permutations
+
+from .common import emit, time_call
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    B, D, K = 64, 4096, 256
+    dens = 0.05
+    v = jnp.asarray((rng.random((B, D)) < dens).astype(np.int8))
+    nnz = int(np.asarray(v).sum(1).max())
+    idx_np = np.full((B, nnz), -1, np.int32)
+    for i in range(B):
+        z = np.where(np.asarray(v)[i])[0]
+        idx_np[i, : len(z)] = z
+    idx = jnp.asarray(idx_np)
+
+    key = jax.random.PRNGKey(0)
+    sigma, pi = make_two_permutations(key, D)
+    perms = minhash.make_k_permutations(key, D, K)
+
+    us = time_call(lambda: minhash.minhash_dense(v, perms))
+    emit("throughput_minhash_dense", us, f"docs_per_s={B / us * 1e6:.0f}")
+    us = time_call(lambda: minhash.minhash_sparse(idx, perms))
+    emit("throughput_minhash_sparse", us, f"docs_per_s={B / us * 1e6:.0f}")
+    us = time_call(lambda: cminhash.cminhash_dense(v, pi, K, sigma))
+    emit("throughput_cminhash_dense", us, f"docs_per_s={B / us * 1e6:.0f}")
+    us = time_call(lambda: cminhash.cminhash_sparse(idx, pi, K, sigma))
+    emit("throughput_cminhash_sparse", us, f"docs_per_s={B / us * 1e6:.0f}")
+
+    eng = SketchEngine(SketchConfig(d=D, k=K))
+    ratio = SketchEngine.classical_parameter_bytes(D, K) / eng.parameter_bytes
+    emit("memory_k_perms_vs_two", 0.0,
+         f"classical={SketchEngine.classical_parameter_bytes(D, K)}B"
+         f"|cminhash={eng.parameter_bytes}B|ratio={ratio:.0f}x")
+
+    # the paper's §5 scenario: D = 2^30, K = 1024
+    d30 = 1 << 30
+    classical = SketchEngine.classical_parameter_bytes(d30, 1024)
+    ours = 2 * d30 * 4
+    emit("memory_paper_scenario_D2pow30_K1024", 0.0,
+         f"classical={classical / 2**40:.1f}TiB|cminhash={ours / 2**30:.0f}GiB"
+         f"|ratio={classical / ours:.0f}x")
+
+
+if __name__ == "__main__":
+    run()

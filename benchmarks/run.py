@@ -1,0 +1,20 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    from benchmarks import (bench_dedup, bench_etilde, bench_mae, bench_ratio,
+                            bench_throughput, bench_variance)
+    print("name,us_per_call,derived")
+    bench_variance.run()     # Fig 6: theory vs empirical variance
+    bench_etilde.run()       # Fig 2, 3: Var vs J; E~ monotone (Lemma 3.3)
+    bench_ratio.run()        # Fig 4, 5: variance ratios / Prop 3.5
+    bench_mae.run()          # Fig 7: MAE on text/image-statistics corpora
+    bench_throughput.run()   # §5: throughput + K->2 memory
+    bench_dedup.run()        # production dedup pipeline
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,8 @@
+"""repro — C-MinHash (Li & Li, 2021) as a production-scale JAX framework.
+
+Layers: core/ (the paper's algorithm + theory), kernels/ (Pallas TPU),
+models/ (10-arch LM zoo), distributed/, train/, serve/, data/, launch/,
+analysis/ (roofline). See DESIGN.md.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,15 @@
+"""C-MinHash core: the paper's contribution as composable JAX modules."""
+
+from .cminhash import cminhash_dense, cminhash_sparse, compute_signatures  # noqa: F401
+from .engine import SketchConfig, SketchEngine  # noqa: F401
+from .estimators import (  # noqa: F401
+    jaccard_from_signatures,
+    pairwise_jaccard_from_signatures,
+    true_jaccard_dense,
+)
+from .minhash import make_k_permutations, minhash_dense, minhash_sparse  # noqa: F401
+from .permutations import (  # noqa: F401
+    circulant_shift,
+    make_two_permutations,
+    random_permutation,
+)

@@ -1,0 +1,39 @@
+"""b-bit minwise hashing (Li & Koenig, 2011) on top of C-MinHash signatures.
+
+Keeps only the lowest b bits of each hash value — the storage/bandwidth trick used
+for large-scale learning — and expands them into one-hot features for linear models
+(`examples/train_hash_features` / the dedup verifier use this).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("b",))
+def lowest_b_bits(sig: Array, b: int) -> Array:
+    """(..., K) int32 signatures -> (..., K) values in [0, 2^b)."""
+    return (sig & ((1 << b) - 1)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("b",))
+def bbit_features(sig: Array, b: int) -> Array:
+    """One-hot expansion: (B, K) -> (B, K * 2^b) float32 in {0,1}.
+
+    The standard feature map for training linear classifiers on hashed data.
+    """
+    codes = lowest_b_bits(sig, b)  # (B, K)
+    onehot = jax.nn.one_hot(codes, 1 << b, dtype=jnp.float32)  # (B, K, 2^b)
+    return onehot.reshape(sig.shape[0], -1)
+
+
+@functools.partial(jax.jit, static_argnames=("b",))
+def bbit_collision_fraction(sig_a: Array, sig_b: Array, b: int) -> Array:
+    """Fraction of matching b-bit codes (biased-up estimate of J; see Li & Koenig)."""
+    eq = lowest_b_bits(sig_a, b) == lowest_b_bits(sig_b, b)
+    return jnp.mean(eq.astype(jnp.float32), axis=-1)

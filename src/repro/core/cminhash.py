@@ -1,0 +1,92 @@
+"""C-MinHash — the paper's contribution (Algorithms 2 & 3) as composable JAX ops.
+
+Two variants:
+  * ``sigma=None``  -> C-MinHash-(0,pi)   (Section 2; location-dependent variance)
+  * ``sigma`` given -> C-MinHash-(sigma,pi) (Section 3; uniformly better than MinHash)
+
+Identity used by every implementation path (dense, sparse, Pallas kernel):
+
+    h_k(v) = min_{i : v'_i != 0} pi_{->k}(i)          (Algorithm 2/3)
+           = min_{i : v'_i != 0} pi[(i - k) mod D]
+           = min_{m : v'[(m + k) mod D] != 0} pi[m]   (substituting m = i - k)
+
+so hash k is a min-reduction of the *fixed* value vector ``pi`` masked by the
+circulantly rolled data vector — the gather-free form the TPU kernel tiles.
+K <= D is required (as in the paper); ``shift_offset=1`` reproduces k = 1..K.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .permutations import apply_permutation_dense, apply_permutation_sparse
+
+Array = jax.Array
+SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+def _check(d: int, k: int) -> None:
+    if k > d:
+        raise ValueError(f"C-MinHash requires K <= D (got K={k}, D={d})")
+
+
+@functools.partial(jax.jit, static_argnames=("k", "shift_offset"))
+def cminhash_dense(v: Array, pi: Array, k: int, sigma: Array | None = None,
+                   *, shift_offset: int = 1) -> Array:
+    """Signatures for dense binary vectors v: (B, D) -> (B, K) int32."""
+    d = v.shape[-1]
+    _check(d, k)
+    if sigma is not None:
+        v = apply_permutation_dense(v, sigma)
+    mask = (v > 0)
+    # vpad[:, m + s] for s in [shift_offset, K + shift_offset)
+    vpad = jnp.concatenate([mask, mask[:, : k + shift_offset]], axis=-1)
+
+    def one_shift(s):  # s in [0, K)
+        window = jax.lax.dynamic_slice_in_dim(vpad, s + shift_offset, d, axis=1)
+        vals = jnp.where(window, pi[None, :], SENTINEL)
+        return jnp.min(vals, axis=-1)  # (B,)
+
+    sig = jax.lax.map(one_shift, jnp.arange(k))  # (K, B)
+    return sig.T.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "shift_offset", "k_chunk"))
+def cminhash_sparse(idx: Array, pi: Array, k: int, sigma: Array | None = None,
+                    *, shift_offset: int = 1, k_chunk: int = 64) -> Array:
+    """Signatures for padded sparse index lists (B, NNZ) -> (B, K) int32.
+
+    h_k = min_{j valid} pi[(sigma(idx_j) - k) mod D]  — O(B * nnz * K) gathers,
+    the economical path when nnz << D.
+    """
+    d = pi.shape[0]
+    _check(d, k)
+    if sigma is not None:
+        idx = apply_permutation_sparse(idx, sigma)
+    b, nnz = idx.shape
+    valid = idx >= 0
+    safe_idx = jnp.where(valid, idx, 0)
+
+    def chunk_fn(carry, ks):  # ks: (k_chunk,) shift values
+        pos = (safe_idx[None, :, :] - ks[:, None, None]) % d  # (kc, B, NNZ)
+        vals = jnp.where(valid[None], pi[pos], SENTINEL)
+        return carry, jnp.min(vals, axis=-1)  # (kc, B)
+
+    n_chunks = -(-k // k_chunk)
+    ks_all = shift_offset + jnp.arange(n_chunks * k_chunk)
+    _, sigs = jax.lax.scan(chunk_fn, None, ks_all.reshape(n_chunks, k_chunk))
+    sig = sigs.reshape(n_chunks * k_chunk, b)[:k]
+    return sig.T.astype(jnp.int32)
+
+
+def compute_signatures(data: Array, pi: Array, k: int, sigma: Array | None = None,
+                       *, layout: str = "dense", shift_offset: int = 1) -> Array:
+    """Layout-dispatching front door used by the engine and the examples."""
+    if layout == "dense":
+        return cminhash_dense(data, pi, k, sigma, shift_offset=shift_offset)
+    if layout == "sparse":
+        return cminhash_sparse(data, pi, k, sigma, shift_offset=shift_offset)
+    raise ValueError(f"unknown layout {layout!r}")

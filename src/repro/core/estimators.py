@@ -1,0 +1,47 @@
+"""Jaccard estimators from signatures + ground-truth helpers (Eqs. 2, 4, 7)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@jax.jit
+def jaccard_from_signatures(sig_a: Array, sig_b: Array) -> Array:
+    """\\hat J = (1/K) sum_k 1{h_k(v) = h_k(w)} for matching leading shapes."""
+    return jnp.mean((sig_a == sig_b).astype(jnp.float32), axis=-1)
+
+
+@jax.jit
+def pairwise_jaccard_from_signatures(sig_q: Array, sig_n: Array) -> Array:
+    """(Q, K) x (N, K) -> (Q, N) estimated Jaccard matrix (reference path)."""
+    eq = sig_q[:, None, :] == sig_n[None, :, :]
+    return jnp.mean(eq.astype(jnp.float32), axis=-1)
+
+
+@jax.jit
+def true_jaccard_dense(v: Array, w: Array) -> Array:
+    """Exact J for dense binary (..., D) pairs."""
+    inter = jnp.sum((v > 0) & (w > 0), axis=-1)
+    union = jnp.sum((v > 0) | (w > 0), axis=-1)
+    return jnp.where(union > 0, inter / union, 0.0)
+
+
+def true_jaccard_sparse(idx_a: np.ndarray, idx_b: np.ndarray) -> float:
+    """Exact J for two padded sparse index lists (host-side)."""
+    sa = set(int(i) for i in np.asarray(idx_a) if i >= 0)
+    sb = set(int(i) for i in np.asarray(idx_b) if i >= 0)
+    if not sa and not sb:
+        return 0.0
+    return len(sa & sb) / len(sa | sb)
+
+
+def mae(estimates: np.ndarray, truth: np.ndarray) -> float:
+    return float(np.mean(np.abs(np.asarray(estimates) - np.asarray(truth))))
+
+
+def mse(estimates: np.ndarray, truth: np.ndarray) -> float:
+    return float(np.mean((np.asarray(estimates) - np.asarray(truth)) ** 2))

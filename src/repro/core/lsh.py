@@ -1,0 +1,79 @@
+"""Banded LSH over MinHash/C-MinHash signatures (near-duplicate candidate generation).
+
+K = n_bands * rows_per_band. Two items land in the same bucket of band j iff their
+signature rows in that band agree exactly; the usual S-curve
+P[candidate] = 1 - (1 - J^r)^b applies. Band hashing is a vectorized polynomial
+hash in JAX; bucket grouping is host-side (it is index bookkeeping, not FLOPs).
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+
+import numpy as np
+
+_BASE = np.uint64(0x9E3779B97F4A7C15)  # Fibonacci hashing multiplier
+
+
+def band_hashes(sig, n_bands: int, rows_per_band: int) -> np.ndarray:
+    """(B, K) signatures -> (B, n_bands) uint64 bucket keys.
+
+    Host-side (bucketing is index bookkeeping): vectorized polynomial fold in
+    uint64 with wraparound — JAX's default int32 domain would silently truncate.
+    """
+    sig = np.asarray(sig)
+    b, k = sig.shape
+    if n_bands * rows_per_band != k:
+        raise ValueError(f"K={k} != n_bands*rows_per_band={n_bands * rows_per_band}")
+    rows = sig.reshape(b, n_bands, rows_per_band).astype(np.uint64)
+    with np.errstate(over="ignore"):
+        h = np.zeros((b, n_bands), np.uint64)
+        for r in range(rows_per_band):
+            h = h * _BASE + rows[:, :, r] + np.uint64(1)
+            h ^= h >> np.uint64(29)
+    return h
+
+
+def candidate_pairs(bands: np.ndarray) -> set[tuple[int, int]]:
+    """All (i, j) i<j sharing at least one band bucket (host-side)."""
+    bands = np.asarray(bands)
+    cands: set[tuple[int, int]] = set()
+    for col in range(bands.shape[1]):
+        buckets: dict[int, list[int]] = defaultdict(list)
+        for i, h in enumerate(bands[:, col]):
+            buckets[int(h)].append(i)
+        for members in buckets.values():
+            if len(members) > 1:
+                for ai in range(len(members)):
+                    for bi in range(ai + 1, len(members)):
+                        cands.add((members[ai], members[bi]))
+    return cands
+
+
+class UnionFind:
+    """Host-side union-find for duplicate clustering."""
+
+    def __init__(self, n: int):
+        self.parent = list(range(n))
+
+    def find(self, i: int) -> int:
+        while self.parent[i] != i:
+            self.parent[i] = self.parent[self.parent[i]]
+            i = self.parent[i]
+        return i
+
+    def union(self, i: int, j: int) -> None:
+        ri, rj = self.find(i), self.find(j)
+        if ri != rj:
+            self.parent[max(ri, rj)] = min(ri, rj)
+
+    def clusters(self) -> dict[int, list[int]]:
+        out: dict[int, list[int]] = defaultdict(list)
+        for i in range(len(self.parent)):
+            out[self.find(i)].append(i)
+        return dict(out)
+
+
+def candidate_probability(j: float, n_bands: int, rows_per_band: int) -> float:
+    """The LSH S-curve: P = 1 - (1 - J^r)^b."""
+    return 1.0 - (1.0 - j ** rows_per_band) ** n_bands

@@ -1,0 +1,66 @@
+"""Classical K-permutation MinHash (Algorithm 1) — the paper's baseline.
+
+Deliberately kept as the paper describes it: K *independent* permutations, each of
+length D.  The storage cost (K*D int32) is the pain the paper removes; we implement
+it faithfully so the benchmarks can show the contrast.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .permutations import random_permutation
+
+Array = jax.Array
+SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+def make_k_permutations(key: Array, d: int, k: int) -> Array:
+    """(K, D) int32 — the classical parameter set."""
+    keys = jax.random.split(key, k)
+    return jax.vmap(lambda kk: random_permutation(kk, d))(keys)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def minhash_dense(v: Array, perms: Array) -> Array:
+    """Signatures for dense binary vectors.
+
+    v: (B, D) {0,1};  perms: (K, D).  Returns (B, K) int32,
+    h_k(v) = min_{i: v_i != 0} perms[k, i]  (SENTINEL for empty vectors).
+    """
+    mask = v > 0  # (B, D)
+
+    def one_perm(p):  # p: (D,)
+        vals = jnp.where(mask, p[None, :], SENTINEL)
+        return jnp.min(vals, axis=-1)  # (B,)
+
+    sig = jax.lax.map(one_perm, perms)  # (K, B)
+    return sig.T.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k_chunk",))
+def minhash_sparse(idx: Array, perms: Array, k_chunk: int = 64) -> Array:
+    """Signatures for padded sparse index lists.
+
+    idx: (B, NNZ) int32, padding entries are negative; perms: (K, D).
+    Returns (B, K) int32.
+    """
+    b, nnz = idx.shape
+    k, d = perms.shape
+    valid = idx >= 0
+    safe_idx = jnp.clip(idx, 0, d - 1)
+
+    def chunk_fn(carry, p_chunk):  # p_chunk: (k_chunk, D)
+        vals = p_chunk[:, safe_idx]  # (k_chunk, B, NNZ)
+        vals = jnp.where(valid[None], vals, SENTINEL)
+        return carry, jnp.min(vals, axis=-1)  # (k_chunk, B)
+
+    n_chunks = -(-k // k_chunk)
+    pad_k = n_chunks * k_chunk - k
+    perms_p = jnp.pad(perms, ((0, pad_k), (0, 0)))
+    _, sigs = jax.lax.scan(chunk_fn, None, perms_p.reshape(n_chunks, k_chunk, d))
+    sig = sigs.reshape(n_chunks * k_chunk, b)[:k]
+    return sig.T.astype(jnp.int32)

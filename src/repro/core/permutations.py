@@ -1,0 +1,55 @@
+"""Random permutations and circulant shifts — the paper's two-permutation substrate.
+
+Conventions (shared by every path in the repo, see DESIGN.md §8):
+  * a permutation is an int32 array ``p`` of length D with ``p[i]`` the value at
+    position ``i`` (0-based values ``0..D-1``);
+  * the circulant right-shift by ``k`` is ``p_{->k}[i] = p[(i - k) mod D]``
+    (Algorithm 2:  p=[3,1,2,4] -> p_{->1}=[4,3,1,2]);
+  * applying a permutation ``sigma`` to a data vector moves position ``i`` to
+    position ``sigma[i]``:  ``v'[sigma[i]] = v[i]``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def random_permutation(key: Array, d: int) -> Array:
+    """A uniformly random permutation of [0, d) as int32."""
+    return jax.random.permutation(key, d).astype(jnp.int32)
+
+
+def make_two_permutations(key: Array, d: int) -> tuple[Array, Array]:
+    """The paper's full parameter set: (sigma, pi). That's it — two vectors."""
+    k_sigma, k_pi = jax.random.split(key)
+    return random_permutation(k_sigma, d), random_permutation(k_pi, d)
+
+
+def circulant_shift(p: Array, k) -> Array:
+    """p_{->k}[i] = p[(i - k) mod d] == jnp.roll(p, k)."""
+    return jnp.roll(p, k)
+
+
+def apply_permutation_dense(v: Array, sigma: Array) -> Array:
+    """v'[sigma[i]] = v[i] along the last axis of a dense vector/batch."""
+    d = v.shape[-1]
+    out_shape = v.shape
+    flat = v.reshape(-1, d)
+    out = jnp.zeros_like(flat).at[:, sigma].set(flat)
+    return out.reshape(out_shape)
+
+
+def apply_permutation_sparse(idx: Array, sigma: Array) -> Array:
+    """New non-zero positions for sparse index lists (padding entries < 0 pass through)."""
+    valid = idx >= 0
+    mapped = jnp.where(valid, sigma[jnp.clip(idx, 0, sigma.shape[0] - 1)], idx)
+    return mapped
+
+
+def invert_permutation(p: Array) -> Array:
+    """q with q[p[i]] = i."""
+    d = p.shape[0]
+    return jnp.zeros((d,), jnp.int32).at[p].set(jnp.arange(d, dtype=jnp.int32))

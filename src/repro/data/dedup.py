@@ -1,0 +1,91 @@
+"""Near-duplicate removal with C-MinHash + banded LSH — the LLM-corpus use of
+the paper's technique, and the training pipeline's first stage.
+
+Stages (DESIGN.md §3):
+  docs -> shingles (data/shingle.py)
+       -> C-MinHash signatures (SketchEngine: 2 permutations, sharded/kernel)
+       -> banded LSH candidate pairs
+       -> signature-similarity verification (collision kernel)
+       -> union-find clusters -> keep one representative per cluster.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import SketchConfig, SketchEngine
+from repro.core.lsh import UnionFind, band_hashes, candidate_pairs
+
+from .shingle import batch_shingles
+
+
+@dataclasses.dataclass(frozen=True)
+class DedupConfig:
+    d: int = 1 << 16            # shingle universe
+    k: int = 256                # signature length
+    shingle_n: int = 3
+    n_bands: int = 64           # b=64, r=4: P[candidate] ~= 1-(1-J^4)^64,
+    rows_per_band: int = 4      # >99% for J >= 0.5, <2% for J <= 0.15
+    threshold: float = 0.5      # verified Jaccard-estimate cut
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class DedupResult:
+    keep: np.ndarray            # indices of retained docs
+    cluster_of: np.ndarray      # cluster id per doc (singletons included)
+    n_candidates: int
+    n_verified: int
+    signatures: np.ndarray      # (n_docs, K)
+
+
+def dedup_corpus(docs: list[np.ndarray], cfg: DedupConfig,
+                 mesh=None) -> DedupResult:
+    if cfg.n_bands * cfg.rows_per_band != cfg.k:
+        raise ValueError("n_bands * rows_per_band must equal k")
+    idx = batch_shingles(docs, n=cfg.shingle_n, d=cfg.d)
+    engine = SketchEngine(SketchConfig(d=cfg.d, k=cfg.k, seed=cfg.seed),
+                          mesh=mesh)
+    sigs = np.asarray(engine.signatures_sparse(jnp.asarray(idx)))
+
+    bands = np.asarray(band_hashes(sigs, cfg.n_bands,
+                                   cfg.rows_per_band))
+    cands = candidate_pairs(bands)
+
+    uf = UnionFind(len(docs))
+    n_verified = 0
+    if cands:
+        pairs = np.asarray(sorted(cands), np.int64)
+        # aligned row-wise verification (the pairwise collision kernel is for
+        # query-vs-index search; candidate pairs are 1:1)
+        eq = (sigs[pairs[:, 0]] == sigs[pairs[:, 1]]).mean(axis=1)
+        for (i, j), sim in zip(pairs, eq):
+            if sim >= cfg.threshold:
+                uf.union(int(i), int(j))
+                n_verified += 1
+
+    cluster_of = np.asarray([uf.find(i) for i in range(len(docs))])
+    keep = np.asarray(sorted({uf.find(i) for i in range(len(docs))}))
+    return DedupResult(keep=keep, cluster_of=cluster_of,
+                       n_candidates=len(cands), n_verified=n_verified,
+                       signatures=sigs)
+
+
+def dedup_metrics(result: DedupResult, truth_labels: np.ndarray) -> dict:
+    """Pair-level precision/recall against planted duplicate clusters."""
+    n = len(result.cluster_of)
+    tp = fp = fn = 0
+    for i in range(n):
+        for j in range(i + 1, n):
+            truth = truth_labels[i] >= 0 and truth_labels[i] == truth_labels[j]
+            pred = result.cluster_of[i] == result.cluster_of[j]
+            tp += truth and pred
+            fp += pred and not truth
+            fn += truth and not pred
+    precision = tp / max(tp + fp, 1)
+    recall = tp / max(tp + fn, 1)
+    return {"precision": precision, "recall": recall, "tp": tp, "fp": fp,
+            "fn": fn, "kept": len(result.keep), "total": n}

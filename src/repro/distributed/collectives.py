@@ -1,0 +1,60 @@
+"""Compressed data-parallel gradient reduction (distributed-optimization trick).
+
+Wraps a per-shard gradient function in ``jax.shard_map`` so the DP all-reduce is
+explicit and can run at reduced precision:
+  * ``bf16``: cast -> psum -> fp32 (half the DP wire bytes);
+  * ``int8``: per-tensor max-scaled int8 quantization with a persistent
+    error-feedback buffer (1/4 wire bytes, unbiased in the long run).
+
+Only the *data* axes are manual here; the model axis stays under the usual pjit
+partitioner (shard_map's auto axes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+
+def _psum_bf16(g: Array, axes) -> Array:
+    return jax.lax.psum(g.astype(jnp.bfloat16), axes).astype(jnp.float32)
+
+
+def _psum_int8(g: Array, err: Array, axes) -> tuple[Array, Array]:
+    gf = g.astype(jnp.float32) + err
+    # shared scale across the reduction group (one extra scalar pmax) so the
+    # int8 sum is exact in scale; per-shard scales would inject O(scale
+    # variance) error that even error feedback only fixes in expectation
+    scale = jax.lax.pmax(jnp.max(jnp.abs(gf)), axes) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_err = gf - q.astype(jnp.float32) * scale   # error feedback
+    summed = jax.lax.psum(q.astype(jnp.int32), axes).astype(jnp.float32)
+    return summed * scale, new_err
+
+
+def compressed_psum(grads, mode: str, axes, err_state=None):
+    """psum a gradient pytree over data axes with optional compression.
+    Returns (grads, new_err_state)."""
+    if mode == "none":
+        return jax.tree.map(lambda g: jax.lax.psum(g, axes), grads), err_state
+    if mode == "bf16":
+        return jax.tree.map(lambda g: _psum_bf16(g, axes), grads), err_state
+    if mode == "int8":
+        if err_state is None:
+            raise ValueError("int8 compression needs an error-feedback state")
+        out = jax.tree.map(lambda g, e: _psum_int8(g, e, axes), grads, err_state)
+        new_grads = jax.tree.map(lambda t: t[0], out,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+        new_err = jax.tree.map(lambda t: t[1], out,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        return new_grads, new_err
+    raise ValueError(f"unknown grad compression {mode!r}")
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,197 @@
+"""Logical-axis sharding rules: param-path regexes -> PartitionSpecs, with the
+divisor rule (a dim only shards if its size divides the axis) and batch specs.
+
+This is the single place where the Megatron-style layout lives:
+vocab/heads/ff/experts/d_inner shard over ``model``; the batch shards over
+``("pod","data")``; everything else is replicated. ZeRO-1 rewrites optimizer
+moments to additionally shard a replicated dim over ``data``.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import tree_flatten_with_path, tree_unflatten
+
+Array = jax.Array
+
+# (path regex, spec template). Templates apply to the *trailing* dims; leading
+# dims (e.g. the stacked-layer L axis) are padded with None. Matched top-down,
+# first hit wins.
+_RULES: tuple[tuple[str, tuple], ...] = (
+    (r"embed$",               ("model", None)),
+    (r"lm_head$",             (None, "model")),
+    (r"attn/wq$",             (None, "model", None)),
+    (r"attn/wk$",             (None, "model", None)),
+    (r"attn/wv$",             (None, "model", None)),
+    (r"attn/wo$",             ("model", None, None)),
+    (r"xattn/wq$",            (None, "model", None)),
+    (r"xattn/wk$",            (None, "model", None)),
+    (r"xattn/wv$",            (None, "model", None)),
+    (r"xattn/wo$",            ("model", None, None)),
+    (r"mlp/w_gate$",          (None, "model")),
+    (r"mlp/w_up$",            (None, "model")),
+    (r"mlp/w_down$",          ("model", None)),
+    (r"moe/router$",          (None, None)),
+    (r"moe/e_gate$",          ("model", None, None)),
+    (r"moe/e_up$",            ("model", None, None)),
+    (r"moe/e_down$",          ("model", None, None)),
+    (r"ssm/in_proj$",         (None, "model")),
+    (r"ssm/conv_w$",          (None, "model")),
+    (r"ssm/conv_b$",          ("model",)),
+    (r"ssm/x_proj$",          ("model", None)),
+    (r"ssm/dt_proj$",         (None, "model")),
+    (r"ssm/dt_bias$",         ("model",)),
+    (r"ssm/a_log$",           ("model", None)),
+    (r"ssm/d_skip$",          ("model",)),
+    (r"ssm/out_proj$",        ("model", None)),
+)
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh, ndim: int = 2) -> P:
+    return P(batch_axes(mesh), *([None] * (ndim - 1)))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return "/".join(parts)
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    return int(np.prod([mesh.shape[a] for a in axes if a in mesh.axis_names]))
+
+
+def _spec_for(path_s: str, shape: tuple[int, ...], mesh: Mesh,
+              tensor_axes="model") -> P:
+    """``tensor_axes`` is what the 'model' slot of the templates maps to —
+    ("data","model") gives 2D tensor sharding for batch-starved decode
+    (EXPERIMENTS.md §Perf D)."""
+    for pat, template in _RULES:
+        if re.search(pat, path_s):
+            spec = [None] * (len(shape) - len(template)) + list(template)
+            # divisor rule: drop axes that don't divide the dim (or trivial
+            # size-1 axes — sharding there is replication with extra noise)
+            out = []
+            for dim, ax in zip(shape, spec):
+                if ax == "model":
+                    ax = tensor_axes
+                n = _axes_size(mesh, ax) if ax is not None else 1
+                if ax is not None and n > 1 and dim % n == 0:
+                    out.append(ax)
+                else:
+                    out.append(None)
+            return P(*out)
+    return P()  # replicated (norms, biases, scalars)
+
+
+def param_specs(params_shape, mesh: Mesh, *, tensor_axes="model"):
+    """Pytree of PartitionSpecs mirroring a params pytree (arrays or
+    ShapeDtypeStructs)."""
+    leaves, treedef = tree_flatten_with_path(params_shape)
+    specs = [_spec_for(_path_str(p), tuple(x.shape), mesh, tensor_axes)
+             for p, x in leaves]
+    return tree_unflatten(treedef, specs)
+
+
+def param_shardings(params_shape, mesh: Mesh, *, tensor_axes="model"):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params_shape, mesh,
+                                    tensor_axes=tensor_axes))
+
+
+def fsdp_param_specs(params_shape, mesh: Mesh, *, axis: str = "model",
+                     min_size: int = 1 << 16):
+    """FSDP/ZeRO-3 layout: shard the largest divisible dim of every big param
+    over ``axis``; activations stay batch-sharded over data. GSPMD then
+    all-gathers each weight at its use — for small dense models at TP=16 the
+    weight all-gathers are far cheaper than TP activation all-reduces
+    (EXPERIMENTS.md §Perf E)."""
+    n = mesh.shape.get(axis, 1)
+
+    def spec(path, x):
+        shape = tuple(x.shape)
+        if n <= 1 or int(np.prod(shape)) < min_size:
+            return P()
+        dims = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in dims:
+            if shape[i] % n == 0 and shape[i] >= n:
+                out = [None] * len(shape)
+                out[i] = axis
+                return P(*out)
+        return P()
+
+    leaves, treedef = tree_flatten_with_path(params_shape)
+    return tree_unflatten(treedef, [spec(p, x) for p, x in leaves])
+
+
+def zero1_specs(params_shape, mesh: Mesh):
+    """Optimizer-moment specs: the param spec with the first shardable
+    replicated dim additionally sharded over ``data`` (ZeRO-1)."""
+    dsize = mesh.shape.get("data", 1)
+
+    def upgrade(path, x):
+        base = _spec_for(_path_str(path), tuple(x.shape), mesh)
+        spec = list(base) + [None] * (len(x.shape) - len(base))
+        for i, (dim, ax) in enumerate(zip(x.shape, spec)):
+            if ax is None and dim % dsize == 0 and dim >= dsize:
+                spec[i] = "data"
+                break
+        return P(*spec)
+
+    leaves, treedef = tree_flatten_with_path(params_shape)
+    return tree_unflatten(treedef, [upgrade(p, x) for p, x in leaves])
+
+
+# Cache specs: leaves are (L, B, C, KVe, hd) / (L, B, Di, N) / (L, B, cw-1, Di)
+# / (C,) / scalar t.
+def cache_specs(cache_shape, mesh: Mesh, *, tensor_axes="model"):
+    baxes = batch_axes(mesh)
+    if tensor_axes != "model":
+        baxes = ()  # 2D tensor sharding consumes the data axes
+
+    def mdl(dim: int):
+        n = _axes_size(mesh, tensor_axes)
+        return tensor_axes if n > 1 and dim % n == 0 else None
+
+    def spec(path, x):
+        name = _path_str(path).split("/")[-1]
+        shp = x.shape
+        if name in ("k", "v", "xk", "xv"):   # (L, B, C, KVe|KV, hd)
+            return P(None, _maybe_batch(shp[1], baxes, mesh), None,
+                     mdl(shp[3]), None)
+        if name == "h":                      # (L, B, Di, N)
+            return P(None, _maybe_batch(shp[1], baxes, mesh), mdl(shp[2]),
+                     None)
+        if name == "conv":                   # (L, B, cw-1, Di)
+            return P(None, _maybe_batch(shp[1], baxes, mesh), None,
+                     mdl(shp[3]))
+        return P()                           # entry_pos, t
+
+    leaves, treedef = tree_flatten_with_path(cache_shape)
+    return tree_unflatten(treedef, [spec(p, x) for p, x in leaves])
+
+
+def _maybe_batch(dim: int, baxes: tuple[str, ...], mesh: Mesh):
+    n = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+    return baxes if n > 1 and dim % n == 0 else None
+
+
+def batch_shardings(batch_shape, mesh: Mesh):
+    """Input batch dict: leading dim shards over ('pod','data') when divisible."""
+    baxes = batch_axes(mesh)
+
+    def spec(x):
+        lead = _maybe_batch(x.shape[0], baxes, mesh) if x.ndim else None
+        return NamedSharding(mesh, P(lead, *([None] * (max(x.ndim, 1) - 1))))
+
+    return jax.tree.map(spec, batch_shape)

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels (validated on CPU via interpret=True) + jnp oracles."""
+
+from .ops import cminhash_signatures, collision_counts, estimated_jaccard_matrix  # noqa: F401

@@ -1,0 +1,53 @@
+"""Public jit'd wrappers around the Pallas kernels with reference fallbacks.
+
+`use_kernel` policy: Pallas kernels run compiled on TPU and in interpret mode on
+CPU (functionally identical, slower).  The wrappers keep signature semantics
+identical across paths so callers (engine, dedup pipeline, benchmarks) can switch
+freely; tests sweep shapes/dtypes asserting kernel == ref.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.permutations import apply_permutation_dense
+from . import ref
+from .cminhash_kernel import cminhash_pallas
+from .collision_kernel import collision_count_pallas
+
+Array = jax.Array
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def cminhash_signatures(v: Array, pi: Array, k: int, sigma: Array | None = None,
+                        *, shift_offset: int = 1, use_kernel: bool = True,
+                        block_b: int = 8, block_d: int = 256) -> Array:
+    """Dense C-MinHash signatures (B, D) -> (B, K) via kernel or oracle."""
+    if sigma is not None:
+        v = apply_permutation_dense(v, sigma)
+    if use_kernel:
+        return cminhash_pallas(v, pi, k, shift_offset=shift_offset,
+                               block_b=block_b, block_d=block_d,
+                               interpret=_interpret())
+    return ref.cminhash_dense_ref(v, pi, k, shift_offset=shift_offset)
+
+
+def collision_counts(sig_q: Array, sig_n: Array, *, use_kernel: bool = True,
+                     block_q: int = 64, block_n: int = 64,
+                     block_k: int = 128) -> Array:
+    """(Q, K) x (N, K) -> (Q, N) int32 match counts via kernel or oracle."""
+    if use_kernel:
+        return collision_count_pallas(sig_q, sig_n, block_q=block_q,
+                                      block_n=block_n, block_k=block_k,
+                                      interpret=_interpret())
+    return ref.collision_count_ref(sig_q, sig_n)
+
+
+def estimated_jaccard_matrix(sig_q: Array, sig_n: Array, **kw) -> Array:
+    """(Q, N) float32 estimated Jaccard from signatures."""
+    k = sig_q.shape[-1]
+    return collision_counts(sig_q, sig_n, **kw).astype(jnp.float32) / k

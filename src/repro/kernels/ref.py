@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Deliberately written in the most obvious form (explicit rolls / broadcasts) and kept
+independent from the tiled kernels so a tiling bug cannot cancel out.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+@functools.partial(jax.jit, static_argnames=("k", "shift_offset"))
+def cminhash_dense_ref(v: Array, pi: Array, k: int, *, shift_offset: int = 1) -> Array:
+    """h_q = min_m { pi[m] : v[(m + q + shift_offset) mod D] != 0 },  q = 0..K-1.
+
+    v: (B, D) binary; pi: (D,) int32. Returns (B, K) int32.
+    (sigma, when used, is applied by the caller — kernels hash the permuted vector.)
+    """
+    d = v.shape[-1]
+    mask = v > 0
+
+    def one(q):
+        rolled = jnp.roll(mask, -(q + shift_offset), axis=-1)
+        vals = jnp.where(rolled, pi[None, :], SENTINEL)
+        return jnp.min(vals, axis=-1)
+
+    sig = jax.lax.map(one, jnp.arange(k))
+    return sig.T.astype(jnp.int32)
+
+
+@jax.jit
+def collision_count_ref(sig_q: Array, sig_n: Array) -> Array:
+    """(Q, K) x (N, K) int32 -> (Q, N) int32 match counts."""
+    eq = sig_q[:, None, :] == sig_n[None, :, :]
+    return jnp.sum(eq.astype(jnp.int32), axis=-1)

@@ -1,0 +1,56 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation anywhere: batches, params, optimizer states and caches are
+all abstract shapes; modality frontends are stubs supplying embeddings
+(DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell) -> dict:
+    """Host batch specs for train/prefill kinds (decode adds the cache)."""
+    gb, s = shape.global_batch, shape.seq_len
+    batch: dict = {"tokens": SDS((gb, s), jnp.int32)}
+    if cfg.frontend == "patches":
+        batch["patches"] = SDS((gb, s // 8, cfg.d_model), jnp.float32)
+    if cfg.frontend == "frames":
+        batch["frames"] = SDS((gb, s, cfg.d_model), jnp.float32)
+    return batch
+
+
+def token_specs(cfg: ModelConfig, shape: ShapeCell) -> SDS:
+    return SDS((shape.global_batch,), jnp.int32)
+
+
+def params_shape(bundle) -> dict:
+    return jax.eval_shape(lambda: bundle.init(jax.random.PRNGKey(0)))
+
+
+def cache_shape(bundle, cfg: ModelConfig, shape: ShapeCell, tp: int,
+                p_shape=None) -> dict:
+    """Abstract decode-cache pytree for a cache of seq_len entries."""
+    gb, s = shape.global_batch, shape.seq_len
+    if cfg.is_encdec:  # cross-K/V sizes come from the encoder: shape prefill
+        p_shape = p_shape if p_shape is not None else params_shape(bundle)
+        batch = input_specs(cfg, shape)
+        _, cache = jax.eval_shape(
+            lambda p, b: bundle.prefill(p, b, tp=tp, max_len=s),
+            p_shape, batch)
+        return cache
+    return jax.eval_shape(lambda: bundle.init_cache(gb, s, tp=tp))
+
+
+def runnable(cfg: ModelConfig, shape: ShapeCell) -> tuple[bool, str]:
+    """Is this (arch, shape) cell runnable? (long_500k needs sub-quadratic.)"""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("skipped: pure full attention cannot decode at 524288 "
+                       "context (DESIGN.md §6)")
+    return True, ""

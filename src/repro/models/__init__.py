@@ -1,0 +1,3 @@
+"""Model zoo: layers + family assemblies for the 10 assigned architectures."""
+
+from .registry import ModelBundle, build  # noqa: F401

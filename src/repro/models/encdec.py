@@ -1,0 +1,189 @@
+"""Encoder–decoder backbone (Seamless-M4T-medium assignment).
+
+The audio frontend is a stub per the assignment: ``input_specs()`` supplies
+precomputed frame embeddings (B, S_enc, D). Encoder: non-causal self-attention
++ SwiGLU; decoder: causal self-attention + cross-attention + SwiGLU. Both sides
+scan over stacked layers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (apply_rope, attention_block, chunked_attention,
+                     decode_attention, init_attention, init_mlp, mlp_block,
+                     normal_init, project_kv, rmsnorm)
+from .transformer import _dtype, _maybe_remat, _pdtype, _repeat_kv_to, kv_eff_heads
+
+Array = jax.Array
+
+
+def init_enc_layer(key: Array, cfg) -> dict:
+    dt = _pdtype(cfg)
+    k1, k2 = jax.random.split(key)
+    return {"ln1": jnp.ones((cfg.d_model,), dt),
+            "attn": init_attention(k1, cfg, dt),
+            "ln2": jnp.ones((cfg.d_model,), dt),
+            "mlp": init_mlp(k2, cfg, dt)}
+
+
+def init_dec_layer(key: Array, cfg) -> dict:
+    dt = _pdtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": jnp.ones((cfg.d_model,), dt),
+            "attn": init_attention(k1, cfg, dt),
+            "lnx": jnp.ones((cfg.d_model,), dt),
+            "xattn": init_attention(k2, cfg, dt),
+            "ln2": jnp.ones((cfg.d_model,), dt),
+            "mlp": init_mlp(k3, cfg, dt)}
+
+
+def init_params(key: Array, cfg) -> dict:
+    dt = _pdtype(cfg)
+    ke, kd, kemb, kh = jax.random.split(key, 4)
+    enc = jax.vmap(lambda k: init_enc_layer(k, cfg))(
+        jax.random.split(ke, cfg.n_enc_layers))
+    dec = jax.vmap(lambda k: init_dec_layer(k, cfg))(
+        jax.random.split(kd, cfg.n_layers))
+    return {
+        "embed": normal_init(kemb, (cfg.vocab_size, cfg.d_model), 0.02, dt),
+        "enc_layers": enc,
+        "dec_layers": dec,
+        "enc_norm": jnp.ones((cfg.d_model,), dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": normal_init(kh, (cfg.d_model, cfg.vocab_size),
+                               cfg.d_model ** -0.5, dt),
+    }
+
+
+def encode(params: dict, frames: Array, cfg) -> Array:
+    """frames: (B, S_enc, D) stub embeddings -> encoder states (B, S_enc, D)."""
+    dt = _dtype(cfg)
+    x = frames.astype(dt)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(xx, lp):
+        xx = xx + attention_block(lp["attn"], rmsnorm(xx, lp["ln1"], cfg.norm_eps),
+                                  positions, cfg, causal=False, window=0)
+        xx = xx + mlp_block(lp["mlp"], rmsnorm(xx, lp["ln2"], cfg.norm_eps))
+        return xx, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["enc_layers"])
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block(lp: dict, x: Array, positions: Array, enc_out: Array, cfg) -> Array:
+    x = x + attention_block(lp["attn"], rmsnorm(x, lp["ln1"], cfg.norm_eps),
+                            positions, cfg, causal=True)
+    xk, xv = project_kv(lp["xattn"], enc_out, positions, cfg)
+    x = x + attention_block(lp["xattn"], rmsnorm(x, lp["lnx"], cfg.norm_eps),
+                            positions, cfg, causal=False, window=0,
+                            kv_override=(xk, xv))
+    x = x + mlp_block(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.norm_eps))
+    return x
+
+
+def forward(params: dict, frames: Array, tokens: Array, cfg) -> tuple[Array, Array]:
+    """Teacher-forced training forward. Returns (logits (B, S_dec, V), aux=0)."""
+    dt = _dtype(cfg)
+    enc_out = encode(params, frames, cfg)
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(xx, lp):
+        return _dec_block(lp, xx, positions, enc_out, cfg), None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["dec_layers"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(dt)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def prefill(params: dict, frames: Array, tokens: Array, cfg, *, tp: int = 1,
+            max_len: int | None = None) -> tuple[Array, dict]:
+    """Encode + run the decoder prompt; returns (last logits, cache)."""
+    dt = _dtype(cfg)
+    enc_out = encode(params, frames, cfg)
+    b, s = tokens.shape
+    max_len = max_len or s
+    kve = kv_eff_heads(cfg, tp)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(xx, lp):
+        xn = rmsnorm(xx, lp["ln1"], cfg.norm_eps)
+        k, v = project_kv(lp["attn"], xn, positions, cfg)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        entries = {
+            "k": jnp.pad(_repeat_kv_to(k, kve),
+                         ((0, 0), (0, max_len - s), (0, 0), (0, 0))),
+            "v": jnp.pad(_repeat_kv_to(v, kve),
+                         ((0, 0), (0, max_len - s), (0, 0), (0, 0))),
+        }
+        xk, xv = project_kv(lp["xattn"], enc_out, positions, cfg)
+        entries["xk"], entries["xv"] = xk, xv
+        return _dec_block(lp, xx, positions, enc_out, cfg), entries
+
+    x, entries = jax.lax.scan(_maybe_remat(body, cfg), x, params["dec_layers"])
+    x_last = rmsnorm(x[:, -1], params["final_norm"], cfg.norm_eps)
+    logits = x_last @ params["lm_head"].astype(dt)
+
+    cache = dict(entries)
+    cache["t"] = jnp.asarray(s, jnp.int32)
+    pos0 = jnp.arange(max_len)
+    cache["entry_pos"] = jnp.where(pos0 < s, pos0, -1).astype(jnp.int32)
+    return logits, cache
+
+
+def decode_step(params: dict, cache: dict, token: Array, cfg) -> tuple[Array, dict]:
+    """One decoder token; cross K/V are fixed in the cache."""
+    dt = _dtype(cfg)
+    b = token.shape[0]
+    t = cache["t"]
+    c = cache["k"].shape[2]
+    slot = t % c
+    entry_pos = cache["entry_pos"].at[slot].set(t)
+    pos_b = jnp.broadcast_to(t, (b, 1))
+    x = jnp.take(params["embed"], token, axis=0).astype(dt)
+
+    xs = {"lp": params["dec_layers"], "k": cache["k"], "v": cache["v"],
+          "xk": cache["xk"], "xv": cache["xv"]}
+    s_enc = cache["xk"].shape[2]
+    enc_pos = jnp.arange(s_enc)
+
+    def body(xx, layer):
+        lp = layer["lp"]
+        xn = rmsnorm(xx, lp["ln1"], cfg.norm_eps)
+        ap = lp["attn"]
+        q = jnp.einsum("bd,dhk->bhk", xn, ap["wq"].astype(dt))
+        k_new = jnp.einsum("bd,dhk->bhk", xn, ap["wk"].astype(dt))
+        v_new = jnp.einsum("bd,dhk->bhk", xn, ap["wv"].astype(dt))
+        q = apply_rope(q[:, None], pos_b, cfg.rope_theta)[:, 0]
+        k_new = apply_rope(k_new[:, None], pos_b, cfg.rope_theta)[:, 0]
+        kve = layer["k"].shape[-2]
+        k_c = layer["k"].at[:, slot].set(_repeat_kv_to(k_new, kve))
+        v_c = layer["v"].at[:, slot].set(_repeat_kv_to(v_new, kve))
+        out = decode_attention(q, k_c, v_c, entry_pos, t, window=0)
+        xx = xx + jnp.einsum("bhk,hkd->bd", out, ap["wo"].astype(dt))
+
+        xp = lp["xattn"]
+        qx = jnp.einsum("bd,dhk->bhk", rmsnorm(xx, lp["lnx"], cfg.norm_eps),
+                        xp["wq"].astype(dt))
+        out = decode_attention(qx, layer["xk"], layer["xv"], enc_pos,
+                               jnp.asarray(s_enc, jnp.int32), window=0)
+        xx = xx + jnp.einsum("bhk,hkd->bd", out, xp["wo"].astype(dt))
+        xx = xx + mlp_block(lp["mlp"], rmsnorm(xx, lp["ln2"], cfg.norm_eps))
+        return xx, {"k": k_c, "v": v_c}
+
+    x, new_entries = jax.lax.scan(body, x, xs)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(dt)
+
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = new_entries["k"], new_entries["v"]
+    new_cache["t"] = t + 1
+    new_cache["entry_pos"] = entry_pos
+    return logits, new_cache

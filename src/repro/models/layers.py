@@ -1,0 +1,259 @@
+"""Shared neural net layers: RMSNorm, RoPE, GQA attention (full/SWA, chunked), SwiGLU.
+
+All layers are pure functions over param pytrees (plain dicts of jnp arrays).
+Parameters are stored in ``param_dtype`` (fp32) and cast to the compute dtype at
+use; attention softmax and normalization statistics stay in fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def normal_init(key: Array, shape: tuple[int, ...], scale: float,
+                dtype) -> Array:
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: Array, weight: Array, eps: float) -> Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * rms).astype(dtype) * weight.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (rotate-half convention, fp32 internals)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta))          # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return rotated.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (training/prefill: chunked over query blocks with a sliding KV
+# window; decode: single-token against a cache)
+# ---------------------------------------------------------------------------
+
+def _expand_kv(k: Array, n_heads: int) -> Array:
+    """(B, S, KV, hd) -> (B, S, H, hd) by repeating each kv head H/KV times."""
+    b, s, kv, hd = k.shape
+    reps = n_heads // kv
+    if reps == 1:
+        return k
+    return jnp.repeat(k, reps, axis=2)
+
+
+def chunked_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                      window: int, q_chunk: int) -> Array:
+    """Memory-efficient attention.
+
+    q: (B, S, H, hd); k, v: (B, S_kv, KV, hd). KV heads are expanded to H.
+    ``window > 0`` restricts each query to the last ``window`` keys (SWA) and
+    makes compute O(S * window); ``window == 0`` means full attention, computed
+    as a scan over query chunks each attending to all keys (memory O(S_kv) per
+    chunk, compute O(S * S_kv)).
+    Returns (B, S, H, hd).
+    """
+    b, s, h, hd = q.shape
+    s_kv = k.shape[1]
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    scale = 1.0 / np.sqrt(hd)
+
+    qc = min(q_chunk, s)
+    n_chunks = -(-s // qc)
+    s_pad = n_chunks * qc
+    if s_pad != s:
+        q = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+
+    # KV slice length per query chunk: the window plus the chunk itself (SWA),
+    # or everything (full).
+    slice_len = min(window + qc, s_kv) if window > 0 else s_kv
+
+    q_blocks = jnp.moveaxis(q.reshape(b, n_chunks, qc, h, hd), 1, 0)
+    starts = jnp.arange(n_chunks) * qc
+
+    def one_chunk(carry, inp):
+        q_blk, q_start = inp                                   # (B, qc, H, hd)
+        k_start = jnp.clip(q_start + qc - slice_len, 0, max(s_kv - slice_len, 0))
+        k_blk = jax.lax.dynamic_slice_in_dim(k, k_start, slice_len, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, k_start, slice_len, axis=1)
+        q_pos = q_start + jnp.arange(qc)                       # (qc,)
+        k_pos = k_start + jnp.arange(slice_len)                # (slice_len,)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk,
+                            preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((qc, slice_len), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        mask &= (k_pos < s_kv)[None, :]
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q_blk.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v_blk)
+        return carry, out
+
+    _, outs = jax.lax.scan(one_chunk, None, (q_blocks, starts))  # (nc, B, qc, H, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s_pad, h, hd)
+    return out[:, :s]
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     entry_pos: Array, t: Array, *, window: int) -> Array:
+    """One-token attention against a cache.
+
+    q: (B, H, hd); caches: (B, C, KVe, hd) with KVe | H; entry_pos: (C,) int32
+    absolute position of each cache entry (-1 = empty, shared across batch);
+    t: scalar current position. Works for both linear caches (C = max_len) and
+    SWA ring buffers (C = window).
+    """
+    b, c, kve, hd = k_cache.shape
+    h = q.shape[1]
+    g = h // kve
+    qg = q.reshape(b, kve, g, hd)
+    scale = 1.0 / np.sqrt(hd)
+    scores = jnp.einsum("bkgd,bckd->bkgc", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    valid = (entry_pos >= 0) & (entry_pos <= t)
+    if window > 0:
+        valid &= entry_pos > t - window
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgc,bckd->bkgd", probs, v_cache)
+    return out.reshape(b, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + attention), shared by all families
+# ---------------------------------------------------------------------------
+
+def init_attention(key: Array, cfg, dtype) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+    out_scale = scale / np.sqrt(2 * cfg.n_layers)
+    return {
+        "wq": normal_init(ks[0], (d, h, hd), scale, dtype),
+        "wk": normal_init(ks[1], (d, kv, hd), scale, dtype),
+        "wv": normal_init(ks[2], (d, kv, hd), scale, dtype),
+        "wo": normal_init(ks[3], (h, hd, d), out_scale, dtype),
+    }
+
+
+@jax.custom_vjp
+def _qkv_fused(x, wq, wk, wv):
+    return (jnp.einsum("...d,dhk->...hk", x, wq),
+            jnp.einsum("...d,dhk->...hk", x, wk),
+            jnp.einsum("...d,dhk->...hk", x, wv))
+
+
+def _qkv_fused_fwd(x, wq, wk, wv):
+    return _qkv_fused(x, wq, wk, wv), (x, wq, wk, wv)
+
+
+def _qkv_fused_bwd(res, cts):
+    x, wq, wk, wv = res
+    dq, dk, dv = cts
+    # sum the three model-partial dx contributions BEFORE the TP reduction:
+    # autodiff emits three dots whose partial outputs each get their own
+    # all-reduce; this collapses them to one (measured in §Perf).
+    dx = (jnp.einsum("...hk,dhk->...d", dq, wq)
+          + jnp.einsum("...hk,dhk->...d", dk, wk)
+          + jnp.einsum("...hk,dhk->...d", dv, wv))
+    dwq = jnp.einsum("...d,...hk->dhk", x, dq)
+    dwk = jnp.einsum("...d,...hk->dhk", x, dk)
+    dwv = jnp.einsum("...d,...hk->dhk", x, dv)
+    return dx, dwq, dwk, dwv
+
+
+_qkv_fused.defvjp(_qkv_fused_fwd, _qkv_fused_bwd)
+
+
+def qkv_project(p: dict, x: Array, cfg) -> tuple[Array, Array, Array]:
+    """x: (..., D) -> q (..., H, hd), k, v (..., KV, hd).
+
+    ``cfg.fused_qkv`` keeps the parameters and forward identical but fuses the
+    backward dx reduction (one TP all-reduce instead of three).
+    """
+    dtype = x.dtype
+    wq = p["wq"].astype(dtype)
+    wk = p["wk"].astype(dtype)
+    wv = p["wv"].astype(dtype)
+    if getattr(cfg, "fused_qkv", False):
+        return _qkv_fused(x, wq, wk, wv)
+    return (jnp.einsum("...d,dhk->...hk", x, wq),
+            jnp.einsum("...d,dhk->...hk", x, wk),
+            jnp.einsum("...d,dhk->...hk", x, wv))
+
+
+def attention_block(p: dict, x: Array, positions: Array, cfg, *,
+                    causal: bool = True, window: int | None = None,
+                    kv_override: tuple[Array, Array] | None = None) -> Array:
+    """x: (B, S, D) -> (B, S, D). ``kv_override`` supplies cross-attention K/V."""
+    dtype = x.dtype
+    w = cfg.sliding_window if window is None else window
+    if kv_override is None:
+        q, k, v = qkv_project(p, x, cfg)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        q = apply_rope(q, positions, cfg.rope_theta)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+        k, v = kv_override
+        # cross-attention: no rope, not causal
+    out = chunked_attention(q, k, v, causal=causal, window=w, q_chunk=cfg.q_chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+
+
+def project_kv(p: dict, x: Array, positions: Array, cfg) -> tuple[Array, Array]:
+    """K/V projections (cache building / cross-attention memory)."""
+    _, k, v = qkv_project(p, x, cfg)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: Array, cfg, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    scale = d ** -0.5
+    down_scale = f ** -0.5 / np.sqrt(2 * cfg.n_layers)
+    return {
+        "w_gate": normal_init(ks[0], (d, f), scale, dtype),
+        "w_up": normal_init(ks[1], (d, f), scale, dtype),
+        "w_down": normal_init(ks[2], (f, d), down_scale, dtype),
+    }
+
+
+def mlp_block(p: dict, x: Array) -> Array:
+    dtype = x.dtype
+    gate = jax.nn.silu(x @ p["w_gate"].astype(dtype))
+    up = x @ p["w_up"].astype(dtype)
+    return (gate * up) @ p["w_down"].astype(dtype)

@@ -1,0 +1,112 @@
+"""Model registry: ModelConfig -> a uniform bundle of pure functions.
+
+Batch conventions:
+  decoder families : {"tokens": (B, S) i32 [, "patches": (B, P, D) f32 (vlm)]}
+  encdec           : {"frames": (B, S_enc, D) f32, "tokens": (B, S) i32}
+  decode step      : token (B,) i32 + cache pytree
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, transformer
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: Any
+    init: Callable[[Array], dict]
+    loss_fn: Callable[..., tuple[Array, dict]]     # (params, batch, mesh) -> loss, metrics
+    forward: Callable[..., Array]
+    prefill: Callable[..., tuple[Array, dict]]      # (params, batch, tp, max_len, mesh)
+    decode_step: Callable[..., tuple[Array, dict]]  # (params, cache, token, mesh)
+    init_cache: Callable[..., dict]                 # (batch, max_len, tp)
+
+
+AUX_WEIGHT = 0.01
+
+
+def _decoder_bundle(cfg) -> ModelBundle:
+    def init(key):
+        return transformer.init_params(key, cfg)
+
+    def _prefix(batch):
+        return batch.get("patches") if cfg.frontend == "patches" else None
+
+    def loss_fn(params, batch, mesh=None):
+        tokens = batch["tokens"]
+        logits, aux = transformer.forward(params, tokens, cfg, mesh,
+                                          prefix_embeddings=_prefix(batch))
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones_like(tokens, jnp.float32)
+        if cfg.frontend == "patches":  # no LM loss on the image prefix
+            p = batch["patches"].shape[1]
+            mask = mask.at[:, :p].set(0.0)
+        ce = transformer.lm_loss(logits[:, :-1], tokens[:, 1:], mask[:, 1:])
+        loss = ce + AUX_WEIGHT * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    def forward(params, batch, mesh=None):
+        logits, _ = transformer.forward(params, batch["tokens"], cfg, mesh,
+                                        prefix_embeddings=_prefix(batch))
+        return logits
+
+    def prefill(params, batch, mesh=None, tp=1, max_len=None):
+        return transformer.prefill(params, batch["tokens"], cfg, mesh, tp=tp,
+                                   max_len=max_len,
+                                   prefix_embeddings=_prefix(batch))
+
+    def decode_step(params, cache, token, mesh=None):
+        return transformer.decode_step(params, cache, token, cfg, mesh)
+
+    def init_cache(batch, max_len, tp=1):
+        return transformer.init_cache(cfg, batch, max_len, tp=tp)
+
+    return ModelBundle(cfg, init, loss_fn, forward, prefill, decode_step,
+                       init_cache)
+
+
+def _encdec_bundle(cfg) -> ModelBundle:
+    def init(key):
+        return encdec.init_params(key, cfg)
+
+    def loss_fn(params, batch, mesh=None):
+        tokens = batch["tokens"]
+        logits, aux = encdec.forward(params, batch["frames"], tokens, cfg)
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones_like(tokens, jnp.float32)
+        ce = transformer.lm_loss(logits[:, :-1], tokens[:, 1:], mask[:, 1:])
+        return ce, {"ce": ce, "aux": aux}
+
+    def forward(params, batch, mesh=None):
+        logits, _ = encdec.forward(params, batch["frames"], batch["tokens"], cfg)
+        return logits
+
+    def prefill(params, batch, mesh=None, tp=1, max_len=None):
+        return encdec.prefill(params, batch["frames"], batch["tokens"], cfg,
+                              tp=tp, max_len=max_len)
+
+    def decode_step(params, cache, token, mesh=None):
+        return encdec.decode_step(params, cache, token, cfg)
+
+    def init_cache(batch, max_len, tp=1):
+        raise NotImplementedError(
+            "encdec caches come from prefill (cross-K/V need encoder states)")
+
+    return ModelBundle(cfg, init, loss_fn, forward, prefill, decode_step,
+                       init_cache)
+
+
+def build(cfg) -> ModelBundle:
+    if cfg.is_encdec:
+        return _encdec_bundle(cfg)
+    return _decoder_bundle(cfg)

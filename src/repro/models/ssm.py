@@ -1,0 +1,168 @@
+"""Mamba-1 selective SSM block — chunked associative scan (train/prefill) and an
+O(1)-state decode step.
+
+TPU adaptation: instead of a fused recurrent kernel (CUDA) or materializing the
+full (B, S, d_inner, N) scan tensor (OOM at 4k+ sequence), we scan over sequence
+chunks of ``cfg.ssm_chunk``; within a chunk an associative scan runs in fp32 over
+(decay, increment) pairs. Live memory is O(B * chunk * d_inner * N) and the chunk
+loop is remat-friendly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import normal_init
+
+Array = jax.Array
+
+
+def init_ssm(key: Array, cfg, dtype) -> dict:
+    d, di, n, r, cw = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank,
+                       cfg.ssm_conv)
+    ks = jax.random.split(key, 6)
+    a_log = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))
+    dt_init = float(np.log(np.expm1(0.01)))
+    return {
+        "in_proj": normal_init(ks[0], (d, 2 * di), d ** -0.5, dtype),
+        "conv_w": normal_init(ks[1], (cw, di), cw ** -0.5, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": normal_init(ks[2], (di, r + 2 * n), di ** -0.5, dtype),
+        "dt_proj": normal_init(ks[3], (r, di), r ** -0.5, dtype),
+        "dt_bias": jnp.full((di,), dt_init, dtype),
+        "a_log": jnp.broadcast_to(a_log, (di, n)).astype(jnp.float32) + 0.0,
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": normal_init(ks[4], (di, d),
+                                di ** -0.5 / np.sqrt(2 * cfg.n_layers), dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv along S. x: (B, S, Di), w: (cw, Di)."""
+    cw = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, cw):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[-1 - i]
+    return out + b
+
+
+def _ssm_inner(dt: Array, a: Array, bmat: Array, cmat: Array, xs: Array,
+               h0: Array, chunk: int, scan_dtype) -> tuple[Array, Array]:
+    """The selective scan, chunked along S.
+
+    dt: (B,S,Di) fp32; a: (Di,N) fp32; bmat/cmat: (B,S,N); xs: (B,S,Di);
+    h0: (B,Di,N) fp32. Returns (y: (B,S,Di) fp32, h_final).
+
+    The 4D (B,Q,Di,N) decay/increment tensors are built INSIDE the chunk body
+    (§Perf: building them at full S materializes n_levels full-sequence copies
+    through the associative scan); the state carry stays fp32, the in-chunk
+    scan runs in ``scan_dtype``.
+    """
+    b, s, di = dt.shape
+    n = a.shape[-1]
+    q = min(chunk, s)
+    n_chunks = -(-s // q)
+    pad = n_chunks * q - s
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+
+    def to_chunks(x):  # (B, S', ...) -> (nc, B, q, ...)
+        return jnp.moveaxis(x.reshape(b, n_chunks, q, *x.shape[2:]), 1, 0)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_step(h, inp):
+        dtc, bc, cc, xc = inp        # (B,q,Di), (B,q,N), (B,q,N), (B,q,Di)
+        decay = jnp.exp(dtc[..., None] * a).astype(scan_dtype)   # (B,q,Di,N)
+        bx = (dtc[..., None] * bc[:, :, None, :].astype(jnp.float32)
+              * xc[..., None].astype(jnp.float32)).astype(scan_dtype)
+        a_cum, inner = jax.lax.associative_scan(combine, (decay, bx), axis=1)
+        h_t = (a_cum.astype(jnp.float32) * h[:, None]
+               + inner.astype(jnp.float32))                      # (B,q,Di,N)
+        y = jnp.einsum("bqdn,bqn->bqd", h_t, cc.astype(jnp.float32))
+        return h_t[:, -1], y
+
+    h_final, ys = jax.lax.scan(
+        chunk_step, h0, (to_chunks(dt), to_chunks(bmat), to_chunks(cmat),
+                         to_chunks(xs)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, n_chunks * q, di)[:, :s]
+    return y, h_final
+
+
+def ssm_block(p: dict, x: Array, cfg, h0: Array | None = None,
+              conv_init: Array | None = None) -> tuple[Array, Array, Array]:
+    """x: (B, S, D) -> (y: (B, S, D), h_final: (B, Di, N), conv_tail).
+
+    ``h0``/``conv_init`` allow stateful chunked prefill; None means zeros.
+    """
+    dtype = x.dtype
+    bsz, s, _ = x.shape
+    di, n, r, cw = cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+
+    xz = x @ p["in_proj"].astype(dtype)
+    xs, z = jnp.split(xz, 2, axis=-1)                # (B, S, Di) each
+    if conv_init is not None:
+        xs_ext = jnp.concatenate([conv_init.astype(dtype), xs], axis=1)
+        xs_conv = _causal_conv(xs_ext, p["conv_w"].astype(dtype),
+                               p["conv_b"].astype(dtype))[:, cw - 1:]
+    else:
+        xs_conv = _causal_conv(xs, p["conv_w"].astype(dtype),
+                               p["conv_b"].astype(dtype))
+    conv_tail = xs[:, -(cw - 1):] if s >= cw - 1 else jnp.pad(
+        xs, ((0, 0), (cw - 1 - s, 0), (0, 0)))
+    xs_conv = jax.nn.silu(xs_conv)
+
+    proj = xs_conv @ p["x_proj"].astype(dtype)       # (B, S, r + 2N)
+    dt_raw, bmat, cmat = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_raw @ p["dt_proj"].astype(dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))          # (B, S, Di) fp32
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))     # (Di, N)
+
+    h0 = jnp.zeros((bsz, di, n), jnp.float32) if h0 is None else h0
+    y, h_final = _ssm_inner(dt, a, bmat, cmat, xs_conv, h0, cfg.ssm_chunk,
+                            jnp.dtype(cfg.ssm_scan_dtype))
+    y = y + xs_conv.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = (y.astype(dtype) * jax.nn.silu(z))
+    return y @ p["out_proj"].astype(dtype), h_final, conv_tail
+
+
+def ssm_decode_step(p: dict, x: Array, h: Array, conv_state: Array,
+                    cfg) -> tuple[Array, Array, Array]:
+    """One token. x: (B, D); h: (B, Di, N) fp32; conv_state: (B, cw-1, Di).
+
+    Returns (y: (B, D), h', conv_state').
+    """
+    dtype = x.dtype
+    n, r = cfg.ssm_state, cfg.dt_rank
+
+    xz = x @ p["in_proj"].astype(dtype)
+    xs, z = jnp.split(xz, 2, axis=-1)                # (B, Di)
+    window = jnp.concatenate([conv_state.astype(dtype), xs[:, None]], axis=1)
+    xc = jnp.einsum("bcd,cd->bd", window, p["conv_w"].astype(dtype)) \
+        + p["conv_b"].astype(dtype)
+    xc = jax.nn.silu(xc)
+    conv_state_new = window[:, 1:].astype(conv_state.dtype)
+
+    proj = xc @ p["x_proj"].astype(dtype)
+    dt_raw, bvec, cvec = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_raw @ p["dt_proj"].astype(dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))          # (B, Di)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt[..., None] * a)               # (B, Di, N)
+    h_new = decay * h + (dt[..., None] * bvec.astype(jnp.float32)[:, None, :]
+                         * xc.astype(jnp.float32)[..., None])
+    y = jnp.einsum("bdn,bn->bd", h_new, cvec.astype(jnp.float32))
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y.astype(dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(dtype), h_new, conv_state_new

@@ -1,0 +1,329 @@
+"""Decoder-only LM assembly: scan-over-layers forward, prefill, and decode for
+every decoder family (dense / moe / ssm / hybrid / vlm).
+
+Layer parameters are stacked along a leading L axis so ``lax.scan`` keeps the
+HLO size independent of depth; each block is optionally wrapped in
+``jax.checkpoint`` (cfg.remat). Caches are dicts of stacked per-layer tensors so
+decode is also a single scan.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (apply_rope, attention_block, decode_attention, init_attention,
+                     init_mlp, mlp_block, normal_init, project_kv, qkv_project,
+                     rmsnorm)
+from .moe import init_moe, moe_block
+from .ssm import init_ssm, ssm_block, ssm_decode_step
+
+Array = jax.Array
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def has_attention(cfg) -> bool:
+    return cfg.family != "ssm"
+
+
+def has_ssm(cfg) -> bool:
+    return cfg.family in ("ssm", "hybrid")
+
+
+def kv_eff_heads(cfg, tp: int) -> int:
+    """Decode-cache KV head count: replicate KV heads up to the TP degree when
+    that enables clean sharding (DESIGN.md §5)."""
+    kv, h = cfg.n_kv_heads, cfg.n_heads
+    if kv % tp == 0:
+        return kv
+    if tp % kv == 0 and h % tp == 0:
+        return tp
+    return kv
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_layer(key: Array, cfg) -> dict:
+    dt = _pdtype(cfg)
+    ks = jax.random.split(key, 6)
+    p: dict = {"ln1": jnp.ones((cfg.d_model,), dt)}
+    if has_attention(cfg):
+        p["attn"] = init_attention(ks[0], cfg, dt)
+    if has_ssm(cfg):
+        p["ssm"] = init_ssm(ks[1], cfg, dt)
+    if cfg.family == "moe":
+        p["moe"] = init_moe(ks[2], cfg, dt)
+        p["ln2"] = jnp.ones((cfg.d_model,), dt)
+    elif cfg.d_ff > 0:
+        p["mlp"] = init_mlp(ks[3], cfg, dt)
+        p["ln2"] = jnp.ones((cfg.d_model,), dt)
+    return p
+
+
+def init_params(key: Array, cfg) -> dict:
+    dt = _pdtype(cfg)
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    params = {
+        "embed": normal_init(k_embed, (cfg.vocab_size, cfg.d_model), 0.02, dt),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(
+            k_head, (cfg.d_model, cfg.vocab_size), cfg.d_model ** -0.5, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def block_forward(lp: dict, x: Array, positions: Array, cfg, mesh) -> tuple[Array, Array]:
+    """One layer, full-sequence. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    xn = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    delta = jnp.zeros_like(x)
+    if has_attention(cfg):
+        delta = delta + attention_block(lp["attn"], xn, positions, cfg)
+    if has_ssm(cfg):
+        y, _, _ = ssm_block(lp["ssm"], xn, cfg)
+        delta = delta + y
+    x = x + delta
+    if cfg.family == "moe":
+        y, aux = moe_block(lp["moe"], rmsnorm(x, lp["ln2"], cfg.norm_eps), cfg, mesh)
+        x = x + y
+    elif cfg.d_ff > 0:
+        x = x + mlp_block(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.norm_eps))
+    return x, aux
+
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat == "block":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Forward (training) — tokens (B, S) [+ optional prefix embeddings] -> logits
+# ---------------------------------------------------------------------------
+
+def forward(params: dict, tokens: Array, cfg, mesh=None,
+            prefix_embeddings: Array | None = None) -> tuple[Array, Array]:
+    """Returns (logits (B, S, V), aux_loss scalar)."""
+    dt = _dtype(cfg)
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    if prefix_embeddings is not None:  # VLM/multimodal stub: overwrite prefix
+        p = prefix_embeddings.shape[1]
+        x = jnp.concatenate([prefix_embeddings.astype(dt), x[:, p:]], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    body = _maybe_remat(
+        lambda xx, lp: block_forward(lp, xx, positions, cfg, mesh), cfg)
+    x, auxes = jax.lax.scan(lambda xx, lp: body(xx, lp), x, params["layers"])
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(dt)
+    return logits, jnp.sum(auxes)
+
+
+def lm_loss(logits: Array, targets: Array, mask: Array) -> Array:
+    """Next-token CE (caller supplies aligned targets/mask), fp32."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg, max_len: int) -> int:
+    return min(cfg.sliding_window, max_len) if cfg.sliding_window > 0 else max_len
+
+
+def init_cache(cfg, batch: int, max_len: int, *, tp: int = 1) -> dict:
+    """Decode cache pytree (zeros/empty). max_len includes prompt + generation."""
+    dt = _dtype(cfg)
+    l = cfg.n_layers
+    cache: dict = {"t": jnp.zeros((), jnp.int32)}
+    if has_attention(cfg):
+        kve = kv_eff_heads(cfg, tp)
+        c = cache_len(cfg, max_len)
+        cache["k"] = jnp.zeros((l, batch, c, kve, cfg.head_dim), dt)
+        cache["v"] = jnp.zeros((l, batch, c, kve, cfg.head_dim), dt)
+        cache["entry_pos"] = jnp.full((c,), -1, jnp.int32)
+    if has_ssm(cfg):
+        cache["h"] = jnp.zeros((l, batch, cfg.d_inner, cfg.ssm_state), jnp.float32)
+        cache["conv"] = jnp.zeros((l, batch, cfg.ssm_conv - 1, cfg.d_inner), dt)
+    return cache
+
+
+def _repeat_kv_to(k: Array, kve: int) -> Array:
+    """(..., KV, hd) -> (..., KVe, hd) by replication (KVe % KV == 0)."""
+    kv = k.shape[-2]
+    if kv == kve:
+        return k
+    return jnp.repeat(k, kve // kv, axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# Prefill — run the prompt, build a decode-ready cache
+# ---------------------------------------------------------------------------
+
+def prefill(params: dict, tokens: Array, cfg, mesh=None, *, tp: int = 1,
+            max_len: int | None = None,
+            prefix_embeddings: Array | None = None) -> tuple[Array, dict]:
+    """Returns (last-position logits (B, V), cache)."""
+    dt = _dtype(cfg)
+    b, s = tokens.shape
+    max_len = max_len or s
+    c = cache_len(cfg, max_len)
+    kve = kv_eff_heads(cfg, tp) if has_attention(cfg) else 0
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    if prefix_embeddings is not None:
+        p = prefix_embeddings.shape[1]
+        x = jnp.concatenate([prefix_embeddings.astype(dt), x[:, p:]], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(xx, lp):
+        entries = {}
+        xn = rmsnorm(xx, lp["ln1"], cfg.norm_eps)
+        delta = jnp.zeros_like(xx)
+        if has_attention(cfg):
+            delta = delta + attention_block(lp["attn"], xn, positions, cfg)
+            k, v = project_kv(lp["attn"], xn, positions, cfg)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            k, v = _repeat_kv_to(k, kve), _repeat_kv_to(v, kve)
+            if s >= c:  # keep the last C entries at ring slots pos % C
+                slots = (s - c + jnp.arange(c)) % c
+                entries["k"] = jnp.zeros((b, c, kve, cfg.head_dim), dt
+                                         ).at[:, slots].set(k[:, -c:])
+                entries["v"] = jnp.zeros((b, c, kve, cfg.head_dim), dt
+                                         ).at[:, slots].set(v[:, -c:])
+            else:
+                pad = ((0, 0), (0, c - s), (0, 0), (0, 0))
+                entries["k"] = jnp.pad(k, pad)
+                entries["v"] = jnp.pad(v, pad)
+        if has_ssm(cfg):
+            y, h_fin, conv_tail = ssm_block(lp["ssm"], xn, cfg)
+            delta = delta + y
+            entries["h"] = h_fin
+            entries["conv"] = conv_tail
+        xx = xx + delta
+        if cfg.family == "moe":
+            y, _ = moe_block(lp["moe"], rmsnorm(xx, lp["ln2"], cfg.norm_eps),
+                             cfg, mesh)
+            xx = xx + y
+        elif cfg.d_ff > 0:
+            xx = xx + mlp_block(lp["mlp"], rmsnorm(xx, lp["ln2"], cfg.norm_eps))
+        return xx, entries
+
+    body = _maybe_remat(body, cfg)
+    x, layer_entries = jax.lax.scan(body, x, params["layers"])
+
+    x_last = rmsnorm(x[:, -1], params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x_last @ head.astype(dt)
+
+    cache = dict(layer_entries)
+    cache["t"] = jnp.asarray(s, jnp.int32)
+    if has_attention(cfg):
+        pos0 = jnp.arange(c)
+        if s >= c:
+            slots = (s - c + jnp.arange(c)) % c
+            entry_pos = jnp.zeros((c,), jnp.int32).at[slots].set(
+                jnp.arange(s - c, s))
+        else:
+            entry_pos = jnp.where(pos0 < s, pos0, -1).astype(jnp.int32)
+        cache["entry_pos"] = entry_pos
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode — one token against the cache
+# ---------------------------------------------------------------------------
+
+def decode_step(params: dict, cache: dict, token: Array, cfg,
+                mesh=None) -> tuple[Array, dict]:
+    """token: (B,) int32. Returns (logits (B, V), updated cache)."""
+    dt = _dtype(cfg)
+    b = token.shape[0]
+    t = cache["t"]
+    x = jnp.take(params["embed"], token, axis=0).astype(dt)  # (B, D)
+
+    attn = has_attention(cfg)
+    ssm = has_ssm(cfg)
+    if attn:
+        c = cache["k"].shape[2]
+        slot = t % c
+        entry_pos = cache["entry_pos"].at[slot].set(t)
+    pos_b = jnp.broadcast_to(t, (b, 1))
+
+    xs: dict = {"lp": params["layers"]}
+    if attn:
+        xs["k"] = cache["k"]
+        xs["v"] = cache["v"]
+    if ssm:
+        xs["h"] = cache["h"]
+        xs["conv"] = cache["conv"]
+
+    def body(xx, layer):
+        lp = layer["lp"]
+        entries = {}
+        xn = rmsnorm(xx, lp["ln1"], cfg.norm_eps)
+        delta = jnp.zeros_like(xx)
+        if attn:
+            ap = lp["attn"]
+            q, k_new, v_new = qkv_project(ap, xn, cfg)
+            q = apply_rope(q[:, None], pos_b, cfg.rope_theta)[:, 0]
+            k_new = apply_rope(k_new[:, None], pos_b, cfg.rope_theta)[:, 0]
+            kve = layer["k"].shape[-2]
+            k_cache = layer["k"].at[:, slot].set(_repeat_kv_to(k_new, kve))
+            v_cache = layer["v"].at[:, slot].set(_repeat_kv_to(v_new, kve))
+            out = decode_attention(q, k_cache, v_cache, entry_pos, t,
+                                   window=cfg.sliding_window)
+            delta = delta + jnp.einsum("bhk,hkd->bd", out, ap["wo"].astype(dt))
+            entries["k"], entries["v"] = k_cache, v_cache
+        if ssm:
+            y, h_new, conv_new = ssm_decode_step(lp["ssm"], xn, layer["h"],
+                                                 layer["conv"], cfg)
+            delta = delta + y
+            entries["h"], entries["conv"] = h_new, conv_new
+        xx = xx + delta
+        if cfg.family == "moe":
+            y, _ = moe_block(lp["moe"],
+                             rmsnorm(xx, lp["ln2"], cfg.norm_eps)[:, None],
+                             cfg, mesh)
+            xx = xx + y[:, 0]
+        elif cfg.d_ff > 0:
+            xx = xx + mlp_block(lp["mlp"], rmsnorm(xx, lp["ln2"], cfg.norm_eps))
+        return xx, entries
+
+    x, new_entries = jax.lax.scan(body, x, xs)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(dt)
+
+    new_cache = dict(cache)
+    new_cache.update(new_entries)
+    new_cache["t"] = t + 1
+    if attn:
+        new_cache["entry_pos"] = entry_pos
+    return logits, new_cache

@@ -1,0 +1,146 @@
+"""Sharded, atomic, async checkpointing with reshard-on-restore.
+
+Layout:
+    <dir>/step_000123/
+        manifest.json        tree structure, shapes, dtypes, step
+        t_<idx>.npy          one file per leaf (host-gathered)
+        COMMIT               written last; restore ignores dirs without it
+
+Restores place leaves onto whatever shardings the *current* mesh wants
+(elastic restarts: save on one mesh, restore on another). Async saves run on a
+single background thread; the next save joins the previous one.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+from jax.tree_util import tree_flatten_with_path, tree_unflatten
+
+from repro.distributed.sharding import _path_str
+
+
+def _step_dir(base: str, step: int) -> str:
+    return os.path.join(base, f"step_{step:08d}")
+
+
+def save_checkpoint(base: str, step: int, tree) -> str:
+    """Blocking save. Returns the committed directory."""
+    os.makedirs(base, exist_ok=True)
+    final = _step_dir(base, step)
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves, treedef = tree_flatten_with_path(tree)
+    manifest = {"step": step, "leaves": []}
+    for i, (path, leaf) in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"t_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr, allow_pickle=False)
+        manifest["leaves"].append({
+            "path": _path_str(path), "file": fname,
+            "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "COMMIT"), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def committed_steps(base: str) -> list[int]:
+    if not os.path.isdir(base):
+        return []
+    steps = []
+    for name in os.listdir(base):
+        if name.startswith("step_") and not name.endswith(".tmp") and \
+                os.path.exists(os.path.join(base, name, "COMMIT")):
+            steps.append(int(name.split("_")[1]))
+    return sorted(steps)
+
+
+def latest_step(base: str) -> int | None:
+    steps = committed_steps(base)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(base: str, target_tree, *, step: int | None = None,
+                       shardings=None):
+    """Restore into the structure of ``target_tree``; ``shardings`` (same
+    structure, NamedSharding leaves) re-shards onto the current mesh."""
+    if step is None:
+        step = latest_step(base)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {base}")
+    d = _step_dir(base, step)
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+
+    leaves, treedef = tree_flatten_with_path(target_tree)
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(leaves))
+    if shardings is not None and len(shard_leaves) != len(leaves):
+        raise ValueError("shardings tree does not match target tree")
+
+    out = []
+    for (path, ref), sh in zip(leaves, shard_leaves):
+        entry = by_path[_path_str(path)]
+        arr = np.load(os.path.join(d, entry["file"]), allow_pickle=False)
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch for {_path_str(path)}: "
+                             f"{arr.shape} vs {ref.shape}")
+        arr = arr.astype(ref.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None else
+                   jax.device_put(arr))
+    return step, tree_unflatten(treedef, out)
+
+
+def prune_checkpoints(base: str, keep: int) -> None:
+    steps = committed_steps(base)
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(_step_dir(base, s), ignore_errors=True)
+
+
+class CheckpointManager:
+    """Periodic async checkpointing with retention."""
+
+    def __init__(self, base: str, *, every: int, keep: int = 3,
+                 async_save: bool = True):
+        self.base = base
+        self.every = max(every, 1)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def maybe_save(self, step: int, tree, *, force: bool = False) -> bool:
+        if not force and step % self.every != 0:
+            return False
+        self.wait()
+        # Gather on the caller thread (device state is in flight otherwise).
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            save_checkpoint(self.base, step, host_tree)
+            prune_checkpoints(self.base, self.keep)
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+        return True

@@ -1,0 +1,75 @@
+"""AdamW with warmup-cosine schedule and global-norm clipping — pure JAX.
+
+The optimizer state is a pytree mirroring params (mu, nu in fp32), so ZeRO-1 is
+purely a sharding decision (distributed/sharding.zero1_specs) — the math here is
+layout-agnostic.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class OptState(NamedTuple):
+    step: Array          # () int32
+    mu: dict             # first moment,  fp32, mirrors params
+    nu: dict             # second moment, fp32, mirrors params
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(jnp.zeros((), jnp.int32), zeros,
+                    jax.tree.map(jnp.copy, zeros))
+
+
+def lr_schedule(step: Array, tc) -> Array:
+    """Linear warmup -> cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    progress = jnp.clip((step - tc.warmup_steps)
+                        / jnp.maximum(tc.total_steps - tc.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    return tc.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float) -> tuple[dict, Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(params, grads, state: OptState, tc) -> tuple[dict, OptState, dict]:
+    """One AdamW step. Returns (new_params, new_state, stats)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if tc.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = lr_schedule(step, tc)
+    b1, b2 = tc.beta1, tc.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + tc.eps) + tc.weight_decay \
+            * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, OptState(step, mu, nu), {"lr": lr, "grad_norm": gnorm}

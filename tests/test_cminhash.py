@@ -1,0 +1,147 @@
+"""Core algorithm correctness: cross-path equality, conventions, estimators."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cminhash, estimators, minhash
+from repro.core.permutations import (apply_permutation_dense,
+                                     circulant_shift,
+                                     invert_permutation,
+                                     make_two_permutations,
+                                     random_permutation)
+from repro.kernels import ref
+
+
+def test_circulant_shift_paper_example():
+    """pi = [3,1,2,4] -> pi_{->1} = [4,3,1,2], pi_{->2} = [2,4,3,1] (Sec. 2)."""
+    pi = jnp.asarray([3, 1, 2, 4])
+    assert list(circulant_shift(pi, 1)) == [4, 3, 1, 2]
+    assert list(circulant_shift(pi, 2)) == [2, 4, 3, 1]
+
+
+def test_permutation_application_convention():
+    sigma = jnp.asarray([2, 0, 1], jnp.int32)   # position i -> sigma[i]
+    v = jnp.asarray([[1, 0, 1]], jnp.int8)
+    out = apply_permutation_dense(v, sigma)
+    # v[0] -> pos 2, v[2] -> pos 1
+    assert list(np.asarray(out)[0]) == [0, 1, 1]
+
+
+def test_invert_permutation():
+    key = jax.random.PRNGKey(0)
+    p = random_permutation(key, 50)
+    q = invert_permutation(p)
+    assert (np.asarray(p)[np.asarray(q)] == np.arange(50)).all()
+
+
+@pytest.mark.parametrize("B,D,K,dens", [(4, 64, 16, 0.3), (3, 100, 100, 0.1),
+                                        (8, 777, 130, 0.5), (1, 300, 7, 0.05)])
+def test_sparse_equals_dense_with_sigma(B, D, K, dens):
+    rng = np.random.default_rng(0)
+    v = (rng.random((B, D)) < dens).astype(np.int8)
+    sigma, pi = make_two_permutations(jax.random.PRNGKey(1), D)
+    nnz = max(int(v.sum(1).max()), 1)
+    idx = np.full((B, nnz), -1, np.int32)
+    for i in range(B):
+        nz = np.where(v[i])[0]
+        idx[i, :len(nz)] = nz
+    s_sparse = cminhash.cminhash_sparse(jnp.asarray(idx), pi, K, sigma)
+    v_perm = apply_permutation_dense(jnp.asarray(v), sigma)
+    s_dense = cminhash.cminhash_dense(jnp.asarray(v), pi, K, sigma)
+    s_ref = ref.cminhash_dense_ref(v_perm, pi, K)
+    assert np.array_equal(np.asarray(s_sparse), np.asarray(s_ref))
+    assert np.array_equal(np.asarray(s_dense), np.asarray(s_ref))
+
+
+def test_k_greater_than_d_rejected():
+    pi = jnp.arange(8, dtype=jnp.int32)
+    with pytest.raises(ValueError):
+        cminhash.cminhash_dense(jnp.ones((1, 8), jnp.int8), pi, 9)
+
+
+def test_empty_vector_sentinel():
+    pi = jnp.arange(16, dtype=jnp.int32)
+    v = jnp.zeros((1, 16), jnp.int8)
+    sig = cminhash.cminhash_dense(v, pi, 4)
+    assert (np.asarray(sig) == np.iinfo(np.int32).max).all()
+
+
+def test_classical_minhash_dense_sparse_agree():
+    rng = np.random.default_rng(3)
+    B, D, K = 5, 120, 32
+    v = (rng.random((B, D)) < 0.2).astype(np.int8)
+    perms = minhash.make_k_permutations(jax.random.PRNGKey(2), D, K)
+    idx = np.full((B, D), -1, np.int32)
+    for i in range(B):
+        nz = np.where(v[i])[0]
+        idx[i, :len(nz)] = nz
+    s_d = minhash.minhash_dense(jnp.asarray(v), perms)
+    s_s = minhash.minhash_sparse(jnp.asarray(idx), perms)
+    assert np.array_equal(np.asarray(s_d), np.asarray(s_s))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(16, 64), st.data())
+def test_unbiasedness_property(d, data):
+    """E[J_hat] = J over random permutations (hypothesis-driven (D,f,a))."""
+    f = data.draw(st.integers(2, d))
+    a = data.draw(st.integers(1, f - 1))
+    k = data.draw(st.integers(1, d))
+    rng = np.random.default_rng(d * 1000 + f * 10 + a)
+    v = np.zeros(d, np.int8)
+    w = np.zeros(d, np.int8)
+    pos = rng.permutation(d)
+    v[pos[:a]] = w[pos[:a]] = 1
+    extra = pos[a:f]
+    v[extra[: (f - a) // 2]] = 1
+    w[extra[(f - a) // 2:]] = 1
+    n_rep = 600
+    ests = []
+    for r in range(n_rep):
+        key = jax.random.PRNGKey(r)
+        sigma, pi = make_two_permutations(key, d)
+        sv = cminhash.cminhash_dense(jnp.asarray(v[None]), pi, k, sigma)
+        sw = cminhash.cminhash_dense(jnp.asarray(w[None]), pi, k, sigma)
+        ests.append(float((np.asarray(sv) == np.asarray(sw)).mean()))
+    j = a / f
+    se = np.std(ests) / np.sqrt(n_rep) + 1e-9
+    assert abs(np.mean(ests) - j) < max(5 * se, 0.02), (np.mean(ests), j)
+
+
+def test_estimator_accuracy_beats_minhash_on_structured_data():
+    """End-to-end MSE: C-MinHash-(sigma,pi) <= MinHash on the same pairs."""
+    rng = np.random.default_rng(0)
+    D, K, n_rep = 128, 64, 400
+    from repro.core import theory
+    x = theory.structured_location_vector(D, 32, 16)
+    v = np.zeros(D, np.int8)
+    w = np.zeros(D, np.int8)
+    v[(x == 0)] = w[(x == 0)] = 1
+    xs = np.where(x == 1)[0]
+    v[xs[::2]] = 1
+    w[xs[1::2]] = 1
+    j = 0.5
+    err_c, err_m = [], []
+    for r in range(n_rep):
+        key = jax.random.PRNGKey(r)
+        sigma, pi = make_two_permutations(key, D)
+        sv = cminhash.cminhash_dense(jnp.asarray(v[None]), pi, K, sigma)
+        sw = cminhash.cminhash_dense(jnp.asarray(w[None]), pi, K, sigma)
+        err_c.append((float((np.asarray(sv) == np.asarray(sw)).mean()) - j) ** 2)
+        perms = minhash.make_k_permutations(key, D, K)
+        mv = minhash.minhash_dense(jnp.asarray(v[None]), perms)
+        mw = minhash.minhash_dense(jnp.asarray(w[None]), perms)
+        err_m.append((float((np.asarray(mv) == np.asarray(mw)).mean()) - j) ** 2)
+    assert np.mean(err_c) < np.mean(err_m) * 1.02, (np.mean(err_c),
+                                                    np.mean(err_m))
+
+
+def test_true_jaccard_helpers():
+    v = jnp.asarray([[1, 1, 0, 0]], jnp.int8)
+    w = jnp.asarray([[1, 0, 1, 0]], jnp.int8)
+    assert float(estimators.true_jaccard_dense(v, w)[0]) == pytest.approx(1 / 3)
+    assert estimators.true_jaccard_sparse(np.asarray([0, 1, -1]),
+                                          np.asarray([0, 2, -1])) == 1 / 3

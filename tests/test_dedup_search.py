@@ -1,0 +1,143 @@
+"""Data pipeline (shingles, dedup) and the similarity-search service."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lsh import UnionFind, band_hashes, candidate_pairs, \
+    candidate_probability
+from repro.core.bbit import bbit_collision_fraction, bbit_features, \
+    lowest_b_bits
+from repro.data.dedup import DedupConfig, dedup_corpus, dedup_metrics
+from repro.data.shingle import batch_shingles, densify, shingle_indices
+from repro.data.synthetic import corpus_with_duplicates
+from repro.serve.search import SearchConfig, SimilaritySearchService
+
+import jax.numpy as jnp
+
+
+def test_shingles_deterministic_and_bounded():
+    doc = np.arange(50, dtype=np.int32)
+    a = shingle_indices(doc, n=3, d=1024)
+    b = shingle_indices(doc, n=3, d=1024)
+    assert np.array_equal(a, b)
+    assert (a >= 0).all() and (a < 1024).all()
+    assert len(np.unique(a)) == len(a)
+
+
+def test_identical_docs_have_identical_shingles():
+    doc = np.arange(30, dtype=np.int32)
+    idx = batch_shingles([doc, doc.copy()], n=3, d=4096)
+    assert np.array_equal(idx[0], idx[1])
+
+
+def test_densify_matches_indices():
+    idx = np.asarray([[3, 7, -1], [0, -1, -1]], np.int32)
+    v = densify(idx, 10)
+    assert v[0, 3] == 1 and v[0, 7] == 1 and v[0].sum() == 2
+    assert v[1, 0] == 1 and v[1].sum() == 1
+
+
+def test_dedup_end_to_end_precision_recall():
+    docs, labels = corpus_with_duplicates(
+        60, vocab=5000, doc_len=128, dup_fraction=0.4, seed=3)
+    res = dedup_corpus(docs, DedupConfig(d=1 << 12, k=128, n_bands=32,
+                                         rows_per_band=4, threshold=0.5))
+    m = dedup_metrics(res, labels)
+    assert m["precision"] > 0.95, m
+    assert m["recall"] > 0.9, m
+    assert m["kept"] < 60
+
+
+def test_dedup_without_planted_dups_only_merges_truly_similar():
+    """With no planted duplicates, any merge must be justified by genuinely
+    high true Jaccard (Zipf-headed docs can legitimately overlap)."""
+    docs, labels = corpus_with_duplicates(
+        30, vocab=5000, doc_len=128, dup_fraction=0.0, seed=4)
+    cfg = DedupConfig(d=1 << 12, k=128, n_bands=32, rows_per_band=4,
+                      threshold=0.5)
+    res = dedup_corpus(docs, cfg)
+    assert len(res.keep) >= 27   # no mass false merging
+    from collections import defaultdict
+    clusters = defaultdict(list)
+    for i, c in enumerate(res.cluster_of):
+        clusters[c].append(i)
+    for members in clusters.values():
+        for i in members:
+            for j in members:
+                if i < j:
+                    sa = set(shingle_indices(docs[i], n=3, d=cfg.d).tolist())
+                    sb = set(shingle_indices(docs[j], n=3, d=cfg.d).tolist())
+                    true_j = len(sa & sb) / len(sa | sb)
+                    # estimator noise at K=128 is ~1/sqrt(K) ~ 0.09
+                    assert true_j > cfg.threshold - 0.15, (i, j, true_j)
+
+
+def test_lsh_s_curve_monotone():
+    ps = [candidate_probability(j, 32, 4) for j in (0.1, 0.3, 0.5, 0.7, 0.9)]
+    assert all(a < b for a, b in zip(ps, ps[1:]))
+    assert ps[0] < 0.01 or ps[0] < ps[-1]
+
+
+def test_band_hashes_group_equal_rows():
+    sig = np.asarray([[1, 2, 3, 4], [1, 2, 9, 9], [1, 2, 3, 4]], np.int32)
+    h = band_hashes(sig, n_bands=2, rows_per_band=2)
+    assert h[0, 0] == h[1, 0] == h[2, 0]     # shared first band
+    assert h[0, 1] == h[2, 1] != h[1, 1]
+    pairs = candidate_pairs(h)
+    assert (0, 1) in pairs and (0, 2) in pairs
+
+
+def test_union_find_clusters():
+    uf = UnionFind(5)
+    uf.union(0, 1)
+    uf.union(3, 4)
+    clusters = uf.clusters()
+    assert sorted(map(sorted, clusters.values())) == [[0, 1], [2], [3, 4]]
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 8))
+def test_bbit_properties(b):
+    rng = np.random.default_rng(b)
+    sig = jnp.asarray(rng.integers(0, 1 << 20, (4, 32)), jnp.int32)
+    low = lowest_b_bits(sig, b)
+    assert int(jnp.max(low)) < (1 << b)
+    feats = bbit_features(sig, b)
+    assert feats.shape == (4, 32 * (1 << b))
+    assert np.allclose(np.asarray(feats).sum(axis=1), 32)  # one-hot per hash
+    # identical signatures collide at fraction 1
+    assert float(bbit_collision_fraction(sig, sig, b)[0]) == 1.0
+
+
+def test_search_service_self_retrieval_and_ranking():
+    docs, _ = corpus_with_duplicates(40, vocab=3000, doc_len=96,
+                                     dup_fraction=0.3, seed=5)
+    idx = batch_shingles(docs, n=3, d=1 << 12)
+    svc = SimilaritySearchService(SearchConfig(d=1 << 12, k=128, n_bands=32,
+                                               rows_per_band=4))
+    svc.add_sparse(idx)
+    assert svc.size == 40
+    ids, scores = svc.query_sparse(idx[:8], top_k=5)
+    assert (ids[:, 0] == np.arange(8)).all()       # self is top hit
+    assert (scores[:, 0] >= scores[:, 1]).all()    # ranked
+
+
+def test_search_service_finds_near_duplicates():
+    docs, labels = corpus_with_duplicates(40, vocab=3000, doc_len=96,
+                                          dup_fraction=0.5, cluster_size=2,
+                                          seed=6)
+    idx = batch_shingles(docs, n=3, d=1 << 12)
+    svc = SimilaritySearchService(SearchConfig(d=1 << 12, k=128, n_bands=32,
+                                               rows_per_band=4))
+    svc.add_sparse(idx)
+    hits = 0
+    total = 0
+    for i in range(40):
+        if labels[i] < 0:
+            continue
+        twins = [j for j in range(40) if labels[j] == labels[i] and j != i]
+        ids, _ = svc.query_sparse(idx[i: i + 1], top_k=3)
+        total += 1
+        hits += any(t in ids[0] for t in twins)
+    assert hits / total > 0.9, (hits, total)

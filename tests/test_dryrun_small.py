@@ -1,0 +1,51 @@
+"""Integration: the real dry-run driver on real (full-size) configs.
+
+Runs launch/dryrun.py in a subprocess (it must own the 512-device XLA flag)
+for a representative subset of cells on both meshes and checks the JSON
+artifacts. The full 80-cell sweep lives in EXPERIMENTS.md; this keeps CI honest.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+CELLS = [
+    ("llama3_2_1b", "decode_32k", "single"),
+    ("hymba_1_5b", "long_500k", "single"),
+    ("qwen3_moe_30b_a3b", "train_4k", "multi"),    # MoE shard_map, 512 chips
+    ("seamless_m4t_medium", "decode_32k", "multi"),
+]
+
+
+@pytest.mark.parametrize("arch,shape,mesh", CELLS)
+def test_dryrun_cell_compiles(arch, shape, mesh, tmp_path):
+    out = tmp_path / "dryrun"
+    env = dict(os.environ, PYTHONPATH="src")
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", mesh, "--out", str(out)],
+        capture_output=True, text=True, env=env, cwd=".", timeout=900)
+    assert p.returncode == 0, p.stdout + p.stderr
+    mesh_name = "single_pod" if mesh == "single" else "multi_pod"
+    rec = json.loads((out / f"{mesh_name}__{arch}__{shape}.json").read_text())
+    assert rec["status"] == "ok", rec.get("error")
+    assert rec["n_chips"] == (256 if mesh == "single" else 512)
+    assert rec["hlo_cost"]["flops"] > 0
+    assert rec["memory"]["argument_bytes"] > 0
+    if shape == "train_4k":
+        assert rec["hlo_cost"]["collective_bytes"] > 0  # DP+EP collectives
+
+
+def test_long_500k_skip_rule():
+    from repro.configs import get_config
+    from repro.configs.base import shape_by_name
+    from repro.launch.specs import runnable
+    long = shape_by_name("long_500k")
+    ok, _ = runnable(get_config("mistral_nemo_12b"), long)
+    assert not ok
+    for arch in ("falcon_mamba_7b", "hymba_1_5b", "h2o_danube3_4b"):
+        ok, _ = runnable(get_config(arch), long)
+        assert ok, arch

@@ -1,0 +1,150 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret=True)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.permutations import make_two_permutations
+from repro.kernels import ops, ref
+from repro.kernels.cminhash_kernel import cminhash_pallas
+from repro.kernels.collision_kernel import collision_count_pallas
+
+
+@pytest.mark.parametrize("B,D,K", [
+    (1, 64, 1), (2, 64, 64), (4, 100, 37), (8, 256, 256), (3, 777, 300),
+    (5, 1024, 1024), (2, 2048, 500),
+])
+@pytest.mark.parametrize("dens", [0.02, 0.3, 0.9])
+def test_cminhash_kernel_matches_ref(B, D, K, dens):
+    rng = np.random.default_rng(B * D + K)
+    v = (rng.random((B, D)) < dens).astype(np.int8)
+    _, pi = make_two_permutations(jax.random.PRNGKey(0), D)
+    got = cminhash_pallas(jnp.asarray(v), pi, K, interpret=True)
+    want = ref.cminhash_dense_ref(jnp.asarray(v), pi, K)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.int32, jnp.bool_])
+def test_cminhash_kernel_dtypes(dtype):
+    rng = np.random.default_rng(1)
+    v = (rng.random((4, 128)) < 0.3)
+    _, pi = make_two_permutations(jax.random.PRNGKey(0), 128)
+    got = cminhash_pallas(jnp.asarray(v).astype(dtype), pi, 32, interpret=True)
+    want = ref.cminhash_dense_ref(jnp.asarray(v.astype(np.int8)), pi, 32)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("block_b,block_d", [(1, 128), (8, 256), (4, 512)])
+def test_cminhash_kernel_block_sizes(block_b, block_d):
+    rng = np.random.default_rng(2)
+    v = (rng.random((6, 700)) < 0.1).astype(np.int8)
+    _, pi = make_two_permutations(jax.random.PRNGKey(3), 700)
+    got = cminhash_pallas(jnp.asarray(v), pi, 200, block_b=block_b,
+                          block_d=block_d, interpret=True)
+    want = ref.cminhash_dense_ref(jnp.asarray(v), pi, 200)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_cminhash_kernel_shift_offset_zero():
+    rng = np.random.default_rng(4)
+    v = (rng.random((2, 96)) < 0.25).astype(np.int8)
+    _, pi = make_two_permutations(jax.random.PRNGKey(5), 96)
+    got = cminhash_pallas(jnp.asarray(v), pi, 96, shift_offset=0,
+                          interpret=True)
+    want = ref.cminhash_dense_ref(jnp.asarray(v), pi, 96, shift_offset=0)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 6), st.integers(16, 400), st.data())
+def test_cminhash_kernel_property(B, D, data):
+    K = data.draw(st.integers(1, D))
+    seed = data.draw(st.integers(0, 2**16))
+    dens = data.draw(st.floats(0.0, 1.0))
+    rng = np.random.default_rng(seed)
+    v = (rng.random((B, D)) < dens).astype(np.int8)
+    _, pi = make_two_permutations(jax.random.PRNGKey(seed), D)
+    got = cminhash_pallas(jnp.asarray(v), pi, K, interpret=True)
+    want = ref.cminhash_dense_ref(jnp.asarray(v), pi, K)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("Q,N,K", [(1, 1, 1), (64, 64, 128), (37, 53, 130),
+                                   (128, 200, 64), (5, 300, 1024)])
+def test_collision_kernel_matches_ref(Q, N, K):
+    rng = np.random.default_rng(Q + N + K)
+    sq = rng.integers(0, 37, (Q, K)).astype(np.int32)
+    sn = rng.integers(0, 37, (N, K)).astype(np.int32)
+    got = collision_count_pallas(jnp.asarray(sq), jnp.asarray(sn),
+                                 interpret=True)
+    want = ref.collision_count_ref(jnp.asarray(sq), jnp.asarray(sn))
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 40), st.integers(1, 200),
+       st.integers(0, 2**16))
+def test_collision_kernel_property(Q, N, K, seed):
+    rng = np.random.default_rng(seed)
+    sq = rng.integers(0, 11, (Q, K)).astype(np.int32)
+    sn = rng.integers(0, 11, (N, K)).astype(np.int32)
+    got = collision_count_pallas(jnp.asarray(sq), jnp.asarray(sn),
+                                 interpret=True)
+    want = ref.collision_count_ref(jnp.asarray(sq), jnp.asarray(sn))
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ops_wrappers_roundtrip():
+    rng = np.random.default_rng(9)
+    B, D, K = 6, 512, 128
+    v = (rng.random((B, D)) < 0.15).astype(np.int8)
+    sigma, pi = make_two_permutations(jax.random.PRNGKey(7), D)
+    s_k = ops.cminhash_signatures(jnp.asarray(v), pi, K, sigma,
+                                  use_kernel=True)
+    s_r = ops.cminhash_signatures(jnp.asarray(v), pi, K, sigma,
+                                  use_kernel=False)
+    assert np.array_equal(np.asarray(s_k), np.asarray(s_r))
+    est = ops.estimated_jaccard_matrix(s_k, s_k)
+    assert np.allclose(np.diag(np.asarray(est)), 1.0)
+
+
+@pytest.mark.parametrize("B,D,K,dens,bd", [
+    (2, 64, 64, 0.3, 64), (4, 256, 256, 0.1, 256), (3, 777, 300, 0.5, 64),
+    (1, 300, 7, 0.05, 256), (2, 96, 96, 0.9, 64),
+])
+def test_packed_kernel_matches_ref(B, D, K, dens, bd):
+    from repro.kernels.cminhash_packed import cminhash_packed_pallas
+    rng = np.random.default_rng(B * D + K)
+    v = (rng.random((B, D)) < dens).astype(np.int8)
+    _, pi = make_two_permutations(jax.random.PRNGKey(0), D)
+    got = cminhash_packed_pallas(jnp.asarray(v), pi, K, block_d=bd,
+                                 interpret=True)
+    want = ref.cminhash_dense_ref(jnp.asarray(v), pi, K)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pack_bits_layout():
+    from repro.kernels.cminhash_packed import pack_bits
+    rng = np.random.default_rng(5)
+    v = (rng.random((2, 70)) < 0.5).astype(np.int8)
+    w = np.asarray(pack_bits(jnp.asarray(v)))
+    for b in range(2):
+        for pos in range(70):
+            assert ((w[b, pos // 32] >> (pos % 32)) & 1) == v[b, pos]
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 4), st.integers(32, 300), st.data())
+def test_packed_kernel_property(B, D, data):
+    from repro.kernels.cminhash_packed import cminhash_packed_pallas
+    K = data.draw(st.integers(1, D))
+    seed = data.draw(st.integers(0, 2**16))
+    rng = np.random.default_rng(seed)
+    v = (rng.random((B, D)) < data.draw(st.floats(0.0, 1.0))).astype(np.int8)
+    _, pi = make_two_permutations(jax.random.PRNGKey(seed), D)
+    got = cminhash_packed_pallas(jnp.asarray(v), pi, K, block_d=64,
+                                 interpret=True)
+    want = ref.cminhash_dense_ref(jnp.asarray(v), pi, K)
+    assert np.array_equal(np.asarray(got), np.asarray(want))

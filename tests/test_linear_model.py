@@ -1,0 +1,40 @@
+"""b-bit hashed-feature logistic regression (the paper's learning application)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import SketchConfig, SketchEngine
+from repro.core.linear_model import (HashedLinearConfig, accuracy,
+                                     fit_logistic, predict_logistic)
+
+
+def _data(rng, n, d, templates, flip=0.02):
+    t0, t1 = templates
+    y = rng.integers(0, 2, n)
+    x = np.where(y[:, None] == 0, t0, t1) ^ (rng.random((n, d)) < flip)
+    return x.astype(np.int8), y.astype(np.int32)
+
+
+def test_classifier_separates_jaccard_clusters():
+    rng = np.random.default_rng(0)
+    d, k = 1024, 128
+    templates = (rng.random(d) < 0.05, rng.random(d) < 0.05)
+    x_tr, y_tr = _data(rng, 256, d, templates)
+    x_te, y_te = _data(rng, 128, d, templates)
+    eng = SketchEngine(SketchConfig(d=d, k=k, seed=3))
+    s_tr = eng.signatures_dense(jnp.asarray(x_tr))
+    s_te = eng.signatures_dense(jnp.asarray(x_te))
+    for b in (1, 4):
+        wb = fit_logistic(s_tr, jnp.asarray(y_tr), HashedLinearConfig(b=b))
+        acc = accuracy(wb, s_te, jnp.asarray(y_te), b)
+        assert acc > 0.95, (b, acc)
+
+
+def test_predict_probabilities_bounded():
+    rng = np.random.default_rng(1)
+    sigs = jnp.asarray(rng.integers(0, 100, (16, 32)), jnp.int32)
+    y = jnp.asarray(rng.integers(0, 2, 16), jnp.int32)
+    wb = fit_logistic(sigs, y, HashedLinearConfig(b=2, steps=50))
+    p = predict_logistic(wb, sigs, 2)
+    assert float(p.min()) >= 0.0 and float(p.max()) <= 1.0

@@ -1,0 +1,132 @@
+"""Per-architecture smoke tests (reduced configs) + decode/forward consistency.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation) — see tests/test_dryrun_small.py and launch/dryrun.py.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.configs.base import TrainConfig
+from repro.models import build
+from repro.train.optimizer import init_opt_state
+from repro.train.train_loop import make_train_step
+
+B, S = 2, 64
+
+
+def _batch(cfg, rng, b=B, s=S):
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size_real, (b, s)), jnp.int32)}
+    if cfg.frontend == "patches":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(b, s // 8, cfg.d_model)), jnp.float32)
+    if cfg.frontend == "frames":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, s, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """One forward + one train step on CPU: shapes right, no NaNs."""
+    cfg = reduced(get_config(arch))
+    bundle = build(cfg)
+    rng = np.random.default_rng(0)
+    params = bundle.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, rng)
+
+    logits = bundle.forward(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    tc = TrainConfig(total_steps=2, warmup_steps=1)
+    step = make_train_step(bundle, tc)
+    params2, opt2, metrics = jax.jit(step)(params, init_opt_state(params),
+                                           batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         params, params2)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_prefill_decode_shapes(arch):
+    cfg = reduced(get_config(arch))
+    bundle = build(cfg)
+    rng = np.random.default_rng(1)
+    params = bundle.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, rng)
+    logits, cache = bundle.prefill(params, batch, max_len=S + 4)
+    assert logits.shape == (B, cfg.vocab_size)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, cache = bundle.decode_step(params, cache, tok)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+    assert int(cache["t"]) == S + 1
+
+
+@pytest.mark.parametrize("arch,extra", [
+    ("llama3_2_1b", {}),
+    ("h2o_danube3_4b", {"sliding_window": 16}),      # ring buffer exercised
+    ("falcon_mamba_7b", {}),
+    ("hymba_1_5b", {"sliding_window": 16}),
+    ("qwen3_moe_30b_a3b", {"capacity_factor": 64.0}),  # no token drops
+    ("seamless_m4t_medium", {}),
+])
+def test_decode_matches_forward_fp32(arch, extra):
+    """Teacher-forced decode must reproduce the training forward exactly
+    (fp32, no capacity drops): validates caches, rings, SSM state carry."""
+    cfg = dataclasses.replace(reduced(get_config(arch)), dtype="float32",
+                              **extra)
+    bundle = build(cfg)
+    rng = np.random.default_rng(2)
+    s, s0 = 40, 25
+    params = bundle.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, rng, b=2, s=s)
+    full = np.asarray(bundle.forward(params, batch), np.float32)
+
+    pbatch = dict(batch)
+    pbatch["tokens"] = batch["tokens"][:, :s0]
+    if "patches" in pbatch:
+        pbatch["patches"] = pbatch["patches"][:, : s0 // 8]
+        full = None  # patch prefix differs between lengths; skip strict check
+    logits, cache = bundle.prefill(params, pbatch, max_len=s)
+    if full is None:
+        return
+    errs = [np.abs(np.asarray(logits, np.float32) - full[:, s0 - 1]).max()]
+    for t in range(s0, s):
+        logits, cache = bundle.decode_step(params, cache,
+                                           batch["tokens"][:, t])
+        errs.append(np.abs(np.asarray(logits, np.float32) - full[:, t]).max())
+    assert max(errs) < 1e-4, max(errs)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With tight capacity, outputs differ but stay finite (GShard drops)."""
+    cfg = dataclasses.replace(reduced(get_config("qwen3_moe_30b_a3b")),
+                              capacity_factor=1.0)
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    batch = _batch(cfg, rng)
+    loss, metrics = bundle.loss_fn(params, batch)
+    assert np.isfinite(float(loss))
+    assert float(metrics["aux"]) > 0
+
+
+def test_param_count_analytic_matches_actual():
+    for arch in ARCH_IDS:
+        cfg = reduced(get_config(arch))
+        bundle = build(cfg)
+        params = bundle.init(jax.random.PRNGKey(0))
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        assert actual == cfg.param_count(), \
+            f"{arch}: analytic {cfg.param_count()} vs actual {actual}"

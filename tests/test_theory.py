@@ -1,0 +1,139 @@
+"""Validate the paper's theory module against direct simulation of the
+algorithms — the repo-internal version of the paper's Section 4.1 sanity check."""
+
+import numpy as np
+import pytest
+
+from repro.core import theory
+
+
+def _split_pair(x):
+    """Location vector -> a concrete (v, w) pair realizing it."""
+    xs = np.where(x == theory.X)[0]
+    v = (x == theory.O).copy()
+    w = (x == theory.O).copy()
+    v[xs[::2]] = True
+    w[xs[1::2]] = True
+    return v, w
+
+
+def _empirical(x, K, n_rep, seed, use_sigma):
+    """Vectorized Monte-Carlo of Algorithms 2/3 on a fixed location vector."""
+    D = len(x)
+    rng = np.random.default_rng(seed)
+    v, w = _split_pair(x)
+    ests = np.empty(n_rep)
+    B = 20000
+    for off in range(0, n_rep, B):
+        n = min(B, n_rep - off)
+        pis = np.argsort(rng.random((n, D)), axis=1)
+        if use_sigma:
+            # apply a random sigma to each replicate
+            sig = np.argsort(rng.random((n, D)), axis=1)
+            vp = np.zeros((n, D), bool)
+            wp = np.zeros((n, D), bool)
+            rows = np.arange(n)[:, None]
+            vp[rows, sig[:, v]] = True
+            wp[rows, sig[:, w]] = True
+        else:
+            vp = np.broadcast_to(v, (n, D))
+            wp = np.broadcast_to(w, (n, D))
+        coll = np.zeros(n)
+        for k in range(1, K + 1):
+            mv = np.roll(vp, -k, axis=1)
+            mw = np.roll(wp, -k, axis=1)
+            hv = np.where(mv, pis, 1 << 30).min(axis=1)
+            hw = np.where(mw, pis, 1 << 30).min(axis=1)
+            coll += hv == hw
+        ests[off:off + n] = coll / K
+    return ests
+
+
+@pytest.mark.parametrize("D,f,a", [(16, 8, 4), (24, 12, 3), (32, 20, 10),
+                                   (40, 10, 5)])
+def test_etilde_exact_matches_mc(D, f, a):
+    ex = theory.etilde_exact(D, f, a)
+    mc = theory.etilde_mc(D, f, a, n_samples=300_000, seed=1)
+    assert abs(ex - mc) < 5e-4, (ex, mc)
+
+
+@pytest.mark.parametrize("D,f,a,K", [(32, 16, 8, 16), (24, 12, 6, 12)])
+def test_var_sigma_pi_matches_simulation(D, f, a, K):
+    x = theory.structured_location_vector(D, f, a)
+    ests = _empirical(x, K, 150_000, seed=0, use_sigma=True)
+    emp_mean, emp_var = ests.mean(), ests.var()
+    assert abs(emp_mean - a / f) < 5e-3          # unbiasedness (Thm 3.1)
+    th = theory.var_sigma_pi(D, f, a, K, method="exact")
+    assert abs(emp_var - th) / th < 0.03, (emp_var, th)
+
+
+@pytest.mark.parametrize("D,f,a,K", [(24, 12, 6, 12), (32, 16, 4, 24)])
+def test_var_0pi_matches_simulation(D, f, a, K):
+    x = theory.structured_location_vector(D, f, a)
+    ests = _empirical(x, K, 150_000, seed=2, use_sigma=False)
+    th = theory.var_0pi(x, K)
+    assert abs(ests.mean() - a / f) < 5e-3       # unbiased regardless of sigma
+    assert abs(ests.var() - th) / th < 0.03, (ests.var(), th)
+
+
+def test_uniform_superiority_thm_3_4():
+    """Var_{sigma,pi} < Var_MH on a grid (Theorem 3.4)."""
+    K = 16
+    for D in (20, 32, 44):
+        for f in (6, 12, 18):
+            for a in range(1, f):
+                vs = theory.var_sigma_pi(D, f, a, K, method="exact")
+                vm = theory.var_minhash(a / f, K)
+                assert vs < vm, (D, f, a, vs, vm)
+
+
+def test_symmetry_prop_3_2():
+    """(D,f,a) and (D,f,f-a) give the same Var_{sigma,pi}."""
+    K = 20
+    for D, f in [(30, 14), (40, 21)]:
+        for a in range(1, f // 2 + 1):
+            v1 = theory.var_sigma_pi(D, f, a, K, method="exact")
+            v2 = theory.var_sigma_pi(D, f, f - a, K, method="exact")
+            assert abs(v1 - v2) < 1e-12, (D, f, a)
+
+
+def test_consistent_improvement_prop_3_5():
+    """The ratio Var_MH / Var_{sigma,pi} is constant in a (fixed D, f, K)."""
+    D, f, K = 36, 15, 24
+    ratios = [theory.variance_ratio(D, f, a, K, method="exact")
+              for a in range(1, f)]
+    assert max(ratios) - min(ratios) < 1e-9 * max(ratios), ratios
+    assert all(r > 1 for r in ratios)
+
+
+def test_etilde_monotone_in_D_lemma_3_3():
+    """E~_D strictly increases in D and stays below J^2 (Lemma 3.3 + Thm 3.4)."""
+    f, a = 10, 4
+    j2 = (a / f) ** 2
+    vals = [theory.etilde_exact(D, f, a) for D in range(f, 40)]
+    diffs = np.diff(vals)
+    assert (diffs > 0).all()
+    assert all(v < j2 for v in vals)
+    # converges toward J^2 from below
+    assert j2 - vals[-1] < j2 - vals[0]
+
+
+def test_corner_cases():
+    assert theory.var_sigma_pi(20, 10, 0, 8) == 0.0   # J=0
+    assert theory.var_sigma_pi(20, 10, 10, 8) == 0.0  # J=1
+    # D == f special case: E~ = J * (a-1)/(f-1)
+    assert abs(theory.etilde_exact(10, 10, 4) - 0.4 * 3 / 9) < 1e-12
+
+
+def test_variance_formula_shape_matches_fig2():
+    """Var is symmetric around J=0.5 and below MinHash (Figure 2 behaviour)."""
+    D, f, K = 100, 50, 50
+    js, ratios = [], []
+    for a in (5, 15, 25, 35, 45):
+        v = theory.var_sigma_pi(D, f, a, K, method="mc", n_samples=150_000)
+        vm = theory.var_minhash(a / f, K)
+        js.append(a / f)
+        ratios.append(vm / v)
+        assert v < vm
+    # Prop 3.5: ratio approx constant in a even by MC
+    assert max(ratios) / min(ratios) < 1.1, ratios

@@ -1,0 +1,130 @@
+"""Training substrate: optimizer, microbatching, checkpointing, fault tolerance."""
+
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.base import TrainConfig
+from repro.data.loader import PrefetchIterator, deduped_token_batches
+from repro.data.synthetic import token_batches
+from repro.models import build
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import (adamw_update, init_opt_state, lr_schedule,
+                                   global_norm)
+from repro.train.train_loop import TrainLoop, make_train_step
+
+
+def _tiny():
+    cfg = reduced(get_config("llama3_2_1b"), d_model=64, vocab=256)
+    return cfg, build(cfg)
+
+
+def test_lr_schedule_shape():
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_schedule(jnp.asarray(s), tc)) for s in (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(5e-4)
+    assert lrs[2] == pytest.approx(1e-3)
+    assert lrs[3] < lrs[2]
+    assert lrs[4] == pytest.approx(1e-4, rel=0.01)  # 10% floor
+
+
+def test_adamw_decreases_loss():
+    cfg, bundle = _tiny()
+    tc = TrainConfig(learning_rate=2e-3, warmup_steps=2, total_steps=30,
+                     weight_decay=0.0)
+    params = bundle.init(jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    data = token_batches(cfg.vocab_size_real, 8, 32, seed=0)
+    batch = next(data)  # overfit one batch
+    step = jax.jit(make_train_step(bundle, tc))
+    losses = []
+    for _ in range(30):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
+
+
+def test_grad_clip():
+    cfg, bundle = _tiny()
+    params = bundle.init(jax.random.PRNGKey(0))
+    grads = jax.tree.map(lambda p: jnp.ones_like(p, jnp.float32) * 100, params)
+    tc = TrainConfig(grad_clip=1.0)
+    _, _, stats = adamw_update(params, grads, init_opt_state(params), tc)
+    assert float(stats["grad_norm"]) > 1.0  # pre-clip norm reported
+
+
+def test_microbatch_equals_full_batch():
+    """Gradient accumulation must match the single-batch gradient step."""
+    cfg, bundle = _tiny()
+    cfg32 = dataclasses.replace(cfg, dtype="float32")
+    bundle32 = build(cfg32)
+    params = bundle32.init(jax.random.PRNGKey(0))
+    data = token_batches(cfg.vocab_size_real, 8, 32, seed=1)
+    batch = next(data)
+    tc1 = TrainConfig(microbatches=1, learning_rate=1e-3, warmup_steps=0)
+    tc4 = TrainConfig(microbatches=4, learning_rate=1e-3, warmup_steps=0)
+    p1, _, m1 = jax.jit(make_train_step(bundle32, tc1))(
+        params, init_opt_state(params), batch)
+    p4, _, m4 = jax.jit(make_train_step(bundle32, tc4))(
+        params, init_opt_state(params), batch)
+    diff = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), p1, p4)))
+    assert diff < 2e-5, diff
+
+
+def test_checkpoint_roundtrip_and_retention():
+    cfg, bundle = _tiny()
+    params = bundle.init(jax.random.PRNGKey(0))
+    state = {"params": params, "opt": init_opt_state(params)}
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3):
+            ckpt.save_checkpoint(d, s, state)
+        ckpt.prune_checkpoints(d, keep=2)
+        assert ckpt.committed_steps(d) == [2, 3]
+        step, restored = ckpt.restore_checkpoint(d, state)
+        assert step == 3
+        same = jax.tree.map(lambda a, b: bool(jnp.all(a == b)),
+                            state, restored)
+        assert all(jax.tree.leaves(same))
+
+
+def test_checkpoint_ignores_uncommitted():
+    cfg, bundle = _tiny()
+    params = bundle.init(jax.random.PRNGKey(0))
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save_checkpoint(d, 5, {"p": params})
+        os.remove(os.path.join(d, "step_00000005", "COMMIT"))
+        assert ckpt.latest_step(d) is None
+
+
+def test_train_loop_restart_resumes():
+    cfg, bundle = _tiny()
+    tc = TrainConfig(total_steps=6, checkpoint_every=2, warmup_steps=2)
+    with tempfile.TemporaryDirectory() as wd:
+        data = PrefetchIterator(token_batches(cfg.vocab_size_real, 4, 32))
+        out = TrainLoop(bundle, tc, data, wd, log=lambda *_: None).run()
+        assert len(out["losses"]) == 6
+        # second run restores the final step and trains 0 steps
+        data2 = PrefetchIterator(token_batches(cfg.vocab_size_real, 4, 32))
+        out2 = TrainLoop(bundle, tc, data2, wd, log=lambda *_: None).run()
+        assert len(out2["losses"]) == 0
+
+
+def test_deduped_loader_respects_keep():
+    docs = [np.full(16, i, np.int32) for i in range(10)]
+    keep = np.asarray([0, 2, 4])
+    it = deduped_token_batches(docs, keep, batch=2, seq=8, vocab=100, seed=0)
+    batch = next(it)
+    assert set(np.unique(batch["tokens"])).issubset({0, 2, 4})
+
+
+def test_global_norm():
+    t = {"a": jnp.ones((3,)) * 2.0, "b": jnp.zeros((4,))}
+    assert float(global_norm(t)) == pytest.approx(np.sqrt(12.0))
