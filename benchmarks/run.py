@@ -1,12 +1,15 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import os
 import sys
 
-sys.path.insert(0, "src")
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)                       # `import benchmarks` as a script
+sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 
 def main() -> None:
     from benchmarks import (bench_dedup, bench_etilde, bench_mae, bench_ratio,
-                            bench_throughput, bench_variance)
+                            bench_search, bench_throughput, bench_variance)
     print("name,us_per_call,derived")
     bench_variance.run()     # Fig 6: theory vs empirical variance
     bench_etilde.run()       # Fig 2, 3: Var vs J; E~ monotone (Lemma 3.3)
@@ -14,6 +17,7 @@ def main() -> None:
     bench_mae.run()          # Fig 7: MAE on text/image-statistics corpora
     bench_throughput.run()   # §5: throughput + K->2 memory
     bench_dedup.run()        # production dedup pipeline
+    bench_search.run()       # SketchStore index build + query vs dict path
 
 
 if __name__ == '__main__':

@@ -70,15 +70,24 @@ def cminhash_sparse(idx: Array, pi: Array, k: int, sigma: Array | None = None,
     valid = idx >= 0
     safe_idx = jnp.where(valid, idx, 0)
 
-    def chunk_fn(carry, ks):  # ks: (k_chunk,) shift values
+    def shifts_fn(ks):  # ks: (kc,) shift values -> (kc, B) partial signatures
         pos = (safe_idx[None, :, :] - ks[:, None, None]) % d  # (kc, B, NNZ)
         vals = jnp.where(valid[None], pi[pos], SENTINEL)
-        return carry, jnp.min(vals, axis=-1)  # (kc, B)
+        return jnp.min(vals, axis=-1)
 
-    n_chunks = -(-k // k_chunk)
-    ks_all = shift_offset + jnp.arange(n_chunks * k_chunk)
-    _, sigs = jax.lax.scan(chunk_fn, None, ks_all.reshape(n_chunks, k_chunk))
-    sig = sigs.reshape(n_chunks * k_chunk, b)[:k]
+    # full chunks go through one scan; the k % k_chunk remainder is a single
+    # smaller call, so no wasted shifts when k_chunk does not divide k
+    n_full, rem = divmod(k, k_chunk)
+    parts = []
+    if n_full:
+        ks_full = shift_offset + jnp.arange(n_full * k_chunk)
+        _, sigs = jax.lax.scan(lambda c, ks: (c, shifts_fn(ks)), None,
+                               ks_full.reshape(n_full, k_chunk))
+        parts.append(sigs.reshape(n_full * k_chunk, b))
+    if rem:
+        ks_rem = shift_offset + n_full * k_chunk + jnp.arange(rem)
+        parts.append(shifts_fn(ks_rem))
+    sig = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
     return sig.T.astype(jnp.int32)
 
 

@@ -17,7 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import SketchConfig, SketchEngine
-from repro.core.lsh import UnionFind, band_hashes, candidate_pairs
+from repro.core.lsh import UnionFind
+from repro.store import SketchStore, StoreConfig
 
 from .shingle import batch_shingles
 
@@ -51,14 +52,19 @@ def dedup_corpus(docs: list[np.ndarray], cfg: DedupConfig,
                           mesh=mesh)
     sigs = np.asarray(engine.signatures_sparse(jnp.asarray(idx)))
 
-    bands = np.asarray(band_hashes(sigs, cfg.n_bands,
-                                   cfg.rows_per_band))
-    cands = candidate_pairs(bands)
+    # SketchStore's vectorized LSH table replaces host-side dict bucketing;
+    # candidate_pairs() is exact (spilled entries are paired via their
+    # recorded band keys), so clusters match the reference dict path.
+    store = SketchStore(StoreConfig.sized_for(
+        len(docs), k=cfg.k, n_bands=cfg.n_bands,
+        rows_per_band=cfg.rows_per_band,
+        store_signatures=False))    # dedup only needs candidate pairs
+    store.add(sigs)
+    pairs = store.candidate_pairs()                 # (P, 2) sorted unique
 
     uf = UnionFind(len(docs))
     n_verified = 0
-    if cands:
-        pairs = np.asarray(sorted(cands), np.int64)
+    if len(pairs):
         # aligned row-wise verification (the pairwise collision kernel is for
         # query-vs-index search; candidate pairs are 1:1)
         eq = (sigs[pairs[:, 0]] == sigs[pairs[:, 1]]).mean(axis=1)
@@ -70,7 +76,7 @@ def dedup_corpus(docs: list[np.ndarray], cfg: DedupConfig,
     cluster_of = np.asarray([uf.find(i) for i in range(len(docs))])
     keep = np.asarray(sorted({uf.find(i) for i in range(len(docs))}))
     return DedupResult(keep=keep, cluster_of=cluster_of,
-                       n_candidates=len(cands), n_verified=n_verified,
+                       n_candidates=len(pairs), n_verified=n_verified,
                        signatures=sigs)
 
 

@@ -8,15 +8,20 @@ freely; tests sweep shapes/dtypes asserting kernel == ref.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
+from ..core.bbit import lowest_b_bits
 from ..core.permutations import apply_permutation_dense
 from . import ref
 from .cminhash_kernel import cminhash_pallas
 from .collision_kernel import collision_count_pallas
 
 Array = jax.Array
+
+PACK_BITS = (1, 2, 4, 8, 16, 32)  # b values whose codes tile an int32 word
 
 
 def _interpret() -> bool:
@@ -51,3 +56,77 @@ def estimated_jaccard_matrix(sig_q: Array, sig_n: Array, **kw) -> Array:
     """(Q, N) float32 estimated Jaccard from signatures."""
     k = sig_q.shape[-1]
     return collision_counts(sig_q, sig_n, **kw).astype(jnp.float32) / k
+
+
+# -- b-bit packed codes (SketchStore storage format) -------------------------
+#
+# K codes of b bits each are packed little-endian into ceil(K / (32/b)) uint32
+# words: code j of a row lives at bit (j % (32/b)) * b of word j // (32/b).
+# b == 32 is a bitcast (one code per word, codes == signatures), so scoring on
+# packed words at b = 32 is bit-exact with scoring the raw signatures.
+
+def _pack_geometry(k: int, b: int) -> tuple[int, int]:
+    if b not in PACK_BITS:
+        raise ValueError(f"b must be one of {PACK_BITS} (got {b})")
+    codes_per_word = 32 // b
+    return codes_per_word, -(-k // codes_per_word)
+
+
+@functools.partial(jax.jit, static_argnames=("b",))
+def pack_codes(sig: Array, b: int) -> Array:
+    """(B, K) int32 signatures -> (B, W) uint32 b-bit packed words."""
+    bsz, k = sig.shape
+    cpw, n_words = _pack_geometry(k, b)
+    if b == 32:
+        return jax.lax.bitcast_convert_type(sig, jnp.uint32)
+    codes = lowest_b_bits(sig, b).astype(jnp.uint32)
+    pad = n_words * cpw - k
+    if pad:
+        codes = jnp.pad(codes, ((0, 0), (0, pad)))
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * b)
+    return jnp.sum(codes.reshape(bsz, n_words, cpw) << shifts, axis=-1,
+                   dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "b"))
+def unpack_codes(words: Array, k: int, b: int) -> Array:
+    """(B, W) uint32 packed words -> (B, K) int32 codes in [0, 2^b)."""
+    bsz = words.shape[0]
+    cpw, n_words = _pack_geometry(k, b)
+    if b == 32:
+        return jax.lax.bitcast_convert_type(words, jnp.int32)[:, :k]
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * b)
+    mask = jnp.uint32((1 << b) - 1)
+    codes = (words[:, :, None] >> shifts) & mask
+    return codes.reshape(bsz, n_words * cpw)[:, :k].astype(jnp.int32)
+
+
+def packed_collision_counts(words_q: Array, words_n: Array, k: int, b: int,
+                            *, unpack_block_n: int = 16384, **kw) -> Array:
+    """(Q, W) x (N, W) packed uint32 -> (Q, N) int32 matching-code counts.
+
+    Unpacks and reuses the pairwise collision kernel.  The index side is
+    processed in blocks of ``unpack_block_n`` rows so the unpacked (N', K)
+    int32 intermediate stays bounded — the resident index keeps its b/32
+    packed footprint even when a brute-force fallback scores all of it.
+    """
+    uq = unpack_codes(words_q, k, b)
+    n = words_n.shape[0]
+    if n <= unpack_block_n:
+        return collision_counts(uq, unpack_codes(words_n, k, b), **kw)
+    parts = [collision_counts(
+        uq, unpack_codes(words_n[lo: lo + unpack_block_n], k, b), **kw)
+        for lo in range(0, n, unpack_block_n)]
+    return jnp.concatenate(parts, axis=1)
+
+
+def packed_estimated_jaccard_matrix(words_q: Array, words_n: Array, k: int,
+                                    b: int, **kw) -> Array:
+    """(Q, N) float32 estimated Jaccard from b-bit packed codes.
+
+    At b < 32 this is the raw collision fraction of b-bit codes — biased up by
+    ~2^-b relative to true Jaccard (Li & Koenig, 2011); at b = 32 it equals
+    ``estimated_jaccard_matrix`` exactly.
+    """
+    counts = packed_collision_counts(words_q, words_n, k, b, **kw)
+    return counts.astype(jnp.float32) / k

@@ -39,3 +39,22 @@ def collision_count_ref(sig_q: Array, sig_n: Array) -> Array:
     """(Q, K) x (N, K) int32 -> (Q, N) int32 match counts."""
     eq = sig_q[:, None, :] == sig_n[None, :, :]
     return jnp.sum(eq.astype(jnp.int32), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "b"))
+def packed_collision_count_ref(words_q: Array, words_n: Array, k: int,
+                               b: int) -> Array:
+    """(Q, W) x (N, W) b-bit packed uint32 -> (Q, N) matching-code counts.
+
+    Works on the XOR of the word pair directly (a b-bit field matches iff its
+    XOR field is zero) — no shared unpack helper with ops.pack_codes, so a
+    packing-layout bug cannot cancel out.
+    """
+    x = words_q[:, None, :] ^ words_n[None, :, :]          # (Q, N, W)
+    cpw = 32 // b
+    shifts = jnp.arange(cpw, dtype=jnp.uint32) * jnp.uint32(b)
+    mask = jnp.uint32((1 << b) - 1) if b < 32 else jnp.uint32(0xFFFFFFFF)
+    fields = (x[..., None] >> shifts) & mask               # (Q, N, W, cpw)
+    q, n, w = x.shape
+    match = (fields == 0).reshape(q, n, w * cpw)[..., :k]
+    return jnp.sum(match.astype(jnp.int32), axis=-1)

@@ -1,21 +1,23 @@
 """Batched similarity-search service over C-MinHash signatures.
 
-Index: signatures (N, K) + banded LSH buckets. Queries are answered in batches:
-bucket probing proposes candidates; the pairwise collision kernel scores the
-query block against the candidate block; top-k by estimated Jaccard.
+Index + query path is owned by the SketchStore subsystem: signatures live in
+a b-bit packed device buffer, LSH bucketing is open-addressing array state
+(no per-item Python dicts), and a query batch is answered with one vectorized
+candidate gather + one collision-kernel call + batched top-k.  At the default
+``b=32`` the stored codes are the exact signatures, so results match the
+unpacked reference path bit-for-bit; ``b<32`` trades a small upward score
+bias (Li & Koenig, 2011) for 32/b smaller index memory.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from collections import defaultdict
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import SketchConfig, SketchEngine
-from repro.core.lsh import band_hashes
-from repro.kernels import ops
+from repro.store import SketchStore, StoreConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,6 +27,9 @@ class SearchConfig:
     n_bands: int = 32
     rows_per_band: int = 8
     seed: int = 0
+    b: int = 32                 # stored bits per hash (32 = exact scoring)
+    n_slots: int = 2048         # initial LSH table slots per band
+    bucket_width: int = 8       # initial postings per bucket
 
 
 class SimilaritySearchService:
@@ -34,32 +39,22 @@ class SimilaritySearchService:
         self.cfg = cfg
         self.engine = SketchEngine(SketchConfig(d=cfg.d, k=cfg.k,
                                                 seed=cfg.seed), mesh=mesh)
-        self._sigs: np.ndarray | None = None
-        self._buckets: list[dict[int, list[int]]] = [
-            defaultdict(list) for _ in range(cfg.n_bands)]
+        self.store = SketchStore(StoreConfig(
+            k=cfg.k, n_bands=cfg.n_bands, rows_per_band=cfg.rows_per_band,
+            b=cfg.b, n_slots=cfg.n_slots, bucket_width=cfg.bucket_width))
 
     # -- indexing ----------------------------------------------------------
     def add_sparse(self, idx: np.ndarray) -> None:
         sigs = np.asarray(self.engine.signatures_sparse(jnp.asarray(idx)))
-        self._append(sigs)
+        self.store.add(sigs)
 
     def add_dense(self, v: np.ndarray) -> None:
         sigs = np.asarray(self.engine.signatures_dense(jnp.asarray(v)))
-        self._append(sigs)
-
-    def _append(self, sigs: np.ndarray) -> None:
-        start = 0 if self._sigs is None else len(self._sigs)
-        bands = np.asarray(band_hashes(sigs, self.cfg.n_bands,
-                                       self.cfg.rows_per_band))
-        for row in range(len(sigs)):
-            for b in range(self.cfg.n_bands):
-                self._buckets[b][int(bands[row, b])].append(start + row)
-        self._sigs = sigs if self._sigs is None else \
-            np.concatenate([self._sigs, sigs])
+        self.store.add(sigs)
 
     @property
     def size(self) -> int:
-        return 0 if self._sigs is None else len(self._sigs)
+        return self.store.size
 
     # -- querying ----------------------------------------------------------
     def query_sparse(self, idx: np.ndarray, top_k: int = 10):
@@ -71,34 +66,10 @@ class SimilaritySearchService:
         return self._query(sigs, top_k)
 
     def _query(self, qsigs: np.ndarray, top_k: int):
-        """Returns (ids (Q, top_k) int64 [-1 pad], scores (Q, top_k) f32)."""
-        assert self._sigs is not None and len(self._sigs) > 0
-        qbands = np.asarray(band_hashes(qsigs, self.cfg.n_bands,
-                                        self.cfg.rows_per_band))
-        # union of candidates for the whole query batch -> one kernel call
-        cand: set[int] = set()
-        per_query: list[set[int]] = []
-        for qi in range(len(qsigs)):
-            mine: set[int] = set()
-            for b in range(self.cfg.n_bands):
-                mine.update(self._buckets[b].get(int(qbands[qi, b]), ()))
-            per_query.append(mine)
-            cand |= mine
-        if not cand:  # no bucket hit anywhere: brute-force the index
-            cand = set(range(self.size))
-            per_query = [cand] * len(qsigs)
-        cand_ids = np.asarray(sorted(cand), np.int64)
-        est = np.asarray(ops.estimated_jaccard_matrix(
-            jnp.asarray(qsigs), jnp.asarray(self._sigs[cand_ids])))
+        """Returns (ids (Q, top_k) int64 [-1 pad], scores (Q, top_k) f32).
 
-        ids = np.full((len(qsigs), top_k), -1, np.int64)
-        scores = np.zeros((len(qsigs), top_k), np.float32)
-        for qi, mine in enumerate(per_query):
-            if not mine:
-                continue
-            mask = np.isin(cand_ids, np.asarray(sorted(mine), np.int64))
-            local = np.where(mask)[0]
-            order = local[np.argsort(-est[qi, local])][:top_k]
-            ids[qi, : len(order)] = cand_ids[order]
-            scores[qi, : len(order)] = est[qi, order]
-        return ids, scores
+        Queries with no bucket hit anywhere fall back to brute force over the
+        index — independently per query (a query with candidates keeps its
+        bucket-restricted ranking)."""
+        assert self.store.size > 0
+        return self.store.query(qsigs, top_k)

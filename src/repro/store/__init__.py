@@ -1,0 +1,9 @@
+"""SketchStore: device-resident packed signature storage + vectorized LSH."""
+
+from .packed import PackedConfig, PackedSignatureBuffer
+from .planner import QueryPlanner
+from .store import SketchStore, StoreConfig
+from .table import BandedLSHTable
+
+__all__ = ["PackedConfig", "PackedSignatureBuffer", "QueryPlanner",
+           "SketchStore", "StoreConfig", "BandedLSHTable"]

@@ -1,0 +1,207 @@
+"""SketchStore — packed signature storage + vectorized LSH indexing facade.
+
+Owns the three pieces end-to-end: a ``PackedSignatureBuffer`` (b-bit columnar
+signature storage), a ``BandedLSHTable`` (open-addressing bucket arrays), and
+a ``QueryPlanner`` (batched candidate scoring).  ``add`` appends a signature
+batch and indexes it; ``query`` answers a query batch with top-k (id, score)
+pairs; ``candidate_pairs`` serves the dedup pipeline.  ``save``/``load``
+snapshot the whole store to one ``.npz``.
+
+The table auto-rebuilds (doubling) when open addressing degrades: slot load
+factor above ``rebuild_load_factor``, or spilled entries above
+``rebuild_spill_fraction`` of postings.  Probe-exhaustion spills double
+``n_slots``; bucket-overflow spills double ``bucket_width``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.lsh import band_hashes
+
+from .packed import PackedConfig, PackedSignatureBuffer
+from .planner import QueryPlanner
+from .table import BandedLSHTable
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreConfig:
+    k: int                          # signature length
+    n_bands: int                    # LSH bands; k = n_bands * rows_per_band
+    rows_per_band: int
+    b: int = 32                     # stored bits per hash (32 = exact)
+    n_slots: int = 2048             # initial open-addressing slots per band
+    bucket_width: int = 8           # initial postings per bucket
+    max_probes: int = 16            # quadratic-probe chain bound
+    capacity: int = 1024            # initial packed-buffer item capacity
+    rebuild_load_factor: float = 0.7
+    rebuild_spill_fraction: float = 0.01
+    auto_rebuild: bool = True
+    store_signatures: bool = True   # False: index-only (candidate_pairs /
+                                    # candidate_rows work, query() does not)
+
+    def __post_init__(self):
+        if self.n_bands * self.rows_per_band != self.k:
+            raise ValueError("n_bands * rows_per_band must equal k")
+        from repro.kernels import ops
+        if self.b not in ops.PACK_BITS:
+            raise ValueError(f"b must be one of {ops.PACK_BITS} (got {self.b})")
+
+    @classmethod
+    def sized_for(cls, n_items: int, *, target_load: float = 0.5,
+                  **kw) -> "StoreConfig":
+        """Config pre-sized for a known corpus: slots for ~``target_load``
+        per band (one-shot adds at load >~ 0.7 exhaust probe chains) and
+        buffer capacity for ``n_items``."""
+        n_slots = max(2048, 1 << int(np.ceil(
+            np.log2(max(n_items, 1) / target_load))))
+        kw.setdefault("n_slots", n_slots)
+        kw.setdefault("capacity", max(n_items, 8))
+        return cls(**kw)
+
+
+class SketchStore:
+    def __init__(self, cfg: StoreConfig):
+        self.cfg = cfg
+        self.buffer = PackedSignatureBuffer(PackedConfig(
+            k=cfg.k, b=cfg.b,
+            capacity=cfg.capacity if cfg.store_signatures else 1))
+        self.table = BandedLSHTable(cfg.n_bands, n_slots=cfg.n_slots,
+                                    bucket_width=cfg.bucket_width,
+                                    max_probes=cfg.max_probes)
+        self.planner = QueryPlanner(self.buffer)
+        self.n_rebuilds = 0
+
+    # -- sizing ------------------------------------------------------------
+    @property
+    def size(self) -> int:
+        return self.buffer.size if self.cfg.store_signatures \
+            else self.table.n_items
+
+    @property
+    def n_spilled(self) -> int:
+        return self.table.n_spilled
+
+    # -- writes ------------------------------------------------------------
+    def add(self, sigs: np.ndarray) -> np.ndarray:
+        """Append + index a (B, K) int32 signature batch; returns new ids."""
+        sigs = np.asarray(sigs)
+        if self.cfg.store_signatures:
+            ids = self.buffer.append(sigs)
+        else:                       # index-only: skip the packed copy
+            ids = np.arange(self.table.n_items,
+                            self.table.n_items + len(sigs), dtype=np.int64)
+        hashes = band_hashes(sigs, self.cfg.n_bands, self.cfg.rows_per_band)
+        self.table.insert(hashes, ids)
+        if self.cfg.auto_rebuild:
+            self._maybe_rebuild()
+        return ids
+
+    # growth caps: beyond these the spill list is the right representation
+    # (a duplicate cluster larger than any sane bucket stays spilled — pairs
+    # and queries handle it exactly), so geometry cannot blow up on
+    # pathological input
+    _MAX_BUCKET_WIDTH = 256
+
+    def _slot_cap(self) -> int:
+        target = max(self.cfg.n_slots, 4 * max(self.table.n_items, 1))
+        return 1 << (target - 1).bit_length()
+
+    def _maybe_rebuild(self) -> None:
+        # loop: one large add can overshoot a single doubling by far.  each
+        # pass grows only the dimension the failure mode points at
+        for _ in range(32):
+            t = self.table
+            postings_cap = t.n_items * t.n_bands
+            too_full = t.load_factor > self.cfg.rebuild_load_factor
+            too_spilled = t.n_spilled > max(
+                32, self.cfg.rebuild_spill_fraction * postings_cap)
+            if not (too_full or too_spilled):
+                return
+            grow_w = (too_spilled and not too_full and
+                      t.n_spill_overflow > t.n_spill_probe)
+            if grow_w:
+                if t.bucket_width >= self._MAX_BUCKET_WIDTH:
+                    return                 # oversized cluster: leave it spilled
+                self.rebuild(bucket_width=min(t.bucket_width * 2,
+                                              self._MAX_BUCKET_WIDTH))
+            else:
+                if t.n_slots >= self._slot_cap():
+                    return
+                self.rebuild(n_slots=min(t.n_slots * 2, self._slot_cap()))
+
+    def rebuild(self, n_slots: int | None = None,
+                bucket_width: int | None = None,
+                max_probes: int | None = None) -> None:
+        self.table.rebuild(n_slots=n_slots, bucket_width=bucket_width,
+                           max_probes=max_probes)
+        self.n_rebuilds += 1
+
+    # -- reads -------------------------------------------------------------
+    def candidate_rows(self, qsigs: np.ndarray) -> np.ndarray:
+        """(Q, K) signatures -> (Q, C) candidate item ids, -1 padded.
+
+        Includes spilled entries whose recorded (band, key) matches the
+        query, so the candidate set equals the reference dict-bucket path
+        even with a non-empty spill."""
+        qsigs = np.asarray(qsigs)
+        hashes = band_hashes(qsigs, self.cfg.n_bands, self.cfg.rows_per_band)
+        cand = self.table.lookup(hashes).astype(np.int64)
+        spill = self.table.spilled_candidates(hashes)
+        if spill.shape[1]:
+            cand = np.concatenate([cand, spill], axis=1)
+        return cand
+
+    def query(self, qsigs: np.ndarray,
+              top_k: int = 10) -> tuple[np.ndarray, np.ndarray]:
+        """(Q, K) signatures -> (ids (Q, top_k) [-1 pad], scores (Q, top_k)).
+
+        Candidates (incl. per-query-matched spill) are scored with the
+        packed collision op; results are identical to the reference
+        dict-bucket path at b=32."""
+        if not self.cfg.store_signatures:
+            raise RuntimeError("query() needs stored signatures; this store "
+                               "was built with store_signatures=False")
+        qsigs = np.asarray(qsigs)
+        return self.planner.topk(qsigs, self.candidate_rows(qsigs), top_k)
+
+    def candidate_pairs(self) -> np.ndarray:
+        """(P, 2) int64 unique (i, j), i < j, sharing >= 1 band bucket."""
+        return self.table.candidate_pairs()
+
+    # -- snapshots ---------------------------------------------------------
+    def save(self, path: str) -> None:
+        cfg = self.cfg
+        np.savez(path,
+                 words=np.asarray(self.buffer.all_packed()),
+                 cfg=np.asarray([cfg.k, cfg.n_bands, cfg.rows_per_band, cfg.b,
+                                 self.table.n_slots, self.table.bucket_width,
+                                 self.table.max_probes, cfg.capacity,
+                                 int(cfg.auto_rebuild),
+                                 int(cfg.store_signatures)], np.int64),
+                 cfg_thresholds=np.asarray([cfg.rebuild_load_factor,
+                                            cfg.rebuild_spill_fraction]),
+                 table_hashes=self.table.hash_log)
+
+    @classmethod
+    def load(cls, path: str) -> "SketchStore":
+        with np.load(path) as z:
+            k, nb, r, b, ns, w, p, cap, auto, keep = \
+                (int(x) for x in z["cfg"])
+            load_f, spill_f = (float(x) for x in z["cfg_thresholds"])
+            store = cls(StoreConfig(k=k, n_bands=nb, rows_per_band=r, b=b,
+                                    n_slots=ns, bucket_width=w, max_probes=p,
+                                    capacity=cap, rebuild_load_factor=load_f,
+                                    rebuild_spill_fraction=spill_f,
+                                    auto_rebuild=bool(auto),
+                                    store_signatures=bool(keep)))
+            store.buffer = PackedSignatureBuffer.from_rows(
+                store.buffer.cfg, z["words"])
+            store.planner = QueryPlanner(store.buffer)
+            hashes = z["table_hashes"]
+            if len(hashes):
+                store.table.insert(
+                    hashes, np.arange(len(hashes), dtype=np.int64))
+        return store

@@ -1,0 +1,109 @@
+"""Minimal deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The container image does not ship hypothesis and nothing may be pip-installed,
+so ``conftest.py`` registers this module as ``hypothesis`` /
+``hypothesis.strategies`` if the real package is missing.  It implements just
+the surface the test suite uses — ``@given``/``@settings``, ``st.integers``,
+``st.floats`` and interactive ``st.data()`` — running each property
+``max_examples`` times with a per-example seeded PRNG, so failures reproduce
+exactly.  When the real hypothesis is present it is used untouched.
+"""
+
+from __future__ import annotations
+
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    seq = list(elements)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def lists(elems: _Strategy, *, min_size: int = 0, max_size: int = 10,
+          **_kw) -> _Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elems._draw(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+class _Data:
+    """Interactive draw object backing ``st.data()``."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label: str | None = None):
+        return strategy._draw(self._rng)
+
+
+def data() -> _Strategy:
+    return _Strategy(lambda rng: _Data(rng))
+
+
+def settings(**kwargs):
+    def deco(fn):
+        fn._stub_settings = kwargs
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        # no functools.wraps: pytest follows __wrapped__ when inspecting the
+        # signature and would treat the strategy parameters as fixtures
+        def wrapper(*args, **kwargs):
+            # @settings may sit above @given (attr lands on wrapper) or below
+            # it (attr lands on fn) — real hypothesis accepts both orders
+            cfg = getattr(wrapper, "_stub_settings", None) or \
+                getattr(fn, "_stub_settings", {})
+            n = cfg.get("max_examples", 10)
+            for example in range(n):
+                rng = random.Random(0x5EED0000 + example)
+                drawn = [s._draw(rng) for s in strategies]
+                fn(*args, *drawn, **kwargs)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` if the real one is absent."""
+    import sys
+    try:
+        import hypothesis  # noqa: F401  (real package wins)
+        return
+    except ImportError:
+        pass
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "booleans", "lists",
+                 "data"):
+        setattr(st_mod, name, globals()[name])
+    hyp_mod = types.ModuleType("hypothesis")
+    hyp_mod.given = given
+    hyp_mod.settings = settings
+    hyp_mod.strategies = st_mod
+    hyp_mod.__stub__ = True
+    sys.modules["hypothesis"] = hyp_mod
+    sys.modules["hypothesis.strategies"] = st_mod

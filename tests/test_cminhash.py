@@ -56,6 +56,47 @@ def test_sparse_equals_dense_with_sigma(B, D, K, dens):
     assert np.array_equal(np.asarray(s_dense), np.asarray(s_ref))
 
 
+def test_sparse_k_chunk_remainder_regression():
+    """k=65, k_chunk=64 must equal k_chunk=1 (no stale shifts from the scan
+    grid overrun when k % k_chunk != 0)."""
+    rng = np.random.default_rng(7)
+    D = 128
+    sigma, pi = make_two_permutations(jax.random.PRNGKey(9), D)
+    idx = np.full((4, 12), -1, np.int32)
+    for i in range(4):
+        nz = rng.choice(D, size=rng.integers(1, 12), replace=False)
+        idx[i, : len(nz)] = nz
+    for sig_arg in (sigma, None):
+        a = cminhash.cminhash_sparse(jnp.asarray(idx), pi, 65, sig_arg,
+                                     k_chunk=64)
+        b = cminhash.cminhash_sparse(jnp.asarray(idx), pi, 65, sig_arg,
+                                     k_chunk=1)
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(8, 200), st.data())
+def test_dense_sparse_agree_property(d, data):
+    """cminhash_dense on a random binary vector == cminhash_sparse on its
+    padded index list, exactly, for sigma None and sigma given."""
+    k = data.draw(st.integers(1, d))
+    dens = data.draw(st.floats(0.0, 1.0))
+    seed = data.draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    v = (rng.random((2, d)) < dens).astype(np.int8)
+    sigma, pi = make_two_permutations(jax.random.PRNGKey(seed), d)
+    nnz = max(int(v.sum(1).max()), 1)
+    idx = np.full((2, nnz), -1, np.int32)
+    for i in range(2):
+        nz = np.where(v[i])[0]
+        idx[i, : len(nz)] = nz
+    for sig_arg in (None, sigma):
+        s_dense = cminhash.cminhash_dense(jnp.asarray(v), pi, k, sig_arg)
+        s_sparse = cminhash.cminhash_sparse(jnp.asarray(idx), pi, k, sig_arg)
+        assert np.array_equal(np.asarray(s_dense), np.asarray(s_sparse)), \
+            (d, k, dens, seed, sig_arg is None)
+
+
 def test_k_greater_than_d_rejected():
     pi = jnp.arange(8, dtype=jnp.int32)
     with pytest.raises(ValueError):

@@ -123,6 +123,30 @@ def test_search_service_self_retrieval_and_ranking():
     assert (scores[:, 0] >= scores[:, 1]).all()    # ranked
 
 
+def test_search_service_empty_bucket_fallback_is_per_query():
+    """A query with no bucket hit anywhere brute-forces the index on its own;
+    queries with candidates keep bucket-restricted results (the old code
+    shared one aliased candidate set and only fell back when ALL queries
+    missed)."""
+    rng = np.random.default_rng(11)
+    d = 1 << 12
+    svc = SimilaritySearchService(SearchConfig(d=d, k=128, n_bands=32,
+                                               rows_per_band=4))
+    base = np.sort(rng.choice(d, 64, replace=False)).astype(np.int32)
+    corpus = np.stack([base, base.copy()])      # two identical docs
+    svc.add_sparse(corpus)
+    # query 0: an indexed doc (bucket hits); query 1: disjoint support
+    # (virtually surely no bucket hit)
+    other = np.sort(rng.choice(
+        np.setdiff1d(np.arange(d), base), 64, replace=False)).astype(np.int32)
+    ids, scores = svc.query_sparse(np.stack([base, other]), top_k=2)
+    assert ids[0, 0] in (0, 1) and scores[0, 0] == 1.0   # bucket path
+    # fallback path returned this query's own brute-force ranking, not a
+    # copy of query 0's candidates and not empty
+    assert (ids[1] >= 0).all()
+    assert scores[1, 0] < 0.5
+
+
 def test_search_service_finds_near_duplicates():
     docs, labels = corpus_with_duplicates(40, vocab=3000, doc_len=96,
                                           dup_fraction=0.5, cluster_size=2,

@@ -1,0 +1,339 @@
+"""SketchStore subsystem: packed buffer, LSH table, planner, facade."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.lsh import band_hashes, candidate_pairs
+from repro.kernels import ops, ref
+from repro.store import (BandedLSHTable, PackedConfig, PackedSignatureBuffer,
+                         SketchStore, StoreConfig)
+
+
+# -- packed codes ----------------------------------------------------------
+
+@pytest.mark.parametrize("b", [1, 2, 4, 8, 16, 32])
+def test_pack_unpack_roundtrip(b):
+    rng = np.random.default_rng(b)
+    sig = rng.integers(0, 1 << 20, (5, 37), dtype=np.int32)
+    words = ops.pack_codes(jnp.asarray(sig), b)
+    assert np.asarray(words).dtype == np.uint32
+    back = np.asarray(ops.unpack_codes(words, 37, b))
+    expect = sig & ((1 << b) - 1) if b < 32 else sig
+    assert np.array_equal(back, expect)
+
+
+@pytest.mark.parametrize("b", [1, 4, 8, 32])
+def test_packed_collision_counts_vs_independent_ref(b):
+    rng = np.random.default_rng(10 + b)
+    k = 53
+    sq = rng.integers(0, 1 << 16, (6, k), dtype=np.int32)
+    sn = rng.integers(0, 1 << 16, (9, k), dtype=np.int32)
+    sn[0] = sq[0]
+    wq = ops.pack_codes(jnp.asarray(sq), b)
+    wn = ops.pack_codes(jnp.asarray(sn), b)
+    got = np.asarray(ops.packed_collision_counts(wq, wn, k, b))
+    want = np.asarray(ref.packed_collision_count_ref(wq, wn, k, b))
+    assert np.array_equal(got, want)
+    assert got[0, 0] == k
+    if b == 32:  # exact: equals raw signature collision counts
+        raw = np.asarray(ops.collision_counts(jnp.asarray(sq),
+                                              jnp.asarray(sn)))
+        assert np.array_equal(got, raw)
+
+
+# -- packed buffer ---------------------------------------------------------
+
+def test_buffer_append_doubling_and_gather():
+    cfg = PackedConfig(k=40, b=8, capacity=8)
+    buf = PackedSignatureBuffer(cfg)
+    rng = np.random.default_rng(0)
+    sigs = rng.integers(0, 1 << 16, (100, 40), dtype=np.int32)
+    for lo in range(0, 100, 13):
+        ids = buf.append(sigs[lo: lo + 13])
+        assert ids[0] == lo
+    assert buf.size == 100
+    assert buf.capacity >= 100
+    assert buf.nbytes == cfg.n_words * 100 * 4      # b=8: ~4x under raw int32
+    got = np.asarray(buf.codes(np.asarray([0, 57, 99])))
+    assert np.array_equal(got, sigs[[0, 57, 99]] & 0xFF)
+
+
+def test_buffer_snapshot_roundtrip(tmp_path):
+    cfg = PackedConfig(k=17, b=4, capacity=8)
+    buf = PackedSignatureBuffer(cfg)
+    rng = np.random.default_rng(1)
+    sigs = rng.integers(0, 1 << 12, (23, 17), dtype=np.int32)
+    buf.append(sigs)
+    path = str(tmp_path / "buf.npz")
+    buf.save(path)
+    loaded = PackedSignatureBuffer.load(path)
+    assert loaded.size == 23 and loaded.cfg.k == 17 and loaded.cfg.b == 4
+    assert np.array_equal(np.asarray(loaded.codes(np.arange(23))),
+                          sigs & 0xF)
+
+
+# -- LSH table -------------------------------------------------------------
+
+def _dict_lookup(hashes_index, hashes_query):
+    """Reference dict-based bucketing (the pre-SketchStore path)."""
+    from collections import defaultdict
+    nb = hashes_index.shape[1]
+    buckets = [defaultdict(list) for _ in range(nb)]
+    for i, row in enumerate(hashes_index):
+        for band in range(nb):
+            buckets[band][int(row[band])].append(i)
+    out = []
+    for row in hashes_query:
+        mine = set()
+        for band in range(nb):
+            mine.update(buckets[band].get(int(row[band]), ()))
+        out.append(mine)
+    return out
+
+
+def test_table_lookup_matches_dict_reference():
+    rng = np.random.default_rng(2)
+    sigs = rng.integers(0, 50, (400, 32), dtype=np.int32)   # forced collisions
+    hashes = band_hashes(sigs, 8, 4)
+    table = BandedLSHTable(8, n_slots=4096, bucket_width=32, max_probes=16)
+    table.insert(hashes[:250], np.arange(250))
+    table.insert(hashes[250:], np.arange(250, 400))
+    assert table.n_spilled == 0
+    want = _dict_lookup(hashes, hashes[:60])
+    got = table.lookup(hashes[:60])
+    for q in range(60):
+        mine = set(got[q][got[q] >= 0].tolist())
+        assert mine == want[q], q
+
+
+def test_table_candidate_pairs_match_reference():
+    rng = np.random.default_rng(3)
+    sigs = rng.integers(0, 30, (150, 32), dtype=np.int32)
+    hashes = band_hashes(sigs, 8, 4)
+    table = BandedLSHTable(8, n_slots=2048, bucket_width=64, max_probes=16)
+    table.insert(hashes, np.arange(150))
+    assert table.n_spilled == 0
+    got = set(map(tuple, table.candidate_pairs()))
+    assert got == candidate_pairs(hashes)
+
+
+def test_table_spill_and_rebuild():
+    rng = np.random.default_rng(4)
+    # one shared bucket per band with width 2 -> guaranteed overflow
+    sigs = np.broadcast_to(rng.integers(0, 9, (1, 16), dtype=np.int32),
+                           (20, 16)).copy()
+    hashes = band_hashes(sigs, 4, 4)
+    table = BandedLSHTable(4, n_slots=64, bucket_width=2, max_probes=4)
+    table.insert(hashes, np.arange(20))
+    assert table.n_spilled > 0 and table.n_spill_overflow > 0
+    # spilled entries are still paired exactly
+    got = set(map(tuple, table.candidate_pairs()))
+    assert got == candidate_pairs(hashes)
+    table.rebuild(bucket_width=32)
+    assert table.n_spilled == 0
+    got = set(map(tuple, table.candidate_pairs()))
+    assert got == candidate_pairs(hashes)
+
+
+def test_table_probe_exhaustion_spills_then_rebuild_drains():
+    rng = np.random.default_rng(5)
+    sigs = rng.integers(0, 1 << 16, (120, 16), dtype=np.int32)
+    hashes = band_hashes(sigs, 4, 4)
+    table = BandedLSHTable(4, n_slots=32, bucket_width=4, max_probes=2)
+    table.insert(hashes, np.arange(120))                # way over capacity
+    assert table.n_spill_probe > 0
+    table.rebuild(n_slots=1024, max_probes=16)
+    assert table.n_spilled == 0
+    want = _dict_lookup(hashes, hashes[:20])
+    got = table.lookup(hashes[:20])
+    for q in range(20):
+        assert set(got[q][got[q] >= 0].tolist()) == want[q]
+
+
+# -- facade ----------------------------------------------------------------
+
+def _corpus_sigs(n=200, k=64, vals=1 << 16, seed=6):
+    rng = np.random.default_rng(seed)
+    sigs = rng.integers(0, vals, (n, k), dtype=np.int32)
+    sigs[n // 2] = sigs[7]      # planted exact dup
+    return sigs
+
+
+def test_store_query_equivalent_to_pre_refactor_path():
+    """b=32 store results match the reference dict-bucket + dense-score path
+    (same candidates, same scores, ties broken by smaller id)."""
+    k, nb, r = 64, 16, 4
+    sigs = _corpus_sigs(k=k)
+    store = SketchStore(StoreConfig(k=k, n_bands=nb, rows_per_band=r))
+    store.add(sigs)
+    q = sigs[:10]
+    hashes = band_hashes(sigs, nb, r)
+    per_query = _dict_lookup(hashes, band_hashes(q, nb, r))
+    est = np.asarray(ops.estimated_jaccard_matrix(jnp.asarray(q),
+                                                  jnp.asarray(sigs)))
+    ids, scores = store.query(q, top_k=5)
+    for qi in range(10):
+        mine = np.asarray(sorted(per_query[qi]), np.int64)
+        order = mine[np.argsort(-est[qi, mine], kind="stable")][:5]
+        assert np.array_equal(ids[qi, : len(order)], order), qi
+        assert np.allclose(scores[qi, : len(order)], est[qi, order])
+
+
+def test_store_incremental_add_auto_rebuild_stays_exact():
+    k, nb, r = 64, 16, 4
+    sigs = _corpus_sigs(n=500, k=k)
+    store = SketchStore(StoreConfig(k=k, n_bands=nb, rows_per_band=r,
+                                    n_slots=32, bucket_width=2))
+    for lo in range(0, 500, 61):
+        store.add(sigs[lo: lo + 61])
+    assert store.n_rebuilds > 0           # tiny initial geometry forced growth
+    got = set(map(tuple, store.candidate_pairs()))
+    assert got == candidate_pairs(band_hashes(sigs, nb, r))
+    ids, _ = store.query(sigs[:6], top_k=1)
+    assert np.array_equal(ids[:, 0], np.arange(6))
+
+
+def test_store_bbit_packing_degrades_gracefully():
+    """b=8 store: 4x smaller, still retrieves the exact duplicate on top."""
+    k, nb, r = 64, 16, 4
+    sigs = _corpus_sigs(k=k)
+    store = SketchStore(StoreConfig(k=k, n_bands=nb, rows_per_band=r, b=8))
+    store.add(sigs)
+    ids, scores = store.query(sigs[[7]], top_k=2)
+    assert ids[0, 0] == 7 and scores[0, 0] == 1.0
+    assert ids[0, 1] == 100                # the planted dup of row 7
+    assert store.buffer.nbytes * 4 == store.size * k * 4   # 4x packed win
+
+
+def test_store_duplicate_cluster_does_not_blow_up_geometry():
+    """A duplicate cluster wider than any sane bucket stays spilled — the
+    auto-rebuild must cap bucket_width/n_slots growth instead of doubling
+    toward OOM (pairs and queries handle spilled entries exactly)."""
+    k, nb, r = 64, 16, 4
+    rng = np.random.default_rng(14)
+    sigs = np.broadcast_to(
+        rng.integers(0, 1 << 16, (1, k), dtype=np.int32), (600, k)).copy()
+    store = SketchStore(StoreConfig(k=k, n_bands=nb, rows_per_band=r,
+                                    n_slots=256, bucket_width=4))
+    store.add(sigs)
+    assert store.table.bucket_width <= store._MAX_BUCKET_WIDTH
+    assert store.table.n_slots <= store._slot_cap()
+    # cluster membership still exact via the spill pairing path
+    got = set(map(tuple, store.candidate_pairs()))
+    assert got == candidate_pairs(band_hashes(sigs, nb, r))
+
+
+def test_store_snapshot_preserves_rebuild_config(tmp_path):
+    cfg = StoreConfig(k=64, n_bands=16, rows_per_band=4, auto_rebuild=False,
+                      rebuild_load_factor=0.55, rebuild_spill_fraction=0.2)
+    store = SketchStore(cfg)
+    store.add(_corpus_sigs(n=30, k=64))
+    path = str(tmp_path / "s.npz")
+    store.save(path)
+    loaded = SketchStore.load(path)
+    assert loaded.cfg.auto_rebuild is False
+    assert loaded.cfg.rebuild_load_factor == 0.55
+    assert loaded.cfg.rebuild_spill_fraction == 0.2
+
+
+def test_store_snapshot_roundtrip(tmp_path):
+    k, nb, r = 64, 16, 4
+    sigs = _corpus_sigs(k=k)
+    store = SketchStore(StoreConfig(k=k, n_bands=nb, rows_per_band=r, b=16))
+    store.add(sigs)
+    path = str(tmp_path / "store.npz")
+    store.save(path)
+    loaded = SketchStore.load(path)
+    assert loaded.size == store.size
+    ids_a, sc_a = store.query(sigs[:8], top_k=4)
+    ids_b, sc_b = loaded.query(sigs[:8], top_k=4)
+    assert np.array_equal(ids_a, ids_b)
+    assert np.allclose(sc_a, sc_b)
+    assert np.array_equal(loaded.candidate_pairs(), store.candidate_pairs())
+
+
+def test_dedup_clusters_match_pre_refactor_path():
+    """dedup_corpus on SketchStore reproduces the dict-path clusters exactly
+    on a seeded corpus."""
+    from repro.core.engine import SketchConfig, SketchEngine
+    from repro.core.lsh import UnionFind
+    from repro.data.dedup import DedupConfig, dedup_corpus
+    from repro.data.shingle import batch_shingles
+    from repro.data.synthetic import corpus_with_duplicates
+
+    docs, _ = corpus_with_duplicates(50, vocab=4000, doc_len=100,
+                                     dup_fraction=0.4, seed=12)
+    cfg = DedupConfig(d=1 << 12, k=128, n_bands=32, rows_per_band=4,
+                      threshold=0.5)
+    res = dedup_corpus(docs, cfg)
+
+    # reference: the pre-SketchStore pipeline (dict bucketing)
+    idx = batch_shingles(docs, n=cfg.shingle_n, d=cfg.d)
+    engine = SketchEngine(SketchConfig(d=cfg.d, k=cfg.k, seed=cfg.seed))
+    sigs = np.asarray(engine.signatures_sparse(jnp.asarray(idx)))
+    cands = candidate_pairs(band_hashes(sigs, cfg.n_bands, cfg.rows_per_band))
+    uf = UnionFind(len(docs))
+    for i, j in sorted(cands):
+        if (sigs[i] == sigs[j]).mean() >= cfg.threshold:
+            uf.union(int(i), int(j))
+    ref_cluster = np.asarray([uf.find(i) for i in range(len(docs))])
+
+    assert res.n_candidates == len(cands)
+    assert np.array_equal(res.cluster_of, ref_cluster)
+
+
+def test_store_empty_and_no_candidate_fallback():
+    k, nb, r = 64, 16, 4
+    store = SketchStore(StoreConfig(k=k, n_bands=nb, rows_per_band=r))
+    ids, scores = store.query(np.zeros((2, k), np.int32), top_k=3)
+    assert (ids == -1).all() and (scores == 0).all()
+    sigs = _corpus_sigs(k=k)
+    store.add(sigs)
+    rng = np.random.default_rng(8)
+    stranger = rng.integers(1 << 20, 1 << 24, (1, k), dtype=np.int32)
+    ids, scores = store.query(stranger, top_k=3)
+    assert (ids[0] >= 0).all()             # brute-force fallback ranked all
+
+
+def test_spilled_entries_join_only_matching_queries():
+    """A spilled item must appear in a query's results only when it shares a
+    band bucket key with that query (the LSH contract), and must still be
+    retrievable by queries that do share one."""
+    k, nb, r = 64, 16, 4
+    rng = np.random.default_rng(15)
+    sigs = rng.integers(0, 1 << 16, (8, k), dtype=np.int32)
+    sigs[1] = sigs[0]                      # width-1 bucket -> doc 1 spills
+    store = SketchStore(StoreConfig(k=k, n_bands=nb, rows_per_band=r,
+                                    bucket_width=1, auto_rebuild=False))
+    store.add(sigs)
+    assert store.n_spilled > 0
+    # unrelated doc 3: the dict path would return only {3}; the spilled doc 1
+    # must NOT be smuggled into its results
+    ids, _ = store.query(sigs[[3]], top_k=8)
+    assert 1 not in ids[0][ids[0] >= 0].tolist()
+    # doc 0's query shares every bucket key with spilled doc 1
+    ids, scores = store.query(sigs[[0]], top_k=2)
+    assert set(ids[0].tolist()) == {0, 1} and scores[0, 1] == 1.0
+
+
+def test_no_candidate_fallback_still_fires_with_spilled_entries():
+    """Per-(band, key) spill matching must not mask the 'no bucket hit' test
+    that triggers brute force."""
+    k, nb, r = 64, 16, 4
+    rng = np.random.default_rng(13)
+    # identical rows overflow a width-1 bucket -> guaranteed spill
+    sigs = np.broadcast_to(
+        rng.integers(0, 1 << 16, (1, k), dtype=np.int32), (6, k)).copy()
+    sigs[4] = rng.integers(0, 1 << 16, k, dtype=np.int32)
+    sigs[5] = rng.integers(0, 1 << 16, k, dtype=np.int32)
+    store = SketchStore(StoreConfig(k=k, n_bands=nb, rows_per_band=r,
+                                    bucket_width=1, auto_rebuild=False))
+    store.add(sigs)
+    assert store.n_spilled > 0
+    # query with no bucket hit anywhere: must rank the WHOLE index (ids 4, 5
+    # included), not just the spilled subset
+    stranger = rng.integers(1 << 20, 1 << 24, (1, k), dtype=np.int32)
+    ids, _ = store.query(stranger, top_k=6)
+    assert set(ids[0][ids[0] >= 0].tolist()) == set(range(6))
