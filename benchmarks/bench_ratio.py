@@ -10,10 +10,13 @@ import time
 
 from repro.core import theory
 
-from .common import emit
+from .common import emit, smoke
 
 
 def run() -> None:
+    # smoke: shrink MC sample counts only — same cells, not comparable numbers
+    fig4_samples = 40_000 if smoke() else 1_500_000
+    fig5_samples = 15_000 if smoke() else 120_000
     # Figure 4: constant in J (D=1000, K=800 in the paper). The ratio is very
     # sensitive to E~ noise at K=800 ((K-1) amplification), so this cell uses
     # a large MC sample; the exact-enumeration version of Prop 3.5 is pinned
@@ -23,7 +26,7 @@ def run() -> None:
     ratios = []
     for a in (20, 60, 100, 140, 180):
         r = theory.variance_ratio(D, f, a, K, method="mc",
-                                  n_samples=1_500_000, seed=a)
+                                  n_samples=fig4_samples, seed=a)
         ratios.append(r)
     us = (time.perf_counter() - t0) * 1e6 / len(ratios)
     spread = (max(ratios) - min(ratios)) / min(ratios)
@@ -39,7 +42,7 @@ def run() -> None:
             t0 = time.perf_counter()
             for K in (D // 4, D // 2, D):
                 r = theory.variance_ratio(D, f, f // 2, K, method="mc",
-                                          n_samples=120_000, seed=f + K)
+                                          n_samples=fig5_samples, seed=f + K)
                 row.append((K, r))
             us = (time.perf_counter() - t0) * 1e6 / len(row)
             emit(f"fig5_ratio_D{D}_f{f}", us,

@@ -1,0 +1,161 @@
+"""Signing-path benchmark: dense int8 vs bit-packed vs jnp, sparse gather vs
+window kernels, fused sign->pack, and the autotuner.
+
+Each row is also returned as a dict so ``run.py`` can write the
+machine-readable ``BENCH_sign.json`` artifact (the perf trajectory across
+PRs).  The headline row is ``sparse_speedup``: the dispatchable compiled
+sparse path (``windows`` on CPU — the jnp twin of the Pallas window-min
+kernel; the kernel itself on TPU) against the O(B*nnz*K) jnp gather path at
+the ROADMAP shape D=65536, nnz=0.01*D, K=1024, expected >= 3x.
+
+Pallas interpret-mode timings are *correctness-path* numbers only, so
+interpret kernels are timed at a tiny shape (and skipped entirely outside
+smoke for the big shapes — interpreting a 65k-wide grid is pointless).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cminhash
+from repro.core.permutations import make_two_permutations
+from repro.kernels import autotune, dispatch, ops
+
+from .common import emit, smoke, time_call
+
+ROWS: list[dict] = []
+
+
+def _row(name: str, us: float, **derived) -> None:
+    ROWS.append({"name": name, "us_per_call": round(us, 1), **derived})
+    emit(name, us, "|".join(f"{k}={v}" for k, v in derived.items()))
+
+
+def _sparse_inputs(rng, b, d, nnz):
+    if b * nnz <= d:      # replace=False draws b*nnz values from [0, d)
+        idx = rng.choice(d, (b, nnz), replace=False).astype(np.int32)
+    else:
+        idx = rng.integers(0, d, (b, nnz), np.int32)
+    return jnp.asarray(np.sort(idx, axis=1))
+
+
+def _bench_dense(rng) -> None:
+    shapes = ([(4, 512, 64, 0.1)] if smoke()
+              else [(8, 4096, 256, 0.05), (8, 16384, 1024, 0.01)])
+    for b, d, k, dens in shapes:
+        v = jnp.asarray((rng.random((b, d)) < dens).astype(np.int8))
+        _, pi = make_two_permutations(jax.random.PRNGKey(0), d)
+        tag = f"B{b}_D{d}_K{k}"
+        us_ref = time_call(lambda: dispatch.signatures_dense(
+            v, pi, k, impl="ref"))
+        _row(f"sign_dense_ref_{tag}", us_ref,
+             docs_per_s=round(b / us_ref * 1e6))
+        us_auto = time_call(lambda: dispatch.signatures_dense(v, pi, k))
+        _row(f"sign_dense_auto_{tag}", us_auto,
+             impl=dispatch.select_dense_impl(d),
+             docs_per_s=round(b / us_auto * 1e6))
+        # fused sign->pack vs sign-then-pack (b-bit ingest form)
+        for pb in (8,):
+            us_fuse = time_call(lambda: dispatch.signatures_dense(
+                v, pi, k, pack_b=pb))
+            us_two = time_call(lambda: ops.pack_codes(
+                dispatch.signatures_dense(v, pi, k), pb))
+            _row(f"sign_pack_fused_b{pb}_{tag}", us_fuse,
+                 two_step_us=round(us_two, 1))
+        # interpret-mode kernels are correctness paths on CPU: time only tiny
+        if d <= 1024:
+            for impl in ("int8", "packed"):
+                us = time_call(lambda: dispatch.signatures_dense(
+                    v, pi, k, impl=impl))
+                _row(f"sign_dense_{impl}_interp_{tag}", us, interpret=True)
+
+
+def _bench_sparse(rng) -> None:
+    if smoke():
+        b, d, k = 4, 2048, 128
+    else:
+        b, d, k = 8, 65536, 1024          # the ROADMAP open-item shape
+    nnz = max(1, int(0.01 * d))
+    idx = _sparse_inputs(rng, b, d, nnz)
+    _, pi = make_two_permutations(jax.random.PRNGKey(0), d)
+    tag = f"B{b}_D{d}_K{k}_nnz{nnz}"
+
+    # the fast side is whatever impl="auto" actually dispatches (windows on
+    # CPU, the Pallas kernel on TPU) so the artifact tracks the real path;
+    # autotune its tile first — the dispatchable path is the tuned one
+    fast_impl = dispatch.select_sparse_impl()
+    autotune.measure(
+        "sparse_windows" if fast_impl == "windows" else "sparse_pallas",
+        b, d, k, nnz=nnz, iters=1 if smoke() else 3)
+
+    # interleaved min-of-N: this box is shared, so medians of separate
+    # blocks measure scheduler bursts, not the kernels
+    gather_fn = lambda: dispatch.signatures_sparse(idx, pi, k, impl="gather")
+    win_fn = lambda: dispatch.signatures_sparse(idx, pi, k, impl=fast_impl)
+    for fn in (gather_fn, win_fn):
+        jax.block_until_ready(fn())
+    t_gather, t_win = [], []
+    import time as _time
+    for _ in range(1 if smoke() else 16):
+        for fn, out in ((gather_fn, t_gather), (win_fn, t_win)):
+            t0 = _time.perf_counter()
+            jax.block_until_ready(fn())
+            out.append(_time.perf_counter() - t0)
+    us_gather, us_win = min(t_gather) * 1e6, min(t_win) * 1e6
+    speedup = us_gather / us_win
+    _row(f"sign_sparse_gather_{tag}", us_gather,
+         docs_per_s=round(b / us_gather * 1e6))
+    _row(f"sign_sparse_{fast_impl}_{tag}", us_win,
+         docs_per_s=round(b / us_win * 1e6))
+    _row("sparse_speedup", us_win, speedup=round(speedup, 2),
+         baseline="gather", shape=tag, impl=fast_impl)
+
+    # the Pallas sparse kernel itself: tiny shape, interpret (correctness
+    # path off-TPU; compiled path on TPU picks it via impl="auto")
+    ti = _sparse_inputs(rng, 2, 512, 16)
+    _, tpi = make_two_permutations(jax.random.PRNGKey(1), 512)
+    us_pl = time_call(lambda: dispatch.signatures_sparse(
+        ti, tpi, 64, impl="pallas"))
+    _row("sign_sparse_pallas_interp_B2_D512_K64", us_pl, interpret=True)
+
+    got = np.asarray(dispatch.signatures_sparse(idx, pi, k, impl="windows"))
+    want = np.asarray(cminhash.cminhash_sparse(idx, pi, k))
+    assert np.array_equal(got, want), "windows path diverged from gather"
+
+
+def _bench_autotune() -> None:
+    b, d, k = (4, 2048, 128) if smoke() else (8, 65536, 1024)
+    nnz = max(1, d // 100)
+    best = autotune.measure("sparse_windows", b, d, k, nnz=nnz,
+                            iters=1 if smoke() else 3)
+    _row("autotune_sparse_windows", 0.0, winner=str(best),
+         cached=str(autotune.cached("sparse_windows", b, d, k, nnz=nnz)))
+    idx = _sparse_inputs(np.random.default_rng(2), b, d, nnz)
+    _, pi = make_two_permutations(jax.random.PRNGKey(0), d)
+    us = time_call(lambda: dispatch.signatures_sparse(idx, pi, k))
+    _row("sign_sparse_autotuned", us, blocks=str(best))
+
+
+def run() -> list[dict]:
+    ROWS.clear()
+    rng = np.random.default_rng(0)
+    _bench_dense(rng)
+    _bench_sparse(rng)
+    _bench_autotune()
+    return list(ROWS)
+
+
+if __name__ == "__main__":                 # python -m benchmarks.bench_sign
+    import json
+    import os
+
+    rows = run()
+    name = "BENCH_sign.smoke.json" if smoke() else "BENCH_sign.json"
+    out = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       name)
+    with open(out, "w") as f:
+        json.dump({"smoke": smoke(), "rows": rows}, f, indent=1)
+    print(f"wrote {out}")

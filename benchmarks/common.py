@@ -1,14 +1,33 @@
-"""Shared benchmark utilities: timing + CSV row emission."""
+"""Shared benchmark utilities: timing, CSV row emission, smoke mode.
+
+Smoke mode (``REPRO_BENCH_SMOKE=1`` or ``run.py --smoke``) is the CI setting:
+1 warmup + 1 timed iteration and tiny shapes, so the benchmark *scripts* run
+end-to-end on every push (dispatch/autotune regressions fail fast) without
+timing flakiness mattering — numbers from smoke runs are not comparable.
+"""
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 
+_SMOKE_ENV = "REPRO_BENCH_SMOKE"
+
+
+def smoke() -> bool:
+    return os.environ.get(_SMOKE_ENV, "") not in ("", "0")
+
+
+def set_smoke(on: bool = True) -> None:
+    os.environ[_SMOKE_ENV] = "1" if on else "0"
+
 
 def time_call(fn, *args, warmup: int = 1, iters: int = 5) -> float:
     """Median wall time (us) of a jax callable (blocks on results)."""
+    if smoke():
+        warmup, iters = 1, 1
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []

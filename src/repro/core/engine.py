@@ -1,9 +1,15 @@
 """SketchEngine — mesh-sharded batched C-MinHash signature computation.
 
 The production entry point for the data pipeline: holds the paper's two
-permutations, dispatches dense batches to the Pallas kernel (sharded over the
-``data`` mesh axis; pi/sigma replicated — they are the whole point: two vectors,
-trivially replicable even at D = 2^30) and sparse batches to the gather path.
+permutations and routes every batch — dense or sparse — through the kernel
+dispatch layer (``kernels.dispatch``: shape/backend implementation selection
+plus autotuned block sizes), sharded over the ``data`` mesh axis with
+pi/sigma replicated — they are the whole point: two vectors, trivially
+replicable even at D = 2^30.
+
+``sign_packed`` is the fused ingest path: signatures leave the kernel already
+truncated to b bits and packed into uint32 words (``SketchStore.add_packed``
+consumes them), so the (B, K) int32 form never reaches the host.
 """
 
 from __future__ import annotations
@@ -15,8 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..kernels import ops
-from . import cminhash
+from ..kernels import dispatch
 from .permutations import make_two_permutations
 
 Array = jax.Array
@@ -27,9 +32,11 @@ class SketchConfig:
     d: int                      # universe size (shingle space)
     k: int = 1024               # signature length
     use_sigma: bool = True      # C-MinHash-(sigma,pi) vs -(0,pi)
-    use_kernel: bool = True     # Pallas kernel vs jnp reference
-    block_b: int = 8
-    block_d: int = 256
+    use_kernel: bool = True     # kernel dispatch vs jnp reference paths
+    block_b: int | None = None  # None -> autotune cache / heuristic
+    block_d: int | None = None  # (dense kernels)
+    block_j: int | None = None  # (sparse kernels: nnz tile)
+    autotune_measure: bool = False  # sweep-and-cache blocks on cache miss
     seed: int = 0
 
 
@@ -55,20 +62,42 @@ class SketchEngine:
         else:
             self._data_sharding = None
 
-    def signatures_dense(self, v: Array) -> Array:
-        """(B, D) binary -> (B, K) int32 signatures."""
+    def signatures_dense(self, v: Array, *, pack_b: int | None = None) -> Array:
+        """(B, D) binary -> (B, K) int32 signatures ((B, W) uint32 packed
+        words when ``pack_b`` is set — the fused sign->pack kernel path)."""
         if self._data_sharding is not None:
             v = jax.device_put(v, self._data_sharding)
-        return ops.cminhash_signatures(
+        return dispatch.signatures_dense(
             v, self.pi, self.cfg.k, self.sigma,
-            use_kernel=self.cfg.use_kernel,
-            block_b=self.cfg.block_b, block_d=self.cfg.block_d)
+            use_kernel=self.cfg.use_kernel, pack_b=pack_b,
+            block_b=self.cfg.block_b, block_d=self.cfg.block_d,
+            autotune_measure=self.cfg.autotune_measure)
 
-    def signatures_sparse(self, idx: Array) -> Array:
-        """(B, NNZ) padded index lists -> (B, K) int32 signatures."""
+    def signatures_sparse(self, idx: Array, *,
+                          pack_b: int | None = None) -> Array:
+        """(B, NNZ) padded index lists -> (B, K) int32 signatures ((B, W)
+        uint32 packed words when ``pack_b`` is set)."""
         if self._data_sharding is not None:
             idx = jax.device_put(idx, self._data_sharding)
-        return cminhash.cminhash_sparse(idx, self.pi, self.cfg.k, self.sigma)
+        return dispatch.signatures_sparse(
+            idx, self.pi, self.cfg.k, self.sigma,
+            use_kernel=self.cfg.use_kernel, pack_b=pack_b,
+            block_b=self.cfg.block_b, block_j=self.cfg.block_j,
+            autotune_measure=self.cfg.autotune_measure)
+
+    def sign_packed(self, data: Array, b: int, *,
+                    layout: str = "dense") -> Array:
+        """Fused sign->pack ingest: data -> (B, ceil(K/(32/b))) uint32 words.
+
+        Bit-identical to ``pack_codes(signatures_*(data), b)`` but the dense
+        kernel path packs in its epilogue — no (B, K) int32 on the host.
+        Feed the result to ``SketchStore.add_packed``.
+        """
+        if layout == "dense":
+            return self.signatures_dense(data, pack_b=b)
+        if layout == "sparse":
+            return self.signatures_sparse(data, pack_b=b)
+        raise ValueError(f"unknown layout {layout!r}")
 
     @functools.cached_property
     def parameter_bytes(self) -> int:

@@ -15,6 +15,21 @@ import numpy as np
 _BASE = np.uint64(0x9E3779B97F4A7C15)  # Fibonacci hashing multiplier
 
 
+def _poly_fold(rows: np.ndarray) -> np.ndarray:
+    """(B, n_bands, R) uint64 -> (B, n_bands) uint64 polynomial-fold keys.
+
+    The one definition of the bucket hash: ``band_hashes`` folds codes,
+    ``band_hashes_packed`` folds words — sharing this keeps their b=32
+    interop guarantee (identical keys) structural rather than coincidental.
+    """
+    with np.errstate(over="ignore"):
+        h = np.zeros(rows.shape[:2], np.uint64)
+        for r in range(rows.shape[2]):
+            h = h * _BASE + rows[:, :, r] + np.uint64(1)
+            h ^= h >> np.uint64(29)
+    return h
+
+
 def band_hashes(sig, n_bands: int, rows_per_band: int) -> np.ndarray:
     """(B, K) signatures -> (B, n_bands) uint64 bucket keys.
 
@@ -25,13 +40,27 @@ def band_hashes(sig, n_bands: int, rows_per_band: int) -> np.ndarray:
     b, k = sig.shape
     if n_bands * rows_per_band != k:
         raise ValueError(f"K={k} != n_bands*rows_per_band={n_bands * rows_per_band}")
-    rows = sig.reshape(b, n_bands, rows_per_band).astype(np.uint64)
-    with np.errstate(over="ignore"):
-        h = np.zeros((b, n_bands), np.uint64)
-        for r in range(rows_per_band):
-            h = h * _BASE + rows[:, :, r] + np.uint64(1)
-            h ^= h >> np.uint64(29)
-    return h
+    return _poly_fold(sig.reshape(b, n_bands, rows_per_band).astype(np.uint64))
+
+
+def band_hashes_packed(words: np.ndarray, n_bands: int) -> np.ndarray:
+    """(B, W) b-bit packed uint32 words -> (B, n_bands) uint64 bucket keys.
+
+    The packed-ingest twin of ``band_hashes``: requires band boundaries to
+    fall on word boundaries (W % n_bands == 0, i.e. rows_per_band a multiple
+    of 32/b) and folds each band's words with the same polynomial as
+    ``band_hashes`` folds codes.  At b = 32 a word IS the (non-negative)
+    signature value, so keys are identical to ``band_hashes`` on the raw
+    signatures — packed and unpacked ingest interoperate exactly.  At b < 32
+    keys are self-consistent (index and query must both use the packed path).
+    """
+    words = np.asarray(words)
+    b, w = words.shape
+    if w % n_bands:
+        raise ValueError(
+            f"W={w} not divisible by n_bands={n_bands}: rows_per_band must "
+            "be a multiple of 32/b for packed banding")
+    return _poly_fold(words.reshape(b, n_bands, w // n_bands).astype(np.uint64))
 
 
 def candidate_pairs(bands: np.ndarray) -> set[tuple[int, int]]:

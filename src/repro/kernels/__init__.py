@@ -1,3 +1,9 @@
-"""Pallas TPU kernels (validated on CPU via interpret=True) + jnp oracles."""
+"""Pallas TPU kernels (validated on CPU via interpret=True) + jnp oracles.
 
-from .ops import cminhash_signatures, collision_counts, estimated_jaccard_matrix  # noqa: F401
+Signing requests route through ``dispatch`` (see README.md for the policy);
+``autotune`` owns block-size selection; ``packfmt`` is the b-bit packed-code
+format shared by the store and the fused in-kernel sign->pack epilogue.
+"""
+
+from .ops import (cminhash_signatures, cminhash_signatures_packed,  # noqa: F401
+                  collision_counts, estimated_jaccard_matrix)

@@ -1,0 +1,224 @@
+"""Block-size autotuner for the signing kernels.
+
+Keys: ``(kind, backend, pow2-bucketed B/D/K)`` — shapes are bucketed to the
+next power of two so one measurement serves a whole shape class.  Kinds:
+
+* ``dense_int8``   -> {block_b, block_d}   (kernels.cminhash_kernel)
+* ``dense_packed`` -> {block_b, block_d}   (kernels.cminhash_packed)
+* ``sparse_pallas``-> {block_b, block_j}   (kernels.cminhash_sparse, Pallas)
+* ``sparse_windows``-> {block_j}           (kernels.cminhash_sparse, jnp)
+
+Cache semantics (documented contract, see kernels/README.md):
+
+* ``recommend()`` never measures.  It returns the cached winner when one
+  exists, else a shape-clamped heuristic default.  This is what the engine
+  and dispatch layer call on every signing request — cheap and deterministic.
+* ``measure()`` times every valid candidate on synthetic data of the request
+  shape (median of ``iters`` after ``warmup``), stores the winner in the
+  in-process cache, and appends it to the JSON file at
+  ``$REPRO_AUTOTUNE_CACHE`` (if set) so later processes start warm.
+* The JSON file is loaded lazily once per path and merged under the
+  in-process entries; ``clear_cache()`` forgets both (the file is untouched).
+
+Benchmarks (and ``SketchConfig(autotune_measure=True)``) run ``measure``;
+everything else rides the cache.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+
+KINDS = ("dense_int8", "dense_packed", "sparse_pallas", "sparse_windows")
+
+_DEFAULTS: dict[str, dict[str, int]] = {
+    "dense_int8": {"block_b": 8, "block_d": 256},
+    "dense_packed": {"block_b": 8, "block_d": 256},
+    "sparse_pallas": {"block_b": 8, "block_j": 32},
+    "sparse_windows": {"block_j": 64},
+}
+
+_CANDIDATES: dict[str, tuple[dict[str, int], ...]] = {
+    "dense_int8": tuple({"block_b": bb, "block_d": bd}
+                        for bb in (4, 8, 16) for bd in (128, 256, 512)),
+    "dense_packed": tuple({"block_b": bb, "block_d": bd}
+                          for bb in (4, 8, 16) for bd in (128, 256, 512)),
+    "sparse_pallas": tuple({"block_b": bb, "block_j": bj}
+                           for bb in (4, 8, 16) for bj in (16, 32, 64)),
+    "sparse_windows": tuple({"block_j": bj}
+                            for bj in (16, 32, 64, 128, 256)),
+}
+
+_cache: dict[str, dict[str, int]] = {}
+_loaded_paths: set[str] = set()
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+def cache_key(kind: str, b: int, d: int, k: int, backend: str,
+              nnz: int = 0) -> str:
+    if kind not in KINDS:
+        raise ValueError(f"unknown kind {kind!r} (want one of {KINDS})")
+    key = f"{kind}:{backend}:B{_pow2(b)}:D{_pow2(d)}:K{_pow2(k)}"
+    if kind.startswith("sparse"):
+        # nnz is the dimension block_j tiles — a winner at one density is
+        # not a winner at another, so it belongs in the key
+        key += f":N{_pow2(max(nnz, 1))}"
+    return key
+
+
+def _cache_path() -> str | None:
+    return os.environ.get(CACHE_ENV) or None
+
+
+def _load_file(path: str) -> None:
+    if path in _loaded_paths:
+        return
+    _loaded_paths.add(path)
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return
+    for key, blocks in data.items():
+        _cache.setdefault(key, {str(n): int(v) for n, v in blocks.items()})
+
+
+def _save_file(path: str) -> None:
+    try:
+        existing: dict[str, Any] = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                existing = json.load(f)
+        existing.update(_cache)
+        with open(path, "w") as f:
+            json.dump(existing, f, indent=1, sort_keys=True)
+    except (OSError, ValueError):
+        pass                        # cache persistence is best-effort
+
+
+def clear_cache() -> None:
+    """Forget in-process entries and loaded-file markers (file untouched)."""
+    _cache.clear()
+    _loaded_paths.clear()
+
+
+def cached(kind: str, b: int, d: int, k: int, backend: str | None = None,
+           nnz: int = 0) -> dict[str, int] | None:
+    backend = backend or jax.default_backend()
+    path = _cache_path()
+    if path:
+        _load_file(path)
+    hit = _cache.get(cache_key(kind, b, d, k, backend, nnz))
+    return dict(hit) if hit else None
+
+
+def _clamp(kind: str, blocks: dict[str, int], b: int, d: int,
+           k: int) -> dict[str, int]:
+    out = dict(blocks)
+    if "block_b" in out:
+        out["block_b"] = max(1, min(out["block_b"], _pow2(b)))
+    if "block_d" in out:
+        # dense kernels want block_d % 32 == 0 (bit-packed words / pack
+        # epilogue); never clamp below 32
+        out["block_d"] = max(32, min(out["block_d"], _pow2(max(d, 32))))
+    if "block_j" in out:
+        out["block_j"] = max(1, out["block_j"])
+    return out
+
+
+def recommend(kind: str, b: int, d: int, k: int,
+              backend: str | None = None, nnz: int = 0) -> dict[str, int]:
+    """Cached winner if one exists, else a shape-clamped heuristic. Never
+    measures."""
+    backend = backend or jax.default_backend()
+    hit = cached(kind, b, d, k, backend, nnz)
+    if hit is not None:
+        return _clamp(kind, hit, b, d, k)
+    return _clamp(kind, _DEFAULTS[kind], b, d, k)
+
+
+def _make_runner(kind: str, b: int, d: int, k: int, nnz: int,
+                 seed: int) -> Callable[[dict[str, int]], Any]:
+    """Build synthetic inputs once; return blocks -> timed thunk."""
+    import jax.numpy as jnp
+
+    from ..core.permutations import make_two_permutations
+    from . import dispatch
+
+    rng = np.random.default_rng(seed)
+    _, pi = make_two_permutations(jax.random.PRNGKey(seed), d)
+    impl = {"dense_int8": "int8", "dense_packed": "packed",
+            "sparse_pallas": "pallas", "sparse_windows": "windows"}[kind]
+
+    if kind.startswith("dense"):
+        dens = (nnz / d) if nnz else 0.05
+        v = jnp.asarray((rng.random((b, d)) < dens).astype(np.int8))
+        return lambda blocks: (lambda: dispatch.signatures_dense(
+            v, pi, k, impl=impl, **blocks))
+    nnz = max(1, nnz or int(0.05 * d))
+    idx = jnp.asarray(np.sort(
+        rng.integers(0, d, (b, nnz)).astype(np.int32), axis=1))
+    return lambda blocks: (lambda: dispatch.signatures_sparse(
+        idx, pi, k, impl=impl, **blocks))
+
+
+def _valid(kind: str, blocks: dict[str, int], b: int, d: int, k: int) -> bool:
+    return not ("block_d" in blocks and blocks["block_d"] % 32)
+
+
+def measure(kind: str, b: int, d: int, k: int, *, backend: str | None = None,
+            nnz: int = 0, warmup: int = 1, iters: int = 3,
+            candidates: tuple[dict[str, int], ...] | None = None,
+            seed: int = 0, force: bool = False) -> dict[str, int]:
+    """Sweep-and-cache on miss: time every valid candidate at this shape and
+    cache the winner — but return a cached winner immediately when one exists
+    (``force=True`` re-sweeps), so engines with ``autotune_measure`` pay for
+    the sweep once per shape class, not once per batch.
+
+    ``nnz`` sizes the synthetic sparse inputs (and enters the sparse cache
+    key); 0 means a 5% density default."""
+    backend = backend or jax.default_backend()
+    if not force:
+        hit = cached(kind, b, d, k, backend, nnz)
+        if hit is not None:
+            return hit
+    runner = _make_runner(kind, b, d, k, nnz, seed)
+    best: tuple[float, dict[str, int]] | None = None
+    seen: set[tuple] = set()     # clamping can collapse candidates; time once
+    for cand in (candidates or _CANDIDATES[kind]):
+        blocks = _clamp(kind, cand, b, d, k)
+        key = tuple(sorted(blocks.items()))
+        if key in seen or not _valid(kind, blocks, b, d, k):
+            continue
+        seen.add(key)
+        fn = runner(blocks)
+        try:
+            for _ in range(warmup):
+                jax.block_until_ready(fn())
+            times = []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                times.append(time.perf_counter() - t0)
+            elapsed = sorted(times)[len(times) // 2]
+        except Exception:
+            continue                       # candidate invalid on this backend
+        if best is None or elapsed < best[0]:
+            best = (elapsed, blocks)
+    if best is None:
+        return recommend(kind, b, d, k, backend, nnz)
+    _cache[cache_key(kind, b, d, k, backend, nnz)] = dict(best[1])
+    path = _cache_path()
+    if path:
+        _save_file(path)
+    return dict(best[1])

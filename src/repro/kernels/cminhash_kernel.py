@@ -26,17 +26,26 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .packfmt import pack_block, pack_geometry
 
 Array = jax.Array
 SENTINEL = jnp.iinfo(jnp.int32).max
 
 
-def _kernel(pi_ref, vlo_ref, vhi_ref, out_ref, *, bt: int, dt: int, off: int):
+def _kernel(pi_ref, vlo_ref, vhi_ref, out_ref, acc_scratch=None, *, bt: int,
+            dt: int, off: int, nd: int = 0, k: int = 0,
+            pack_b: int | None = None):
     d_idx = pl.program_id(2)
+    # plain mode: accumulate straight into the int32 output block.  fused
+    # pack mode: accumulate in a VMEM scratch (re-initialized whenever the
+    # innermost data dim restarts) so the only HBM output is the packed words
+    acc_ref = out_ref if pack_b is None else acc_scratch
 
     @pl.when(d_idx == 0)
     def _init():
-        out_ref[...] = jnp.full_like(out_ref, SENTINEL)
+        acc_ref[...] = jnp.full(acc_ref.shape, SENTINEL, acc_ref.dtype)
 
     band = jnp.concatenate([vlo_ref[...], vhi_ref[...]], axis=1)  # (Bt, 2*Dt) int8
     pvals = pi_ref[...]  # (Dt,) int32
@@ -46,21 +55,37 @@ def _kernel(pi_ref, vlo_ref, vhi_ref, out_ref, *, bt: int, dt: int, off: int):
         masked = jnp.where(window > 0, pvals[None, :], SENTINEL)
         return acc.at[:, k_local].min(jnp.min(masked, axis=1))
 
-    out_ref[...] = jax.lax.fori_loop(0, dt, body, out_ref[...])
+    acc_ref[...] = jax.lax.fori_loop(0, dt, body, acc_ref[...])
+
+    if pack_b is not None:
+        # fused sign->pack epilogue: once the min over the last data block is
+        # folded in, truncate to b bits and pack — the (B, K) int32 form never
+        # leaves VMEM.  (program_id must be read outside the pl.when closure:
+        # interpret mode does not rewrite it inside cond branches.)
+        col0 = pl.program_id(1) * dt
+
+        @pl.when(d_idx == nd - 1)
+        def _pack():
+            out_ref[...] = pack_block(acc_ref[...], col0, k=k, b=pack_b)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "shift_offset", "block_b", "block_d", "interpret"),
+    static_argnames=("k", "shift_offset", "block_b", "block_d", "interpret",
+                     "pack_b"),
 )
 def cminhash_pallas(v: Array, pi: Array, k: int, *, shift_offset: int = 1,
                     block_b: int = 8, block_d: int = 256,
-                    interpret: bool = True) -> Array:
+                    interpret: bool = True,
+                    pack_b: int | None = None) -> Array:
     """Dense C-MinHash signatures via the tiled Pallas kernel.
 
     v: (B, D) int8/bool/int32 binary data (already sigma-permuted by the caller);
     pi: (D,) int32 permutation values. Returns (B, K) int32 with column q holding
-    the paper's h_{q+shift_offset}.
+    the paper's h_{q+shift_offset} — unless ``pack_b`` is set, in which case the
+    fused epilogue truncates each hash to its lowest pack_b bits and returns the
+    (B, ceil(K / (32/pack_b))) uint32 packed words directly (bit-identical to
+    sign-then-``packfmt.pack_codes``); requires block_d % (32/pack_b) == 0.
     """
     if shift_offset not in (0, 1):
         raise ValueError("shift_offset must be 0 or 1 (band fits 2 blocks)")
@@ -90,16 +115,33 @@ def cminhash_pallas(v: Array, pi: Array, k: int, *, shift_offset: int = 1,
     vpad = vpad.at[:b, d:d + wrap].set(mask[:, :wrap])
 
     grid = (nb, nk, nd)
-    out = pl.pallas_call(
-        functools.partial(_kernel, bt=bt, dt=dt, off=shift_offset),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((dt,), lambda i, j, dd: (dd,)),
-            pl.BlockSpec((bt, dt), lambda i, j, dd: (i, dd + j)),
-            pl.BlockSpec((bt, dt), lambda i, j, dd: (i, dd + j + 1)),
-        ],
-        out_specs=pl.BlockSpec((bt, kt), lambda i, j, dd: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((nb * bt, nk * kt), jnp.int32),
+    in_specs = [
+        pl.BlockSpec((dt,), lambda i, j, dd: (dd,)),
+        pl.BlockSpec((bt, dt), lambda i, j, dd: (i, dd + j)),
+        pl.BlockSpec((bt, dt), lambda i, j, dd: (i, dd + j + 1)),
+    ]
+    sig_spec = pl.BlockSpec((bt, kt), lambda i, j, dd: (i, j))
+    sig_shape = jax.ShapeDtypeStruct((nb * bt, nk * kt), jnp.int32)
+
+    if pack_b is None:
+        out = pl.pallas_call(
+            functools.partial(_kernel, bt=bt, dt=dt, off=shift_offset),
+            grid=grid, in_specs=in_specs, out_specs=sig_spec,
+            out_shape=sig_shape, interpret=interpret,
+        )(pi_pad, vpad, vpad)
+        return out[:b, :k]
+
+    cpw, n_words = pack_geometry(k, pack_b)
+    if kt % cpw:
+        raise ValueError(
+            f"block_d={dt} must be a multiple of {cpw} for pack_b={pack_b}")
+    words = pl.pallas_call(
+        functools.partial(_kernel, bt=bt, dt=dt, off=shift_offset, nd=nd,
+                          k=k, pack_b=pack_b),
+        grid=grid, in_specs=in_specs,
+        out_specs=pl.BlockSpec((bt, kt // cpw), lambda i, j, dd: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb * bt, nk * kt // cpw), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((bt, kt), jnp.int32)],
         interpret=interpret,
     )(pi_pad, vpad, vpad)
-    return out[:b, :k]
+    return words[:b, :n_words]

@@ -19,30 +19,42 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .packfmt import pack_block, pack_geometry
 
 Array = jax.Array
 SENTINEL = jnp.iinfo(jnp.int32).max
 
 
 def pack_bits(v: Array) -> Array:
-    """(B, D) binary -> (B, ceil(D/32)) uint32, position 32w+j at bit j."""
+    """(B, D) binary -> (B, ceil(D/32)) uint32, position 32w+j at bit j.
+
+    Folded as 32 strided slices OR'd into the word lanes — no (B, nw, 32)
+    int32 intermediate (the shift+sum formulation materialized one, 32x the
+    output size, before reducing).
+    """
     b, d = v.shape
     nw = -(-d // 32)
     pad = nw * 32 - d
     bits = (v > 0).astype(jnp.uint32)
     if pad:
         bits = jnp.pad(bits, ((0, 0), (0, pad)))
-    bits = bits.reshape(b, nw, 32)
-    shifts = jnp.arange(32, dtype=jnp.uint32)
-    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+    return functools.reduce(
+        jnp.bitwise_or,
+        [bits[:, j::32] << jnp.uint32(j) for j in range(32)])
 
 
-def _kernel(pi_ref, wlo_ref, whi_ref, out_ref, *, bt: int, dt: int, off: int):
+def _kernel(pi_ref, wlo_ref, whi_ref, out_ref, acc_scratch=None, *, bt: int,
+            dt: int, off: int, nd: int = 0, k: int = 0,
+            pack_b: int | None = None):
     d_idx = pl.program_id(2)
+    # see cminhash_kernel._kernel: fused pack accumulates in VMEM scratch
+    acc_ref = out_ref if pack_b is None else acc_scratch
 
     @pl.when(d_idx == 0)
     def _init():
-        out_ref[...] = jnp.full_like(out_ref, SENTINEL)
+        acc_ref[...] = jnp.full(acc_ref.shape, SENTINEL, acc_ref.dtype)
 
     words = jnp.concatenate([wlo_ref[...], whi_ref[...]], axis=1)  # (Bt, 2*Dt/32)
     pvals = pi_ref[...]                                            # (Dt,) int32
@@ -64,17 +76,31 @@ def _kernel(pi_ref, wlo_ref, whi_ref, out_ref, *, bt: int, dt: int, off: int):
         masked = jnp.where(mask, pvals[None, :], SENTINEL)
         return acc.at[:, k_local].min(jnp.min(masked, axis=1))
 
-    out_ref[...] = jax.lax.fori_loop(0, dt, body, out_ref[...])
+    acc_ref[...] = jax.lax.fori_loop(0, dt, body, acc_ref[...])
+
+    if pack_b is not None:
+        # fused sign->pack epilogue (see cminhash_kernel._kernel)
+        col0 = pl.program_id(1) * dt
+
+        @pl.when(d_idx == nd - 1)
+        def _pack():
+            out_ref[...] = pack_block(acc_ref[...], col0, k=k, b=pack_b)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "shift_offset", "block_b", "block_d", "interpret"),
+    static_argnames=("k", "shift_offset", "block_b", "block_d", "interpret",
+                     "pack_b"),
 )
 def cminhash_packed_pallas(v: Array, pi: Array, k: int, *,
                            shift_offset: int = 1, block_b: int = 8,
-                           block_d: int = 256, interpret: bool = True) -> Array:
-    """Signatures from a dense binary (B, D) via the bit-packed kernel."""
+                           block_d: int = 256, interpret: bool = True,
+                           pack_b: int | None = None) -> Array:
+    """Signatures from a dense binary (B, D) via the bit-packed kernel.
+
+    With ``pack_b`` set, returns (B, ceil(K / (32/pack_b))) uint32 packed
+    words from the fused truncate+pack epilogue instead of (B, K) int32.
+    """
     if shift_offset not in (0, 1):
         raise ValueError("shift_offset must be 0 or 1")
     if block_d % 32:
@@ -101,16 +127,30 @@ def cminhash_packed_pallas(v: Array, pi: Array, k: int, *,
 
     wpb = dt // 32  # words per block
     grid = (nb, nk, nd)
-    out = pl.pallas_call(
-        functools.partial(_kernel, bt=bt, dt=dt, off=shift_offset),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((dt,), lambda i, j, dd: (dd,)),
-            pl.BlockSpec((bt, wpb), lambda i, j, dd: (i, dd + j)),
-            pl.BlockSpec((bt, wpb), lambda i, j, dd: (i, dd + j + 1)),
-        ],
-        out_specs=pl.BlockSpec((bt, kt), lambda i, j, dd: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((nb * bt, nk * kt), jnp.int32),
+    in_specs = [
+        pl.BlockSpec((dt,), lambda i, j, dd: (dd,)),
+        pl.BlockSpec((bt, wpb), lambda i, j, dd: (i, dd + j)),
+        pl.BlockSpec((bt, wpb), lambda i, j, dd: (i, dd + j + 1)),
+    ]
+    sig_spec = pl.BlockSpec((bt, kt), lambda i, j, dd: (i, j))
+    sig_shape = jax.ShapeDtypeStruct((nb * bt, nk * kt), jnp.int32)
+
+    if pack_b is None:
+        out = pl.pallas_call(
+            functools.partial(_kernel, bt=bt, dt=dt, off=shift_offset),
+            grid=grid, in_specs=in_specs, out_specs=sig_spec,
+            out_shape=sig_shape, interpret=interpret,
+        )(pi_pad, words, words)
+        return out[:b, :k]
+
+    cpw, n_words = pack_geometry(k, pack_b)  # kt % cpw == 0: kt % 32 == 0
+    owords = pl.pallas_call(
+        functools.partial(_kernel, bt=bt, dt=dt, off=shift_offset, nd=nd,
+                          k=k, pack_b=pack_b),
+        grid=grid, in_specs=in_specs,
+        out_specs=pl.BlockSpec((bt, kt // cpw), lambda i, j, dd: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb * bt, nk * kt // cpw), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((bt, kt), jnp.int32)],
         interpret=interpret,
     )(pi_pad, words, words)
-    return out[:b, :k]
+    return owords[:b, :n_words]

@@ -1,0 +1,209 @@
+"""Sparse C-MinHash via contiguous window-mins (the fast signing path).
+
+The gather formulation (``core.cminhash.cminhash_sparse``) computes
+``h_q = min_j pi[(idx_j - q - off) mod D]`` with an O(B * nnz * K) random
+gather into pi.  Reversing pi turns every hash index into a *contiguous*
+window read:
+
+    rev[m]      = pi[(D - 1 - m) mod D]
+    s_j         = (D - 1 - idx_j + off) mod D
+    h_q         = min_j rev_ext[s_j + q],      q = 0..K-1
+
+where ``rev_ext`` is rev extended circularly by the window length.  Each
+nonzero contributes one length-K contiguous slice of a VMEM/cache-resident
+table, elementwise-min accumulated — scatter-free, gather-free, exactly the
+layout a TPU VPU (and a CPU cache line) wants.  Invalid (padding) entries are
+pointed at a SENTINEL region of the table, so no validity masking happens in
+the hot loop.
+
+Two implementations of the same scan share the precompute helpers:
+
+* ``cminhash_sparse_windows`` — pure compiled jnp (vmapped dynamic slices);
+  the dispatchable fast path on CPU and the oracle-equivalent of the kernel.
+* ``cminhash_sparse_pallas`` — the Pallas kernel: grid over (batch tiles,
+  nnz tiles), window table resident in VMEM, fori_loop of per-row dynamic
+  slices min-folded into the output block.  On TPU the window length is
+  padded to the 128-lane geometry; ``interpret=True`` runs it on CPU.
+
+Both are bit-identical to the gather path (same exact integer mins).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+def _check(d: int, k: int) -> None:
+    if k > d:
+        raise ValueError(f"C-MinHash requires K <= D (got K={k}, D={d})")
+
+
+def window_table(pi: Array, wl: int, dtype=jnp.int32, sentinel=SENTINEL) -> Array:
+    """(D,) pi -> (D + 2*wl - 1,) reversed/extended window table.
+
+    Layout: ``t[m] = pi[(D - 1 - m) mod D]`` for ``m < D + wl - 1`` (circular
+    extension so any valid start s < D can read a full wl-window), then wl
+    ``sentinel`` entries.  ``invalid_start(d, wl)`` indexes a window that reads
+    only sentinel — padding rows/columns resolve to the sentinel with zero
+    branching in the scan.  ``sentinel`` must be >= every pi value so it can
+    never win a min against real data.
+    """
+    d = pi.shape[0]
+    rev = pi[::-1].astype(dtype)
+    reps = -(-(d + wl - 1) // d)
+    ext = jnp.tile(rev, reps)[: d + wl - 1]
+    return jnp.concatenate([ext, jnp.full((wl,), sentinel, dtype)])
+
+
+def invalid_start(d: int, wl: int) -> int:
+    """Window start whose wl-window lies wholly in the SENTINEL region."""
+    return d + wl - 1
+
+
+def window_starts(idx: Array, d: int, wl: int, *, shift_offset: int) -> Array:
+    """(B, NNZ) padded index lists -> (B, NNZ) int32 window starts.
+
+    Valid entries map to ``(D - 1 - idx + off) mod D``; padding (< 0) maps to
+    the SENTINEL window start.
+    """
+    s = (d - 1 - idx + shift_offset) % d
+    return jnp.where(idx >= 0, s, invalid_start(d, wl)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "shift_offset", "block_j"))
+def cminhash_sparse_windows(idx: Array, pi: Array, k: int,
+                            sigma: Array | None = None, *,
+                            shift_offset: int = 1, block_j: int = 64) -> Array:
+    """Compiled-jnp window-min scan: (B, NNZ) index lists -> (B, K) int32.
+
+    Same data movement as the Pallas kernel (contiguous slices of the window
+    table, min-folded over nnz tiles of ``block_j``), expressed as vmapped
+    ``dynamic_slice`` under ``lax.scan`` so XLA emits block copies instead of
+    elementwise gathers.  This is the dispatchable fast path on CPU.
+
+    Two details carry the speedup (profiled on CPU):
+
+    * the per-tile fold is a *halving tree* of elementwise ``minimum`` over
+      contiguous (B, jt/2, K) halves — ``jnp.min(axis=1)`` reduces along a
+      stride-K axis and is several times slower than the whole gather;
+    * when D <= 2^16 every pi value fits uint16, halving the table and fold
+      traffic.  The uint16 sentinel (0xFFFF) is the max representable value,
+      so it can never beat a real min — only rows with no valid index at all
+      need the explicit SENTINEL fixup at the end.
+
+    Results are bit-identical to the gather path in all cases.
+    """
+    d = pi.shape[0]
+    _check(d, k)
+    if sigma is not None:
+        from ..core.permutations import apply_permutation_sparse
+        idx = apply_permutation_sparse(idx, sigma)
+    b, nnz = idx.shape
+    narrow = d <= (1 << 16)
+    dtype, sentinel = ((jnp.uint16, (1 << 16) - 1) if narrow
+                       else (jnp.int32, SENTINEL))
+    table = window_table(pi, k, dtype, sentinel)
+    s = window_starts(idx, d, k, shift_offset=shift_offset)
+
+    # power-of-two tile so the halving tree stays exact halves
+    jt = 1 << max(0, min(block_j, nnz).bit_length() - 1)
+    nj = -(-nnz // jt)
+    if nj * jt != nnz:
+        s = jnp.pad(s, ((0, 0), (0, nj * jt - nnz)),
+                    constant_values=invalid_start(d, k))
+
+    slice_one = lambda st: jax.lax.dynamic_slice(table, (st,), (k,))
+    windows = jax.vmap(jax.vmap(slice_one))          # (B, jt) starts -> (B, jt, K)
+
+    def step(acc, s_tile):                           # s_tile: (B, jt)
+        w = windows(s_tile)
+        while w.shape[1] > 1:                        # contiguous SIMD halves
+            half = w.shape[1] // 2
+            w = jnp.minimum(w[:, :half], w[:, half:])
+        return jnp.minimum(acc, w[:, 0]), None
+
+    acc0 = jnp.full((b, k), sentinel, dtype)
+    s_tiles = s.reshape(b, nj, jt).transpose(1, 0, 2)
+    acc, _ = jax.lax.scan(step, acc0, s_tiles)
+    out = acc.astype(jnp.int32)
+    if narrow:                    # empty rows: uint16 sentinel -> int32 one
+        out = jnp.where((idx >= 0).any(axis=1)[:, None], out, SENTINEL)
+    return out
+
+
+def _kernel(table_ref, s_ref, out_ref, *, bt: int, jt: int, wl: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, SENTINEL)
+
+    table = table_ref[...]                            # (L,) int32
+    sv = s_ref[...]                                   # (bt, jt) int32
+
+    def body(jl, acc):
+        col = jax.lax.dynamic_slice(sv, (0, jl), (bt, 1))[:, 0]
+        win = jnp.stack([
+            jax.lax.dynamic_slice(table, (col[bl],), (wl,))
+            for bl in range(bt)])                     # (bt, wl)
+        return jnp.minimum(acc, win)
+
+    out_ref[...] = jax.lax.fori_loop(0, jt, body, out_ref[...])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "shift_offset", "block_b", "block_j", "interpret"),
+)
+def cminhash_sparse_pallas(idx: Array, pi: Array, k: int, *,
+                           shift_offset: int = 1, block_b: int = 8,
+                           block_j: int = 32, interpret: bool = True) -> Array:
+    """Sparse C-MinHash signatures via the tiled Pallas window-min kernel.
+
+    idx: (B, NNZ) padded index lists (entries < 0 are padding), already
+    sigma-permuted by the caller; pi: (D,) int32.  Returns (B, K) int32.
+
+    Tiling: grid (batch tiles, nnz tiles); the window table is one
+    VMEM-resident block (D + 2*Kp words — ~0.5 MB at D = 65536, K = 1024), so
+    the only HBM traffic per tile is the (Bt, Jt) start block and the output
+    min-accumulation; all K circulant shifts come from that single resident
+    table.  Window length is padded to the 128-lane geometry.
+    """
+    if shift_offset not in (0, 1):
+        raise ValueError("shift_offset must be 0 or 1")
+    d = pi.shape[0]
+    _check(d, k)
+    b, nnz = idx.shape
+    bt = max(1, block_b)
+    jt = max(1, block_j)
+    wl = -(-k // 128) * 128                           # lane-padded window
+    nb, nj = -(-b // bt), -(-nnz // jt)
+
+    table = window_table(pi, wl)
+    lp = -(-table.shape[0] // 128) * 128
+    if lp != table.shape[0]:                          # lane-pad; values unread
+        table = jnp.pad(table, (0, lp - table.shape[0]),
+                        constant_values=SENTINEL)
+
+    s0 = invalid_start(d, wl)
+    s = jnp.full((nb * bt, nj * jt), s0, jnp.int32)
+    s = s.at[:b, :nnz].set(window_starts(idx, d, wl,
+                                         shift_offset=shift_offset))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bt=bt, jt=jt, wl=wl),
+        grid=(nb, nj),
+        in_specs=[
+            pl.BlockSpec((lp,), lambda i, j: (0,)),
+            pl.BlockSpec((bt, jt), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, wl), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb * bt, wl), jnp.int32),
+        interpret=interpret,
+    )(table, s)
+    return out[:b, :k]

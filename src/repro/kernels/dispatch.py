@@ -1,0 +1,162 @@
+"""Kernel dispatch for the signing hot path (the one front door).
+
+Every signature request — dense or sparse, engine or pipeline — lands here and
+is routed to one of the implementations by shape and backend:
+
+dense (B, D) binary:
+  * ``int8``    — kernels.cminhash_kernel (int8 circulant bands in VMEM)
+  * ``packed``  — kernels.cminhash_packed (uint32 bit-packed bands: 8x less
+                  HBM per band; wins once the band stream dominates, i.e.
+                  large D on a real accelerator)
+  * ``ref``     — kernels.ref jnp oracle (also the fastest dense path on CPU,
+                  where Pallas runs in interpret mode)
+sparse (B, NNZ) padded index lists:
+  * ``pallas``  — kernels.cminhash_sparse Pallas window-min kernel (TPU)
+  * ``windows`` — same algorithm as compiled jnp (the CPU fast path)
+  * ``gather``  — core.cminhash.cminhash_sparse O(B*nnz*K) gather loop
+                  (the economical oracle; what ``use_kernel=False`` selects)
+
+``impl="auto"`` policy: on TPU, dense picks ``packed`` when the band stream
+is large enough to be HBM-bound (D >= PACKED_MIN_D) else ``int8``; sparse
+picks ``pallas``.  On CPU (no real accelerator) the compiled-jnp twins win:
+dense ``ref``, sparse ``windows``.  ``use_kernel=False`` always forces the
+reference formulation (``ref``/``gather``).
+
+Block sizes left as ``None`` are resolved through the autotuner
+(``autotune.recommend``: cached winner else heuristic; pass
+``autotune_measure=True`` to sweep-and-cache on first miss).
+
+``pack_b`` fuses the b-bit truncate+pack epilogue into the dense kernels
+(packed words come straight off the kernel); non-kernel paths reach the same
+bit-identical result via ``packfmt.pack_codes``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import cminhash
+from ..core.permutations import apply_permutation_dense, apply_permutation_sparse
+from . import autotune, packfmt, ref
+from .cminhash_kernel import cminhash_pallas
+from .cminhash_packed import cminhash_packed_pallas
+from .cminhash_sparse import cminhash_sparse_pallas, cminhash_sparse_windows
+
+Array = jax.Array
+
+# below this universe size the packed kernel's 8x band-stream saving cannot
+# beat its funnel-shift overhead (see kernels/README.md napkin math)
+PACKED_MIN_D = 16384
+
+DENSE_IMPLS = ("auto", "int8", "packed", "ref")
+SPARSE_IMPLS = ("auto", "pallas", "windows", "gather")
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def _interpret() -> bool:
+    return _backend() != "tpu"
+
+
+def select_dense_impl(d: int, *, use_kernel: bool = True,
+                      backend: str | None = None) -> str:
+    """Resolve impl="auto" for a dense (B, D) signing request."""
+    if not use_kernel:
+        return "ref"
+    backend = backend or _backend()
+    if backend != "tpu":
+        return "ref"        # compiled jnp beats interpret-mode Pallas on CPU
+    return "packed" if d >= PACKED_MIN_D else "int8"
+
+
+def select_sparse_impl(*, use_kernel: bool = True,
+                       backend: str | None = None) -> str:
+    """Resolve impl="auto" for a sparse signing request."""
+    if not use_kernel:
+        return "gather"
+    backend = backend or _backend()
+    return "pallas" if backend == "tpu" else "windows"
+
+
+def _resolve_blocks(kind: str, b: int, d: int, k: int,
+                    overrides: dict[str, int | None],
+                    autotune_measure: bool, nnz: int = 0) -> dict[str, int]:
+    if all(v is not None for v in overrides.values()):
+        return {n: int(v) for n, v in overrides.items()}  # fully pinned
+    if autotune_measure:
+        blocks = autotune.measure(kind, b, d, k, nnz=nnz)
+    else:
+        blocks = autotune.recommend(kind, b, d, k, nnz=nnz)
+    blocks = {n: blocks[n] for n in overrides}
+    blocks.update({n: int(v) for n, v in overrides.items() if v is not None})
+    return blocks
+
+
+def signatures_dense(v: Array, pi: Array, k: int, sigma: Array | None = None,
+                     *, shift_offset: int = 1, use_kernel: bool = True,
+                     impl: str = "auto", block_b: int | None = None,
+                     block_d: int | None = None, pack_b: int | None = None,
+                     autotune_measure: bool = False) -> Array:
+    """(B, D) binary -> (B, K) int32 signatures, or (B, W) uint32 packed
+    words when ``pack_b`` is set."""
+    if impl not in DENSE_IMPLS:
+        raise ValueError(f"impl must be one of {DENSE_IMPLS} (got {impl!r})")
+    if impl == "auto":
+        impl = select_dense_impl(v.shape[-1], use_kernel=use_kernel)
+    if sigma is not None:
+        v = apply_permutation_dense(v, sigma)
+    b, d = v.shape
+
+    if impl == "ref":
+        sig = ref.cminhash_dense_ref(v, pi, k, shift_offset=shift_offset)
+        return sig if pack_b is None else packfmt.pack_codes(sig, pack_b)
+
+    kind = "dense_int8" if impl == "int8" else "dense_packed"
+    blocks = _resolve_blocks(kind, b, d, k,
+                             {"block_b": block_b, "block_d": block_d},
+                             autotune_measure)
+    if pack_b is not None:
+        cpw = 32 // pack_b
+        if blocks["block_d"] % cpw:    # keep word boundaries on block edges
+            blocks["block_d"] = -(-blocks["block_d"] // cpw) * cpw
+    kernel = cminhash_pallas if impl == "int8" else cminhash_packed_pallas
+    return kernel(v, pi, k, shift_offset=shift_offset,
+                  interpret=_interpret(), pack_b=pack_b, **blocks)
+
+
+def signatures_sparse(idx: Array, pi: Array, k: int,
+                      sigma: Array | None = None, *, shift_offset: int = 1,
+                      use_kernel: bool = True, impl: str = "auto",
+                      block_b: int | None = None, block_j: int | None = None,
+                      pack_b: int | None = None,
+                      autotune_measure: bool = False) -> Array:
+    """(B, NNZ) padded index lists -> (B, K) int32 signatures, or (B, W)
+    uint32 packed words when ``pack_b`` is set (sign + device-side pack;
+    the sparse kernels have no fused epilogue yet)."""
+    if impl not in SPARSE_IMPLS:
+        raise ValueError(f"impl must be one of {SPARSE_IMPLS} (got {impl!r})")
+    if impl == "auto":
+        impl = select_sparse_impl(use_kernel=use_kernel)
+    if sigma is not None:
+        idx = apply_permutation_sparse(idx, sigma)
+    b, nnz = idx.shape
+    d = pi.shape[0]
+
+    if impl == "gather":
+        sig = cminhash.cminhash_sparse(idx, pi, k, shift_offset=shift_offset)
+    elif impl == "windows":
+        blocks = _resolve_blocks("sparse_windows", b, d, k,
+                                 {"block_j": block_j}, autotune_measure,
+                                 nnz=nnz)
+        sig = cminhash_sparse_windows(idx, pi, k, shift_offset=shift_offset,
+                                      **blocks)
+    else:
+        blocks = _resolve_blocks("sparse_pallas", b, d, k,
+                                 {"block_b": block_b, "block_j": block_j},
+                                 autotune_measure, nnz=nnz)
+        sig = cminhash_sparse_pallas(idx, pi, k, shift_offset=shift_offset,
+                                     interpret=_interpret(), **blocks)
+    return sig if pack_b is None else packfmt.pack_codes(sig, pack_b)

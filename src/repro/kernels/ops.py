@@ -1,27 +1,26 @@
 """Public jit'd wrappers around the Pallas kernels with reference fallbacks.
 
-`use_kernel` policy: Pallas kernels run compiled on TPU and in interpret mode on
-CPU (functionally identical, slower).  The wrappers keep signature semantics
-identical across paths so callers (engine, dedup pipeline, benchmarks) can switch
-freely; tests sweep shapes/dtypes asserting kernel == ref.
+Signing requests route through ``kernels.dispatch`` (shape/backend kernel
+selection + autotuned block sizes); pairwise scoring wraps the collision
+kernel directly.  The wrappers keep signature semantics identical across
+paths so callers (engine, dedup pipeline, benchmarks) can switch freely;
+tests sweep shapes/dtypes asserting kernel == ref.
+
+The b-bit packed-code format lives in ``kernels.packfmt``; its geometry,
+``pack_codes`` and ``unpack_codes`` are re-exported here for the store/planner.
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
-from ..core.bbit import lowest_b_bits
-from ..core.permutations import apply_permutation_dense
-from . import ref
-from .cminhash_kernel import cminhash_pallas
+from . import dispatch, ref
 from .collision_kernel import collision_count_pallas
+from .packfmt import (PACK_BITS, pack_codes,  # noqa: F401  (re-exports)
+                      pack_geometry, unpack_codes)
 
 Array = jax.Array
-
-PACK_BITS = (1, 2, 4, 8, 16, 32)  # b values whose codes tile an int32 word
 
 
 def _interpret() -> bool:
@@ -30,15 +29,30 @@ def _interpret() -> bool:
 
 def cminhash_signatures(v: Array, pi: Array, k: int, sigma: Array | None = None,
                         *, shift_offset: int = 1, use_kernel: bool = True,
-                        block_b: int = 8, block_d: int = 256) -> Array:
-    """Dense C-MinHash signatures (B, D) -> (B, K) via kernel or oracle."""
-    if sigma is not None:
-        v = apply_permutation_dense(v, sigma)
-    if use_kernel:
-        return cminhash_pallas(v, pi, k, shift_offset=shift_offset,
-                               block_b=block_b, block_d=block_d,
-                               interpret=_interpret())
-    return ref.cminhash_dense_ref(v, pi, k, shift_offset=shift_offset)
+                        block_b: int | None = None, block_d: int | None = None,
+                        impl: str = "auto") -> Array:
+    """Dense C-MinHash signatures (B, D) -> (B, K) via the dispatch layer.
+
+    ``use_kernel=True`` lets dispatch pick the kernel by shape/backend (pass
+    ``impl`` to force one); ``use_kernel=False`` is the jnp oracle.  Blocks
+    left as None come from the autotune cache.
+    """
+    if use_kernel and impl == "auto" and (block_b, block_d) != (None, None):
+        impl = "int8"   # explicit block request pins the historical kernel
+    return dispatch.signatures_dense(
+        v, pi, k, sigma, shift_offset=shift_offset, use_kernel=use_kernel,
+        impl=impl, block_b=block_b, block_d=block_d)
+
+
+def cminhash_signatures_packed(v: Array, pi: Array, k: int, b: int,
+                               sigma: Array | None = None, *,
+                               shift_offset: int = 1, use_kernel: bool = True,
+                               impl: str = "auto") -> Array:
+    """Fused sign->pack: (B, D) binary -> (B, ceil(K/(32/b))) uint32 words,
+    bit-identical to ``pack_codes(cminhash_signatures(...), b)``."""
+    return dispatch.signatures_dense(
+        v, pi, k, sigma, shift_offset=shift_offset, use_kernel=use_kernel,
+        impl=impl, pack_b=b)
 
 
 def collision_counts(sig_q: Array, sig_n: Array, *, use_kernel: bool = True,
@@ -58,48 +72,8 @@ def estimated_jaccard_matrix(sig_q: Array, sig_n: Array, **kw) -> Array:
     return collision_counts(sig_q, sig_n, **kw).astype(jnp.float32) / k
 
 
-# -- b-bit packed codes (SketchStore storage format) -------------------------
-#
-# K codes of b bits each are packed little-endian into ceil(K / (32/b)) uint32
-# words: code j of a row lives at bit (j % (32/b)) * b of word j // (32/b).
-# b == 32 is a bitcast (one code per word, codes == signatures), so scoring on
-# packed words at b = 32 is bit-exact with scoring the raw signatures.
-
-def _pack_geometry(k: int, b: int) -> tuple[int, int]:
-    if b not in PACK_BITS:
-        raise ValueError(f"b must be one of {PACK_BITS} (got {b})")
-    codes_per_word = 32 // b
-    return codes_per_word, -(-k // codes_per_word)
-
-
-@functools.partial(jax.jit, static_argnames=("b",))
-def pack_codes(sig: Array, b: int) -> Array:
-    """(B, K) int32 signatures -> (B, W) uint32 b-bit packed words."""
-    bsz, k = sig.shape
-    cpw, n_words = _pack_geometry(k, b)
-    if b == 32:
-        return jax.lax.bitcast_convert_type(sig, jnp.uint32)
-    codes = lowest_b_bits(sig, b).astype(jnp.uint32)
-    pad = n_words * cpw - k
-    if pad:
-        codes = jnp.pad(codes, ((0, 0), (0, pad)))
-    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * b)
-    return jnp.sum(codes.reshape(bsz, n_words, cpw) << shifts, axis=-1,
-                   dtype=jnp.uint32)
-
-
-@functools.partial(jax.jit, static_argnames=("k", "b"))
-def unpack_codes(words: Array, k: int, b: int) -> Array:
-    """(B, W) uint32 packed words -> (B, K) int32 codes in [0, 2^b)."""
-    bsz = words.shape[0]
-    cpw, n_words = _pack_geometry(k, b)
-    if b == 32:
-        return jax.lax.bitcast_convert_type(words, jnp.int32)[:, :k]
-    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * b)
-    mask = jnp.uint32((1 << b) - 1)
-    codes = (words[:, :, None] >> shifts) & mask
-    return codes.reshape(bsz, n_words * cpw)[:, :k].astype(jnp.int32)
-
+# -- b-bit packed-code scoring (SketchStore storage format) ------------------
+# (format + pack/unpack live in kernels.packfmt; re-exported above)
 
 def packed_collision_counts(words_q: Array, words_n: Array, k: int, b: int,
                             *, unpack_block_n: int = 16384, **kw) -> Array:

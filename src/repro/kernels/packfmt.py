@@ -1,0 +1,86 @@
+"""b-bit packed-code format: the one definition of the storage layout.
+
+K codes of b bits each are packed little-endian into ceil(K / (32/b)) uint32
+words: code j of a row lives at bit (j % (32/b)) * b of word j // (32/b).
+b == 32 is a bitcast (one code per word, codes == signatures), so scoring on
+packed words at b = 32 is bit-exact with scoring the raw signatures.
+
+This module is a leaf (jax-only imports) so both the host-side packers
+(``pack_codes``/``unpack_codes``) and the in-kernel fused epilogue
+(``pack_block``) share the exact same geometry — the fused sign->pack path in
+the dense Pallas kernels is asserted bit-identical to sign-then-``pack_codes``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+PACK_BITS = (1, 2, 4, 8, 16, 32)  # b values whose codes tile an int32 word
+
+
+def pack_geometry(k: int, b: int) -> tuple[int, int]:
+    """-> (codes_per_word, n_words) for K b-bit codes."""
+    if b not in PACK_BITS:
+        raise ValueError(f"b must be one of {PACK_BITS} (got {b})")
+    codes_per_word = 32 // b
+    return codes_per_word, -(-k // codes_per_word)
+
+
+@functools.partial(jax.jit, static_argnames=("b",))
+def pack_codes(sig: Array, b: int) -> Array:
+    """(B, K) int32 signatures -> (B, W) uint32 b-bit packed words."""
+    bsz, k = sig.shape
+    cpw, n_words = pack_geometry(k, b)
+    if b == 32:
+        return jax.lax.bitcast_convert_type(sig, jnp.uint32)
+    codes = (sig & ((1 << b) - 1)).astype(jnp.uint32)
+    pad = n_words * cpw - k
+    if pad:
+        codes = jnp.pad(codes, ((0, 0), (0, pad)))
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * b)
+    return jnp.sum(codes.reshape(bsz, n_words, cpw) << shifts, axis=-1,
+                   dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "b"))
+def unpack_codes(words: Array, k: int, b: int) -> Array:
+    """(B, W) uint32 packed words -> (B, K) int32 codes in [0, 2^b)."""
+    bsz = words.shape[0]
+    cpw, n_words = pack_geometry(k, b)
+    if b == 32:
+        return jax.lax.bitcast_convert_type(words, jnp.int32)[:, :k]
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * b)
+    mask = jnp.uint32((1 << b) - 1)
+    codes = (words[:, :, None] >> shifts) & mask
+    return codes.reshape(bsz, n_words * cpw)[:, :k].astype(jnp.int32)
+
+
+def pack_block(acc: Array, col0, *, k: int, b: int) -> Array:
+    """In-kernel fused epilogue: (Bt, Kt) int32 mins -> (Bt, Kt*b/32) words.
+
+    ``col0`` is the global hash column of ``acc[:, 0]`` (may be traced);
+    columns at global index >= k are zeroed to match ``pack_codes`` padding.
+    Kt must be a multiple of 32/b.  Uses a static bitwise-OR fold — no
+    (Bt, W, cpw) sum intermediate — safe inside Pallas (2D iota only).
+    """
+    bt, kt = acc.shape
+    cpw, _ = pack_geometry(kt, b)  # validates b; kt stands in for k here
+    if kt % cpw:
+        raise ValueError(f"block K width {kt} not a multiple of {cpw}")
+    col = jax.lax.broadcasted_iota(jnp.int32, (bt, kt), 1) + col0
+    if b == 32:
+        codes = jax.lax.bitcast_convert_type(acc, jnp.uint32)
+    else:
+        codes = (acc & ((1 << b) - 1)).astype(jnp.uint32)
+    codes = jnp.where(col < k, codes, jnp.uint32(0))
+    if cpw == 1:
+        return codes
+    grp = codes.reshape(bt, kt // cpw, cpw)
+    return functools.reduce(
+        jnp.bitwise_or,
+        [grp[:, :, i] << jnp.uint32(i * b) for i in range(cpw)])

@@ -93,6 +93,23 @@ class PackedSignatureBuffer:
         self._size += b
         return ids
 
+    def append_packed(self, words) -> np.ndarray:
+        """Append an already-packed (B, W) uint32 word batch (the fused
+        sign->pack ingest path: no (B, K) int32 ever exists host-side);
+        returns new ids.  Bit-identical storage to ``append(sigs)`` when
+        ``words == pack_codes(sigs, b)``."""
+        words = np.asarray(words, np.uint32)
+        if words.ndim != 2 or words.shape[1] != self.cfg.n_words:
+            raise ValueError(
+                f"expected (B, {self.cfg.n_words}) packed words, "
+                f"got {words.shape}")
+        b = words.shape[0]
+        self._grow_to(self._size + b)
+        self._words[:, self._size: self._size + b] = words.T
+        ids = np.arange(self._size, self._size + b, dtype=np.int64)
+        self._size += b
+        return ids
+
     # -- reads -------------------------------------------------------------
     def gather(self, ids) -> np.ndarray:
         """(C,) ids -> (C, W) uint32 packed rows for the scoring kernel."""

@@ -53,8 +53,16 @@ class QueryPlanner:
         cand_rows: (Q, C) int64 candidate ids per query, -1 padded.
         Returns (ids (Q, top_k) int64 [-1 pad], scores (Q, top_k) float32).
         """
+        qwords = np.asarray(ops.pack_codes(jnp.asarray(qsigs, jnp.int32),
+                                           self.buffer.cfg.b))
+        return self.topk_packed(qwords, cand_rows, top_k)
+
+    def topk_packed(self, qwords: np.ndarray, cand_rows: np.ndarray,
+                    top_k: int) -> tuple[np.ndarray, np.ndarray]:
+        """``topk`` for already-packed (Q, W) uint32 query words (the fused
+        sign->pack serving path — no (Q, K) int32 is ever formed)."""
         n = self.buffer.size
-        q = qsigs.shape[0]
+        q = qwords.shape[0]
         ids = np.full((q, top_k), -1, np.int64)
         scores = np.zeros((q, top_k), np.float32)
         if n == 0:
@@ -65,7 +73,7 @@ class QueryPlanner:
             rows = cand_rows[ne]
             union_ids = dedupe_union(rows)
             ids[ne], scores[ne] = self._rank(
-                qsigs[ne], union_ids, candidate_mask(rows, union_ids), top_k)
+                qwords[ne], union_ids, candidate_mask(rows, union_ids), top_k)
         em = np.flatnonzero(empty)
         if len(em):
             # brute force only the no-candidate rows over the whole index —
@@ -73,20 +81,20 @@ class QueryPlanner:
             # the rows that do have candidates (mask=None: every column
             # counts, no (Q', N) bool allocation)
             union_ids = np.arange(n, dtype=np.int64)
-            ids[em], scores[em] = self._rank(qsigs[em], union_ids, None,
+            ids[em], scores[em] = self._rank(qwords[em], union_ids, None,
                                              top_k)
         return ids, scores
 
-    def _rank(self, qsigs: np.ndarray, union_ids: np.ndarray,
+    def _rank(self, qwords: np.ndarray, union_ids: np.ndarray,
               mask: np.ndarray | None,
               top_k: int) -> tuple[np.ndarray, np.ndarray]:
         """Score (Q', U) and select top-k per row from the masked columns
         (mask=None: all columns are candidates)."""
         cfg = self.buffer.cfg
-        q = qsigs.shape[0]
-        qwords = ops.pack_codes(jnp.asarray(qsigs, jnp.int32), cfg.b)
+        q = qwords.shape[0]
         est = np.asarray(ops.packed_estimated_jaccard_matrix(
-            qwords, self.buffer.gather(union_ids), cfg.k, cfg.b))  # (Q', U)
+            jnp.asarray(qwords), self.buffer.gather(union_ids),
+            cfg.k, cfg.b))  # (Q', U)
         scored = est if mask is None else np.where(mask, est, NEG_INF)
         kk = min(top_k, scored.shape[1])
         # stable sort + ascending union_ids => ties broken by smaller id,

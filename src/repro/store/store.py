@@ -19,7 +19,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.lsh import band_hashes
+from repro.core.lsh import band_hashes, band_hashes_packed
 
 from .packed import PackedConfig, PackedSignatureBuffer
 from .planner import QueryPlanner
@@ -73,6 +73,10 @@ class SketchStore:
                                     max_probes=cfg.max_probes)
         self.planner = QueryPlanner(self.buffer)
         self.n_rebuilds = 0
+        # at b < 32 sig-keys (band_hashes over raw signatures) and packed
+        # keys (band_hashes_packed over truncated words) differ; the first
+        # write pins the mode and mixing raises instead of silently missing
+        self._band_mode: str | None = None
 
     # -- sizing ------------------------------------------------------------
     @property
@@ -84,9 +88,25 @@ class SketchStore:
     def n_spilled(self) -> int:
         return self.table.n_spilled
 
+    def _band_keys(self, mode: str, *, write: bool) -> None:
+        """Pin/check the banding key mode ('sig' or 'packed'); b = 32 keys
+        are identical either way so anything goes."""
+        if self.cfg.b == 32:
+            return
+        if self._band_mode is None:
+            if write:
+                self._band_mode = mode
+        elif self._band_mode != mode:
+            raise ValueError(
+                f"this b={self.cfg.b} store was built with "
+                f"{self._band_mode!r} band keys; mixing in {mode!r} keys "
+                "would silently miss candidates (b < 32 truncates before "
+                "hashing). Use one ingest/query mode per store.")
+
     # -- writes ------------------------------------------------------------
     def add(self, sigs: np.ndarray) -> np.ndarray:
         """Append + index a (B, K) int32 signature batch; returns new ids."""
+        self._band_keys("sig", write=True)
         sigs = np.asarray(sigs)
         if self.cfg.store_signatures:
             ids = self.buffer.append(sigs)
@@ -95,6 +115,33 @@ class SketchStore:
                             self.table.n_items + len(sigs), dtype=np.int64)
         hashes = band_hashes(sigs, self.cfg.n_bands, self.cfg.rows_per_band)
         self.table.insert(hashes, ids)
+        if self.cfg.auto_rebuild:
+            self._maybe_rebuild()
+        return ids
+
+    def add_packed(self, words: np.ndarray) -> np.ndarray:
+        """Append + index a (B, W) uint32 packed-word batch; returns new ids.
+
+        The fused sign->pack ingest path (``SketchEngine.sign_packed``): the
+        packed words are stored verbatim and band-indexed directly from the
+        words (``band_hashes_packed``) — no (B, K) int32 is ever formed.  At
+        b = 32 this interoperates exactly with ``add``/``query`` (identical
+        bucket keys); at b < 32 the whole store must use the packed path
+        (requires rows_per_band % (32/b) == 0 so bands are word-aligned).
+        """
+        self._check_packed_banding()
+        self._band_keys("packed", write=True)
+        words = np.asarray(words, np.uint32)
+        if self.cfg.store_signatures:
+            ids = self.buffer.append_packed(words)
+        else:
+            if words.shape[1] != self.buffer.cfg.n_words:
+                raise ValueError(
+                    f"expected (B, {self.buffer.cfg.n_words}) words, "
+                    f"got {words.shape}")
+            ids = np.arange(self.table.n_items,
+                            self.table.n_items + len(words), dtype=np.int64)
+        self.table.insert(band_hashes_packed(words, self.cfg.n_bands), ids)
         if self.cfg.auto_rebuild:
             self._maybe_rebuild()
         return ids
@@ -146,6 +193,7 @@ class SketchStore:
         Includes spilled entries whose recorded (band, key) matches the
         query, so the candidate set equals the reference dict-bucket path
         even with a non-empty spill."""
+        self._band_keys("sig", write=False)
         qsigs = np.asarray(qsigs)
         hashes = band_hashes(qsigs, self.cfg.n_bands, self.cfg.rows_per_band)
         cand = self.table.lookup(hashes).astype(np.int64)
@@ -167,11 +215,48 @@ class SketchStore:
         qsigs = np.asarray(qsigs)
         return self.planner.topk(qsigs, self.candidate_rows(qsigs), top_k)
 
+    def _check_packed_banding(self) -> None:
+        # W % n_bands == 0 alone can pass on misaligned configs (pad words
+        # absorbing the mismatch), so enforce the real invariant: every band
+        # starts on a word boundary
+        cpw = 32 // self.cfg.b
+        if self.cfg.rows_per_band % cpw:
+            raise ValueError(
+                f"packed banding needs rows_per_band % (32/b) == 0 (got "
+                f"rows_per_band={self.cfg.rows_per_band}, b={self.cfg.b}); "
+                "use add()/query() on raw signatures instead")
+
+    def candidate_rows_packed(self, qwords: np.ndarray) -> np.ndarray:
+        """``candidate_rows`` for (Q, W) packed query words (fused path)."""
+        self._check_packed_banding()
+        self._band_keys("packed", write=False)
+        qwords = np.asarray(qwords, np.uint32)
+        hashes = band_hashes_packed(qwords, self.cfg.n_bands)
+        cand = self.table.lookup(hashes).astype(np.int64)
+        spill = self.table.spilled_candidates(hashes)
+        if spill.shape[1]:
+            cand = np.concatenate([cand, spill], axis=1)
+        return cand
+
+    def query_packed(self, qwords: np.ndarray,
+                     top_k: int = 10) -> tuple[np.ndarray, np.ndarray]:
+        """``query`` for already-packed (Q, W) uint32 query words — the
+        serving twin of ``add_packed``; at b = 32 results are identical to
+        ``query`` on the raw signatures."""
+        if not self.cfg.store_signatures:
+            raise RuntimeError("query_packed() needs stored signatures; this "
+                               "store was built with store_signatures=False")
+        qwords = np.asarray(qwords, np.uint32)
+        return self.planner.topk_packed(
+            qwords, self.candidate_rows_packed(qwords), top_k)
+
     def candidate_pairs(self) -> np.ndarray:
         """(P, 2) int64 unique (i, j), i < j, sharing >= 1 band bucket."""
         return self.table.candidate_pairs()
 
     # -- snapshots ---------------------------------------------------------
+    _BAND_MODES = (None, "sig", "packed")   # snapshot encoding of _band_mode
+
     def save(self, path: str) -> None:
         cfg = self.cfg
         np.savez(path,
@@ -180,7 +265,9 @@ class SketchStore:
                                  self.table.n_slots, self.table.bucket_width,
                                  self.table.max_probes, cfg.capacity,
                                  int(cfg.auto_rebuild),
-                                 int(cfg.store_signatures)], np.int64),
+                                 int(cfg.store_signatures),
+                                 self._BAND_MODES.index(self._band_mode)],
+                                np.int64),
                  cfg_thresholds=np.asarray([cfg.rebuild_load_factor,
                                             cfg.rebuild_spill_fraction]),
                  table_hashes=self.table.hash_log)
@@ -188,7 +275,7 @@ class SketchStore:
     @classmethod
     def load(cls, path: str) -> "SketchStore":
         with np.load(path) as z:
-            k, nb, r, b, ns, w, p, cap, auto, keep = \
+            k, nb, r, b, ns, w, p, cap, auto, keep, *mode = \
                 (int(x) for x in z["cfg"])
             load_f, spill_f = (float(x) for x in z["cfg_thresholds"])
             store = cls(StoreConfig(k=k, n_bands=nb, rows_per_band=r, b=b,
@@ -197,6 +284,8 @@ class SketchStore:
                                     rebuild_spill_fraction=spill_f,
                                     auto_rebuild=bool(auto),
                                     store_signatures=bool(keep)))
+            # pre-band-mode snapshots (10-int cfg) load with mode unset
+            store._band_mode = cls._BAND_MODES[mode[0]] if mode else None
             store.buffer = PackedSignatureBuffer.from_rows(
                 store.buffer.cfg, z["words"])
             store.planner = QueryPlanner(store.buffer)

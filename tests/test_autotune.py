@@ -1,0 +1,90 @@
+"""Autotuner: cache semantics (recommend never measures; measure caches the
+winner; JSON persistence via $REPRO_AUTOTUNE_CACHE) and engine integration."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import SketchConfig, SketchEngine
+from repro.kernels import autotune
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache(monkeypatch):
+    monkeypatch.delenv(autotune.CACHE_ENV, raising=False)
+    autotune.clear_cache()
+    yield
+    autotune.clear_cache()
+
+
+def test_recommend_heuristic_on_miss():
+    blocks = autotune.recommend("dense_int8", 8, 4096, 256, backend="cpu")
+    assert set(blocks) == {"block_b", "block_d"}
+    assert blocks["block_d"] % 32 == 0
+    # clamped to the shape: tiny batch cannot get a giant batch tile
+    small = autotune.recommend("dense_int8", 1, 64, 16, backend="cpu")
+    assert small["block_b"] == 1
+    with pytest.raises(ValueError):
+        autotune.recommend("nope", 1, 1, 1, backend="cpu")
+
+
+def test_measure_caches_winner():
+    cands = ({"block_j": 4}, {"block_j": 8})
+    best = autotune.measure("sparse_windows", 2, 256, 32, candidates=cands,
+                            warmup=1, iters=1)
+    assert best in [dict(c) for c in cands]
+    assert autotune.cached("sparse_windows", 2, 256, 32) == best
+    # recommend now returns the measured winner, not the heuristic
+    assert autotune.recommend("sparse_windows", 2, 256, 32) == best
+    # bucketing: a same-pow2-class shape hits the same entry
+    assert autotune.cached("sparse_windows", 2, 200, 30) == best
+    assert autotune.cached("sparse_windows", 2, 1024, 32) is None
+    # nnz is part of the sparse key: a different density re-tunes
+    assert autotune.cached("sparse_windows", 2, 256, 32, nnz=512) is None
+    # measure() is sweep-on-MISS: a cached shape class returns immediately
+    # (different candidate list would win if it re-swept)
+    again = autotune.measure("sparse_windows", 2, 256, 32,
+                             candidates=({"block_j": 2},), warmup=0, iters=1)
+    assert again == best
+    forced = autotune.measure("sparse_windows", 2, 256, 32, force=True,
+                              candidates=({"block_j": 2},), warmup=0, iters=1)
+    assert forced == {"block_j": 2}
+
+
+def test_cache_persists_to_json(tmp_path, monkeypatch):
+    path = tmp_path / "tune.json"
+    monkeypatch.setenv(autotune.CACHE_ENV, str(path))
+    best = autotune.measure("sparse_windows", 2, 128, 16,
+                            candidates=({"block_j": 4},), warmup=0, iters=1)
+    assert best == {"block_j": 4}
+    data = json.loads(path.read_text())
+    assert any(k.startswith("sparse_windows:") for k in data)
+    # a fresh process (cleared in-memory cache) reloads the file
+    autotune.clear_cache()
+    assert autotune.cached("sparse_windows", 2, 128, 16) == best
+
+
+def test_measure_dense_kinds_tiny():
+    cands = ({"block_b": 2, "block_d": 32},)
+    for kind in ("dense_int8", "dense_packed"):
+        best = autotune.measure(kind, 2, 64, 16, candidates=cands,
+                                warmup=0, iters=1)
+        assert best == {"block_b": 2, "block_d": 32}, kind
+
+
+def test_engine_autotune_measure_populates_cache():
+    cfg = SketchConfig(d=256, k=32, autotune_measure=True, use_kernel=True,
+                       seed=0)
+    eng = SketchEngine(cfg)
+    idx = jnp.asarray(np.array([[3, 17, 200, -1]], np.int32))
+    sig = eng.signatures_sparse(idx)
+    kind = ("sparse_pallas" if jax.default_backend() == "tpu"
+            else "sparse_windows")
+    assert autotune.cached(kind, 1, 256, 32, nnz=idx.shape[1]) is not None
+    # values unchanged vs the untuned engine
+    eng2 = SketchEngine(SketchConfig(d=256, k=32, seed=0))
+    assert np.array_equal(np.asarray(sig), np.asarray(
+        eng2.signatures_sparse(idx)))

@@ -135,6 +135,64 @@ def test_pack_bits_layout():
             assert ((w[b, pos // 32] >> (pos % 32)) & 1) == v[b, pos]
 
 
+@pytest.mark.parametrize("B,D", [(2, 70), (3, 64), (1, 257), (4, 32)])
+def test_pack_bits_matches_shift_sum_formulation(B, D):
+    # regression for the OR-fold rewrite: identical to the original
+    # shift + jnp.sum reduction (which materialized a (B, nw, 32) intermediate)
+    from repro.kernels.cminhash_packed import pack_bits
+    rng = np.random.default_rng(B * D)
+    v = (rng.random((B, D)) < 0.5).astype(np.int8)
+    got = np.asarray(pack_bits(jnp.asarray(v)))
+    nw = -(-D // 32)
+    bits = np.pad((v > 0).astype(np.uint64),
+                  ((0, 0), (0, nw * 32 - D))).reshape(B, nw, 32)
+    want = np.sum(bits << np.arange(32, dtype=np.uint64),
+                  axis=-1).astype(np.uint32)
+    assert np.array_equal(got, want)
+
+
+def _sparse_from_dense(v):
+    nnz = max(1, int(v.sum(axis=1).max()))
+    idx = np.full((v.shape[0], nnz), -1, np.int32)
+    for i in range(v.shape[0]):
+        z = np.where(v[i])[0]
+        idx[i, : len(z)] = z
+    return jnp.asarray(idx)
+
+
+@pytest.mark.parametrize("B,D,K,dens", [
+    (1, 64, 1, 0.1), (2, 64, 64, 0.3), (4, 100, 37, 0.05), (3, 777, 300, 0.02),
+    (2, 300, 7, 0.05), (2, 96, 96, 0.9),
+])
+@pytest.mark.parametrize("off", [0, 1])
+def test_sparse_pallas_kernel_matches_ref(B, D, K, dens, off):
+    from repro.kernels.cminhash_sparse import cminhash_sparse_pallas
+    rng = np.random.default_rng(B * D + K)
+    v = (rng.random((B, D)) < dens).astype(np.int8)
+    _, pi = make_two_permutations(jax.random.PRNGKey(0), D)
+    got = cminhash_sparse_pallas(_sparse_from_dense(v), pi, K,
+                                 shift_offset=off, block_b=2, block_j=8,
+                                 interpret=True)
+    want = ref.cminhash_dense_ref(jnp.asarray(v), pi, K, shift_offset=off)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 4), st.integers(16, 300), st.data())
+def test_sparse_windows_property(B, D, data):
+    from repro.kernels.cminhash_sparse import cminhash_sparse_windows
+    K = data.draw(st.integers(1, D))
+    seed = data.draw(st.integers(0, 2**16))
+    dens = data.draw(st.floats(0.0, 1.0))
+    rng = np.random.default_rng(seed)
+    v = (rng.random((B, D)) < dens).astype(np.int8)
+    _, pi = make_two_permutations(jax.random.PRNGKey(seed), D)
+    got = cminhash_sparse_windows(_sparse_from_dense(v), pi, K,
+                                  block_j=data.draw(st.integers(1, 8)))
+    want = ref.cminhash_dense_ref(jnp.asarray(v), pi, K)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
 @settings(max_examples=15, deadline=None)
 @given(st.integers(1, 4), st.integers(32, 300), st.data())
 def test_packed_kernel_property(B, D, data):
