@@ -1,10 +1,18 @@
-"""SketchStore vs dict-based LSH path: index-build throughput + query QPS.
+"""SketchStore vs dict-based LSH path + the sharded serving plane.
 
 The pre-SketchStore serving path bucketed signatures with per-item Python
 ``defaultdict`` loops; this benchmark keeps that path alive as the baseline
 and measures the replacement at production-ish index sizes (default 100k
 items): build items/s, candidate-generation queries/s (the array-ops hot path
 the subsystem exists for), and end-to-end query QPS including packed scoring.
+
+The ``--shards`` axis measures the partitioned plane (`ShardedSketchStore`):
+per-S index build and end-to-end query throughput (candidate generation +
+per-shard partial top-k + ``merge_topk``), asserting S-shard answers equal
+the single-shard answers exactly.  Rows are returned for the
+``BENCH_search.json`` artifact (written by ``run.py``).
+
+Standalone:  PYTHONPATH=src python -m benchmarks.bench_search --smoke
 """
 
 from __future__ import annotations
@@ -15,7 +23,7 @@ from collections import defaultdict
 import numpy as np
 
 from repro.core.lsh import band_hashes
-from repro.store import SketchStore, StoreConfig
+from repro.store import ShardedSketchStore, SketchStore, StoreConfig
 
 from .common import emit
 
@@ -43,8 +51,33 @@ def _dict_candidates(buckets, qhashes: np.ndarray) -> list[set[int]]:
     return out
 
 
+def _timed_block(fn, iters=15):
+    """Median wall time of back-to-back calls (the serving pattern), with GC
+    paused — a multi-M-entry baseline dict makes every collection scan the
+    whole heap, swamping both measurements."""
+    import gc
+    times = []
+    gc.disable()
+    try:
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            out = fn()
+            times.append(time.perf_counter() - t0)
+    finally:
+        gc.enable()
+    return sorted(times)[len(times) // 2], out
+
+
 def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
-        n_bands: int = 32, rows_per_band: int = 4) -> None:
+        n_bands: int = 32, rows_per_band: int = 4,
+        shards: tuple[int, ...] = (2, 4)) -> list[dict]:
+    rows_out: list[dict] = []
+
+    def em(name, us, derived):
+        emit(name, us, derived)
+        rows_out.append({"name": name, "us_per_call": round(us, 1),
+                         "derived": derived})
+
     rng = np.random.default_rng(0)
     sigs = rng.integers(0, 1 << 20, (n_items, k), dtype=np.int32)
     # plant ~1% duplicate structure (clusters of <= 3) so buckets are not all
@@ -62,46 +95,30 @@ def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
     buckets = _dict_build(hashes)
     t_dict_build = time.perf_counter() - t0
 
-    def make_store():
-        return SketchStore(StoreConfig.sized_for(
+    def make_cfg():
+        return StoreConfig.sized_for(
             n_items, k=k, n_bands=n_bands, rows_per_band=rows_per_band,
-            bucket_width=4))
+            bucket_width=4)
+
     # pack_codes is shape-specialized: warm the FULL (n_items, k) trace so
     # the timed build measures steady-state throughput, not XLA compile
-    make_store().add(sigs)
-    store = make_store()
+    SketchStore(make_cfg()).add(sigs)
+    store = SketchStore(make_cfg())
     t0 = time.perf_counter()
     store.add(sigs)
     t_store_build = time.perf_counter() - t0
 
-    emit("search_build_dict", t_dict_build * 1e6,
-         f"items_per_s={n_items / t_dict_build:.0f}")
-    emit("search_build_store", t_store_build * 1e6,
-         f"items_per_s={n_items / t_store_build:.0f}"
-         f"|rebuilds={store.n_rebuilds}|spilled={store.n_spilled}"
-         f"|load={store.table.load_factor:.2f}")
+    em("search_build_dict", t_dict_build * 1e6,
+       f"items_per_s={n_items / t_dict_build:.0f}")
+    em("search_build_store", t_store_build * 1e6,
+       f"items_per_s={n_items / t_store_build:.0f}"
+       f"|rebuilds={store.n_rebuilds}|spilled={store.n_spilled}"
+       f"|load={store.table.load_factor:.2f}")
 
-    # candidate generation (the array-ops hot path): each path is timed as a
-    # block of back-to-back batches (the serving pattern) and reported as the
-    # median.  GC is paused while timing — the 3.2M-entry baseline dict makes
-    # every collection scan the whole heap, swamping both measurements.
-    import gc
-
-    def timed_block(fn, iters=15):
-        times = []
-        gc.disable()
-        try:
-            for _ in range(iters):
-                t0 = time.perf_counter()
-                out = fn()
-                times.append(time.perf_counter() - t0)
-        finally:
-            gc.enable()
-        return sorted(times)[len(times) // 2], out
-
-    t_dict_cand, ref_cands = timed_block(
+    # candidate generation (the array-ops hot path)
+    t_dict_cand, ref_cands = _timed_block(
         lambda: _dict_candidates(buckets, qhashes))
-    t_store_cand, rows = timed_block(lambda: store.table.lookup(qhashes))
+    t_store_cand, rows = _timed_block(lambda: store.table.lookup(qhashes))
 
     # sanity: both paths propose identical candidate sets (spilled entries,
     # if any, are a conservative superset added back at query time)
@@ -112,19 +129,73 @@ def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
             f"candidate mismatch at query {q}"
 
     speedup = t_dict_cand / t_store_cand
-    emit("search_candgen_dict", t_dict_cand * 1e6 / n_queries,
-         f"qps={n_queries / t_dict_cand:.0f}")
-    emit("search_candgen_store", t_store_cand * 1e6 / n_queries,
-         f"qps={n_queries / t_store_cand:.0f}|speedup={speedup:.1f}x")
+    em("search_candgen_dict", t_dict_cand * 1e6 / n_queries,
+       f"qps={n_queries / t_dict_cand:.0f}")
+    em("search_candgen_store", t_store_cand * 1e6 / n_queries,
+       f"qps={n_queries / t_store_cand:.0f}|speedup={speedup:.1f}x")
 
     # end-to-end query (candidates + packed scoring + top-k)
     store.query(qsigs, top_k=10)           # warm the full query-batch trace
     t0 = time.perf_counter()
-    store.query(qsigs, top_k=10)
+    ref_ids, ref_scores = store.query(qsigs, top_k=10)
     t_query = time.perf_counter() - t0
-    emit("search_query_store", t_query * 1e6 / n_queries,
-         f"qps={n_queries / t_query:.0f}|n_items={n_items}")
+    em("search_query_store", t_query * 1e6 / n_queries,
+       f"qps={n_queries / t_query:.0f}|n_items={n_items}")
+
+    # sharded serving plane: build + candgen+merge throughput per shard count
+    # (per-shard geometry sized for its own n_items/S slice — sizing every
+    # shard for the full corpus would run S tables at 1/S load and flatter
+    # the sharded timings; results are geometry-independent either way)
+    for s in shards:
+        cfg_s = StoreConfig.sized_for(
+            -(-n_items // s), k=k, n_bands=n_bands,
+            rows_per_band=rows_per_band, bucket_width=4)
+        sh = ShardedSketchStore(cfg_s, n_shards=s)
+        t0 = time.perf_counter()
+        sh.add(sigs)
+        t_build = time.perf_counter() - t0
+        sh.query(qsigs, top_k=10)          # warm per-shard traces
+        t_q, (ids, scores) = _timed_block(
+            lambda: sh.query(qsigs, top_k=10), iters=5)
+        # the merge contract: S shards answer exactly like one store
+        assert np.array_equal(ids, ref_ids), f"shard-merge ids S={s}"
+        assert np.array_equal(scores, ref_scores), f"shard-merge scores S={s}"
+        em(f"search_build_sharded_s{s}", t_build * 1e6,
+           f"items_per_s={n_items / t_build:.0f}"
+           f"|sizes={sh.shard_sizes().tolist()}")
+        em(f"search_query_sharded_s{s}", t_q * 1e6 / n_queries,
+           f"qps={n_queries / t_q:.0f}|n_shards={s}|merge=exact")
+
+    return rows_out
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    from . import common
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, 1 iter (CI mode; numbers not "
+                         "comparable)")
+    ap.add_argument("--shards", default="2,4",
+                    help="comma-separated shard counts for the sharded axis")
+    ap.add_argument("--n-items", type=int, default=None)
+    ap.add_argument("--n-queries", type=int, default=None)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        common.set_smoke(True)
+    kw = {}
+    if args.smoke:
+        kw.update(n_items=2_000, n_queries=16)
+    if args.n_items is not None:
+        kw["n_items"] = args.n_items
+    if args.n_queries is not None:
+        kw["n_queries"] = args.n_queries
+    kw["shards"] = tuple(int(s) for s in args.shards.split(",") if s)
+    print("name,us_per_call,derived")
+    run(**kw)
 
 
 if __name__ == "__main__":
-    run()
+    main()

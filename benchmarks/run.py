@@ -32,15 +32,18 @@ def main() -> None:
     bench_mae.run(**({"n_docs": 8, "n_reps": 2} if smoke else {}))  # Fig 7
     bench_throughput.run()   # §5: throughput + K->2 memory
     bench_dedup.run(n_docs=24 if smoke else 120)   # production dedup pipeline
-    bench_search.run(**({"n_items": 2_000, "n_queries": 16} if smoke else {}))
+    search_rows = bench_search.run(   # store vs dict + sharded plane
+        **({"n_items": 2_000, "n_queries": 16} if smoke else {}))
     sign_rows = bench_sign.run()   # signing hot path (kernel dispatch)
 
-    # smoke numbers are not comparable: never clobber the tracked artifact
-    out = os.path.join(_ROOT,
-                       "BENCH_sign.smoke.json" if smoke else "BENCH_sign.json")
-    with open(out, "w") as f:
-        json.dump({"smoke": smoke, "rows": sign_rows}, f, indent=1)
-    print(f"# wrote {out}")
+    # smoke numbers are not comparable: never clobber the tracked artifacts
+    suffix = ".smoke.json" if smoke else ".json"
+    for stem, rows in (("BENCH_sign", sign_rows),
+                       ("BENCH_search", search_rows)):
+        out = os.path.join(_ROOT, stem + suffix)
+        with open(out, "w") as f:
+            json.dump({"smoke": smoke, "rows": rows}, f, indent=1)
+        print(f"# wrote {out}")
 
 
 if __name__ == '__main__':

@@ -90,7 +90,8 @@ class SketchEngine:
         """Fused sign->pack ingest: data -> (B, ceil(K/(32/b))) uint32 words.
 
         Bit-identical to ``pack_codes(signatures_*(data), b)`` but the dense
-        kernel path packs in its epilogue — no (B, K) int32 on the host.
+        kernels pack in their epilogue and the sparse window-min kernels
+        pack inside the same compiled scan — no (B, K) int32 on the host.
         Feed the result to ``SketchStore.add_packed``.
         """
         if layout == "dense":

@@ -25,7 +25,12 @@ Two implementations of the same scan share the precompute helpers:
   slices min-folded into the output block.  On TPU the window length is
   padded to the 128-lane geometry; ``interpret=True`` runs it on CPU.
 
-Both are bit-identical to the gather path (same exact integer mins).
+Both are bit-identical to the gather path (same exact integer mins), and both
+take the same ``pack_b`` fused sign->pack epilogue as the dense kernels: the
+Pallas kernel accumulates mins in VMEM scratch and packs b-bit words on the
+last nnz tile (``packfmt.pack_block``), the jnp twin folds ``pack_codes``
+into the same compiled scan — either way no (B, K) int32 crosses back as a
+separate device step.
 """
 
 from __future__ import annotations
@@ -35,6 +40,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .packfmt import pack_block, pack_codes, pack_geometry
 
 Array = jax.Array
 SENTINEL = jnp.iinfo(jnp.int32).max
@@ -77,11 +85,15 @@ def window_starts(idx: Array, d: int, wl: int, *, shift_offset: int) -> Array:
     return jnp.where(idx >= 0, s, invalid_start(d, wl)).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "shift_offset", "block_j"))
+@functools.partial(jax.jit,
+                   static_argnames=("k", "shift_offset", "block_j", "pack_b"))
 def cminhash_sparse_windows(idx: Array, pi: Array, k: int,
                             sigma: Array | None = None, *,
-                            shift_offset: int = 1, block_j: int = 64) -> Array:
-    """Compiled-jnp window-min scan: (B, NNZ) index lists -> (B, K) int32.
+                            shift_offset: int = 1, block_j: int = 64,
+                            pack_b: int | None = None) -> Array:
+    """Compiled-jnp window-min scan: (B, NNZ) index lists -> (B, K) int32,
+    or (B, ceil(K/(32/pack_b))) uint32 packed words when ``pack_b`` is set
+    (the b-bit truncate+pack runs inside the same compiled scan).
 
     Same data movement as the Pallas kernel (contiguous slices of the window
     table, min-folded over nnz tiles of ``block_j``), expressed as vmapped
@@ -135,13 +147,18 @@ def cminhash_sparse_windows(idx: Array, pi: Array, k: int,
     out = acc.astype(jnp.int32)
     if narrow:                    # empty rows: uint16 sentinel -> int32 one
         out = jnp.where((idx >= 0).any(axis=1)[:, None], out, SENTINEL)
-    return out
+    return out if pack_b is None else pack_codes(out, pack_b)
 
 
-def _kernel(table_ref, s_ref, out_ref, *, bt: int, jt: int, wl: int):
+def _kernel(table_ref, s_ref, out_ref, acc_scratch=None, *, bt: int, jt: int,
+            wl: int, nj: int = 0, k: int = 0, pack_b: int | None = None):
+    # fused pack accumulates mins in VMEM scratch, packing on the last tile
+    # (see cminhash_packed._kernel — same epilogue contract)
+    acc_ref = out_ref if pack_b is None else acc_scratch
+
     @pl.when(pl.program_id(1) == 0)
     def _init():
-        out_ref[...] = jnp.full_like(out_ref, SENTINEL)
+        acc_ref[...] = jnp.full(acc_ref.shape, SENTINEL, acc_ref.dtype)
 
     table = table_ref[...]                            # (L,) int32
     sv = s_ref[...]                                   # (bt, jt) int32
@@ -153,20 +170,29 @@ def _kernel(table_ref, s_ref, out_ref, *, bt: int, jt: int, wl: int):
             for bl in range(bt)])                     # (bt, wl)
         return jnp.minimum(acc, win)
 
-    out_ref[...] = jax.lax.fori_loop(0, jt, body, out_ref[...])
+    acc_ref[...] = jax.lax.fori_loop(0, jt, body, acc_ref[...])
+
+    if pack_b is not None:
+        @pl.when(pl.program_id(1) == nj - 1)
+        def _pack():
+            out_ref[...] = pack_block(acc_ref[...], 0, k=k, b=pack_b)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "shift_offset", "block_b", "block_j", "interpret"),
+    static_argnames=("k", "shift_offset", "block_b", "block_j", "interpret",
+                     "pack_b"),
 )
 def cminhash_sparse_pallas(idx: Array, pi: Array, k: int, *,
                            shift_offset: int = 1, block_b: int = 8,
-                           block_j: int = 32, interpret: bool = True) -> Array:
+                           block_j: int = 32, interpret: bool = True,
+                           pack_b: int | None = None) -> Array:
     """Sparse C-MinHash signatures via the tiled Pallas window-min kernel.
 
     idx: (B, NNZ) padded index lists (entries < 0 are padding), already
-    sigma-permuted by the caller; pi: (D,) int32.  Returns (B, K) int32.
+    sigma-permuted by the caller; pi: (D,) int32.  Returns (B, K) int32, or
+    (B, ceil(K/(32/pack_b))) uint32 words from the fused truncate+pack
+    epilogue when ``pack_b`` is set.
 
     Tiling: grid (batch tiles, nnz tiles); the window table is one
     VMEM-resident block (D + 2*Kp words — ~0.5 MB at D = 65536, K = 1024), so
@@ -195,15 +221,28 @@ def cminhash_sparse_pallas(idx: Array, pi: Array, k: int, *,
     s = s.at[:b, :nnz].set(window_starts(idx, d, wl,
                                          shift_offset=shift_offset))
 
-    out = pl.pallas_call(
-        functools.partial(_kernel, bt=bt, jt=jt, wl=wl),
-        grid=(nb, nj),
-        in_specs=[
-            pl.BlockSpec((lp,), lambda i, j: (0,)),
-            pl.BlockSpec((bt, jt), lambda i, j: (i, j)),
-        ],
-        out_specs=pl.BlockSpec((bt, wl), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((nb * bt, wl), jnp.int32),
+    in_specs = [
+        pl.BlockSpec((lp,), lambda i, j: (0,)),
+        pl.BlockSpec((bt, jt), lambda i, j: (i, j)),
+    ]
+    if pack_b is None:
+        out = pl.pallas_call(
+            functools.partial(_kernel, bt=bt, jt=jt, wl=wl),
+            grid=(nb, nj), in_specs=in_specs,
+            out_specs=pl.BlockSpec((bt, wl), lambda i, j: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((nb * bt, wl), jnp.int32),
+            interpret=interpret,
+        )(table, s)
+        return out[:b, :k]
+
+    cpw, n_words = pack_geometry(k, pack_b)   # wl % cpw == 0: wl % 128 == 0
+    owords = pl.pallas_call(
+        functools.partial(_kernel, bt=bt, jt=jt, wl=wl, nj=nj, k=k,
+                          pack_b=pack_b),
+        grid=(nb, nj), in_specs=in_specs,
+        out_specs=pl.BlockSpec((bt, wl // cpw), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb * bt, wl // cpw), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((bt, wl), jnp.int32)],
         interpret=interpret,
     )(table, s)
-    return out[:b, :k]
+    return owords[:b, :n_words]

@@ -1,4 +1,4 @@
-"""Kernel dispatch for the signing hot path (the one front door).
+"""Kernel dispatch for the signing and probing hot paths (the one front door).
 
 Every signature request — dense or sparse, engine or pipeline — lands here and
 is routed to one of the implementations by shape and backend:
@@ -26,9 +26,15 @@ Block sizes left as ``None`` are resolved through the autotuner
 (``autotune.recommend``: cached winner else heuristic; pass
 ``autotune_measure=True`` to sweep-and-cache on first miss).
 
-``pack_b`` fuses the b-bit truncate+pack epilogue into the dense kernels
-(packed words come straight off the kernel); non-kernel paths reach the same
-bit-identical result via ``packfmt.pack_codes``.
+``pack_b`` fuses the b-bit truncate+pack epilogue into the dense kernels AND
+the sparse window-min kernels (packed words come straight off the kernel /
+the compiled scan); only the gather oracle still packs as a separate step.
+
+``lsh_probe`` is the serving-side twin of the signing front door: the LSH
+bucket-probe leg of a query batch, run on device over the table's resident
+fused records (``kernels.lsh_probe``: Pallas kernel + compiled-jnp twin).
+``impl="auto"`` picks the Pallas kernel on TPU and defers to the numpy host
+loop otherwise (the CPU-tuned early-terminating walk in store/table.py).
 """
 
 from __future__ import annotations
@@ -36,9 +42,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from ..core import cminhash
 from ..core.permutations import apply_permutation_dense, apply_permutation_sparse
-from . import autotune, packfmt, ref
+from . import autotune, lsh_probe as _lsh_probe, packfmt, ref
 from .cminhash_kernel import cminhash_pallas
 from .cminhash_packed import cminhash_packed_pallas
 from .cminhash_sparse import cminhash_sparse_pallas, cminhash_sparse_windows
@@ -51,6 +59,7 @@ PACKED_MIN_D = 16384
 
 DENSE_IMPLS = ("auto", "int8", "packed", "ref")
 SPARSE_IMPLS = ("auto", "pallas", "windows", "gather")
+PROBE_IMPLS = ("auto", "numpy", "jnp", "pallas")
 
 
 def _backend() -> str:
@@ -134,8 +143,8 @@ def signatures_sparse(idx: Array, pi: Array, k: int,
                       pack_b: int | None = None,
                       autotune_measure: bool = False) -> Array:
     """(B, NNZ) padded index lists -> (B, K) int32 signatures, or (B, W)
-    uint32 packed words when ``pack_b`` is set (sign + device-side pack;
-    the sparse kernels have no fused epilogue yet)."""
+    uint32 packed words when ``pack_b`` is set (fused sign->pack in both
+    window-min kernels; only the gather oracle packs as a separate step)."""
     if impl not in SPARSE_IMPLS:
         raise ValueError(f"impl must be one of {SPARSE_IMPLS} (got {impl!r})")
     if impl == "auto":
@@ -147,16 +156,62 @@ def signatures_sparse(idx: Array, pi: Array, k: int,
 
     if impl == "gather":
         sig = cminhash.cminhash_sparse(idx, pi, k, shift_offset=shift_offset)
-    elif impl == "windows":
+        return sig if pack_b is None else packfmt.pack_codes(sig, pack_b)
+    if impl == "windows":
         blocks = _resolve_blocks("sparse_windows", b, d, k,
                                  {"block_j": block_j}, autotune_measure,
                                  nnz=nnz)
-        sig = cminhash_sparse_windows(idx, pi, k, shift_offset=shift_offset,
-                                      **blocks)
+        return cminhash_sparse_windows(idx, pi, k, shift_offset=shift_offset,
+                                       pack_b=pack_b, **blocks)
+    blocks = _resolve_blocks("sparse_pallas", b, d, k,
+                             {"block_b": block_b, "block_j": block_j},
+                             autotune_measure, nnz=nnz)
+    return cminhash_sparse_pallas(idx, pi, k, shift_offset=shift_offset,
+                                  interpret=_interpret(), pack_b=pack_b,
+                                  **blocks)
+
+
+# -- LSH bucket probe (the serving-side device leg) ---------------------------
+
+def select_probe_impl(backend: str | None = None) -> str:
+    """Resolve impl="auto" for a bucket-probe request: the Pallas kernel on
+    a real accelerator, the numpy host loop otherwise (interpret-mode Pallas
+    and the jnp twin both lose to the cache-tuned early-terminating walk on
+    CPU)."""
+    backend = backend or _backend()
+    return "pallas" if backend == "tpu" else "numpy"
+
+
+def lsh_probe(records_dev: Array, hashes: np.ndarray, *, n_slots: int,
+              max_probes: int, impl: str = "auto",
+              block_e: int = 128) -> np.ndarray:
+    """(Q, n_bands) uint64 band hashes -> (Q, n_bands * W) candidate ids.
+
+    ``records_dev`` is the table's uploaded (n_bands * n_slots, 2 + W) fused
+    records (``BandedLSHTable.device_records``).  The uint64 leg (base slot,
+    key halves, validity) runs on host (``lsh_probe.probe_operands``);
+    everything after is device work.  This front door serves the *device*
+    impls only: ``impl="auto"`` here means "the device impl for this
+    backend" (Pallas on TPU, the jnp twin elsewhere) — the numpy-vs-device
+    decision is ``BandedLSHTable.lookup``'s (via ``select_probe_impl``),
+    since the numpy walk needs the table's host state, not an upload.
+    """
+    if impl not in PROBE_IMPLS:
+        raise ValueError(f"impl must be one of {PROBE_IMPLS} (got {impl!r})")
+    if impl == "auto":
+        impl = "pallas" if _backend() == "tpu" else "jnp"
+    if impl == "numpy":
+        raise ValueError("impl='numpy' is BandedLSHTable.lookup's own host "
+                         "loop; call the table, not the dispatch layer")
+    q, nb = hashes.shape
+    w = records_dev.shape[1] - 2
+    meta = jnp.asarray(_lsh_probe.probe_operands(hashes, n_slots))
+    if impl == "jnp":
+        out = _lsh_probe.lsh_probe_jnp(records_dev, meta, n_slots=n_slots,
+                                       max_probes=max_probes)
     else:
-        blocks = _resolve_blocks("sparse_pallas", b, d, k,
-                                 {"block_b": block_b, "block_j": block_j},
-                                 autotune_measure, nnz=nnz)
-        sig = cminhash_sparse_pallas(idx, pi, k, shift_offset=shift_offset,
-                                     interpret=_interpret(), **blocks)
-    return sig if pack_b is None else packfmt.pack_codes(sig, pack_b)
+        out = _lsh_probe.lsh_probe_pallas(records_dev, meta, n_slots=n_slots,
+                                          max_probes=max_probes,
+                                          block_e=block_e,
+                                          interpret=_interpret())
+    return np.asarray(out).reshape(q, nb * w)

@@ -49,14 +49,18 @@ def serve_search(args) -> None:
     docs, _ = corpus_with_duplicates(args.docs, vocab=30_000, doc_len=256,
                                      dup_fraction=0.4, seed=0)
     idx = batch_shingles(docs, n=3, d=1 << 14)
-    svc = SimilaritySearchService(SearchConfig(d=1 << 14, k=256, n_bands=64,
-                                               rows_per_band=4))
+    svc = SimilaritySearchService(SearchConfig(
+        d=1 << 14, k=256, n_bands=64, rows_per_band=4,
+        n_shards=args.shards, partition=args.partition,
+        probe_impl=args.probe))
     svc.add_sparse(idx)
     t0 = time.perf_counter()
     ids, scores = svc.query_sparse(idx[: args.batch], top_k=5)
     dt = time.perf_counter() - t0
-    print(f"[serve] search over {svc.size} docs: {args.batch} queries in "
-          f"{dt * 1e3:.1f} ms; top-1 self-hit "
+    sizes = svc.store.shard_sizes().tolist()
+    print(f"[serve] search over {svc.size} docs "
+          f"({args.shards} shard(s) {sizes}, probe={args.probe}): "
+          f"{args.batch} queries in {dt * 1e3:.1f} ms; top-1 self-hit "
           f"{(ids[:, 0] == np.arange(args.batch)).mean() * 100:.0f}%")
 
 
@@ -69,6 +73,12 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--docs", type=int, default=400)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="index partitions (search mode)")
+    ap.add_argument("--partition", choices=["round_robin", "hash"],
+                    default="round_robin")
+    ap.add_argument("--probe", choices=["auto", "numpy", "jnp", "pallas"],
+                    default="auto", help="LSH bucket-probe backend")
     args = ap.parse_args()
     if args.mode == "lm":
         serve_lm(args)

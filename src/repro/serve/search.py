@@ -1,12 +1,18 @@
 """Batched similarity-search service over C-MinHash signatures.
 
-Index + query path is owned by the SketchStore subsystem: signatures live in
-a b-bit packed device buffer, LSH bucketing is open-addressing array state
-(no per-item Python dicts), and a query batch is answered with one vectorized
-candidate gather + one collision-kernel call + batched top-k.  At the default
-``b=32`` the stored codes are the exact signatures, so results match the
-unpacked reference path bit-for-bit; ``b<32`` trades a small upward score
-bias (Li & Koenig, 2011) for 32/b smaller index memory.
+Index + query path is owned by the sharded SketchStore plane: signatures
+live in b-bit packed device buffers partitioned across ``n_shards`` shards,
+LSH bucketing is open-addressing array state per shard (no per-item Python
+dicts), and a query batch is answered with one band-hash fold broadcast to
+every shard, per-shard candidate gather + collision-kernel scoring, and a
+mergeable top-k reduction (``distributed.collectives.merge_topk``).  At the
+default ``n_shards=1`` the pipeline degenerates to the single-store path and
+results are bit-identical to it; raising ``n_shards`` changes *where* items
+live, never *what* a query answers.  At the default ``b=32`` the stored
+codes are the exact signatures, so results match the unpacked reference path
+bit-for-bit; ``b<32`` trades a small upward score bias (Li & Koenig, 2011)
+for 32/b smaller index memory.  ``probe_impl`` picks the bucket-probe
+backend ("auto": numpy host loop on CPU, device Pallas kernel on TPU).
 """
 
 from __future__ import annotations
@@ -17,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import SketchConfig, SketchEngine
-from repro.store import SketchStore, StoreConfig
+from repro.store import ShardedSketchStore, StoreConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,8 +34,11 @@ class SearchConfig:
     rows_per_band: int = 8
     seed: int = 0
     b: int = 32                 # stored bits per hash (32 = exact scoring)
-    n_slots: int = 2048         # initial LSH table slots per band
+    n_slots: int = 2048         # initial LSH table slots per band (per shard)
     bucket_width: int = 8       # initial postings per bucket
+    n_shards: int = 1           # index partitions (1 = single-store path)
+    partition: str = "round_robin"   # or "hash" (see store/sharded.py)
+    probe_impl: str = "auto"    # LSH probe backend: numpy | jnp | pallas
 
 
 class SimilaritySearchService:
@@ -39,9 +48,12 @@ class SimilaritySearchService:
         self.cfg = cfg
         self.engine = SketchEngine(SketchConfig(d=cfg.d, k=cfg.k,
                                                 seed=cfg.seed), mesh=mesh)
-        self.store = SketchStore(StoreConfig(
-            k=cfg.k, n_bands=cfg.n_bands, rows_per_band=cfg.rows_per_band,
-            b=cfg.b, n_slots=cfg.n_slots, bucket_width=cfg.bucket_width))
+        self.store = ShardedSketchStore(
+            StoreConfig(k=cfg.k, n_bands=cfg.n_bands,
+                        rows_per_band=cfg.rows_per_band, b=cfg.b,
+                        n_slots=cfg.n_slots, bucket_width=cfg.bucket_width),
+            n_shards=cfg.n_shards, partition=cfg.partition,
+            probe_impl=cfg.probe_impl)
 
     # -- indexing ----------------------------------------------------------
     def add_sparse(self, idx: np.ndarray) -> None:
@@ -68,8 +80,8 @@ class SimilaritySearchService:
     def _query(self, qsigs: np.ndarray, top_k: int):
         """Returns (ids (Q, top_k) int64 [-1 pad], scores (Q, top_k) f32).
 
-        Queries with no bucket hit anywhere fall back to brute force over the
-        index — independently per query (a query with candidates keeps its
-        bucket-restricted ranking)."""
+        Queries with no bucket hit in any shard fall back to brute force
+        over the whole index — independently per query (a query with
+        candidates keeps its bucket-restricted ranking)."""
         assert self.store.size > 0
         return self.store.query(qsigs, top_k)

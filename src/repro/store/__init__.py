@@ -1,9 +1,11 @@
 """SketchStore: device-resident packed signature storage + vectorized LSH."""
 
 from .packed import PackedConfig, PackedSignatureBuffer
-from .planner import QueryPlanner
+from .planner import QueryPlanner, TopKPartial, finalize_topk
+from .sharded import ShardedSketchStore
 from .store import SketchStore, StoreConfig
 from .table import BandedLSHTable
 
 __all__ = ["PackedConfig", "PackedSignatureBuffer", "QueryPlanner",
-           "SketchStore", "StoreConfig", "BandedLSHTable"]
+           "SketchStore", "ShardedSketchStore", "StoreConfig",
+           "BandedLSHTable", "TopKPartial", "finalize_topk"]

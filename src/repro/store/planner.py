@@ -7,12 +7,23 @@ queries in one collision-kernel call, and each query then selects top-k from
 its own candidate subset via a searchsorted-built mask — no per-query Python
 in the scored path.
 
+Results come out as **mergeable partials** (``TopKPartial``): padded
+(Q, top_k) score/id pairs ordered by (score desc, id asc), with ``NEG_INF``
+score / ``-1`` id padding.  Partials from disjoint id sets merge exactly with
+``distributed.collectives.merge_topk`` — the single-shard ``topk_packed`` and
+the S-shard ``ShardedSketchStore.query_packed`` share this one scoring core,
+the sharded path just merges more partials.
+
 Queries whose candidate row is empty fall back to brute force over the whole
 index *independently* (each such row scores everything; rows with candidates
-are unaffected).
+are unaffected).  In the sharded plane that fallback decision is global — a
+shard never brute-forces on its own — so ``partial_topk_packed`` reports
+per-row candidate presence instead of deciding locally.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
@@ -41,6 +52,30 @@ def candidate_mask(cand_rows: np.ndarray,
     return mask
 
 
+@dataclasses.dataclass
+class TopKPartial:
+    """A mergeable top-k fragment: one shard's (or one leg's) ranked slice.
+
+    Rows are ordered (score desc, id asc) and padded with ``NEG_INF`` score /
+    ``-1`` id, the exact layout ``distributed.collectives.merge_topk``
+    consumes.  ``has_candidates`` records which query rows had >= 1 LSH
+    candidate *in this fragment* — the global brute-force-fallback decision
+    ORs these across shards instead of letting any shard decide locally.
+    """
+
+    ids: np.ndarray               # (Q, top_k) int64, -1 padded
+    scores: np.ndarray            # (Q, top_k) float32, NEG_INF padded
+    has_candidates: np.ndarray    # (Q,) bool
+
+
+def finalize_topk(part: TopKPartial) -> tuple[np.ndarray, np.ndarray]:
+    """Partial -> the public (ids [-1 pad], scores [0.0 pad]) contract."""
+    hit = part.scores > NEG_INF
+    ids = np.where(hit, part.ids, np.int64(-1))
+    scores = np.where(hit, part.scores, np.float32(0.0)).astype(np.float32)
+    return ids, scores
+
+
 class QueryPlanner:
     def __init__(self, buffer: PackedSignatureBuffer):
         self.buffer = buffer
@@ -60,36 +95,61 @@ class QueryPlanner:
     def topk_packed(self, qwords: np.ndarray, cand_rows: np.ndarray,
                     top_k: int) -> tuple[np.ndarray, np.ndarray]:
         """``topk`` for already-packed (Q, W) uint32 query words (the fused
-        sign->pack serving path — no (Q, K) int32 is ever formed)."""
-        n = self.buffer.size
+        sign->pack serving path — no (Q, K) int32 is ever formed).
+
+        The single-shard composition of the partial API: candidate-leg
+        partial, then the brute-force leg for rows with no candidates
+        anywhere.  ``ShardedSketchStore`` runs the same two legs per shard
+        and merges."""
+        part = self.partial_topk_packed(qwords, cand_rows, top_k)
+        if self.buffer.size:
+            em = np.flatnonzero(~part.has_candidates)
+            if len(em):
+                # brute force only the no-candidate rows over the whole
+                # index — independently per row, without widening the scored
+                # union of the rows that do have candidates
+                brute = self.brute_partial_packed(qwords[em], top_k)
+                part.ids[em] = brute.ids
+                part.scores[em] = brute.scores
+        return finalize_topk(part)
+
+    # -- mergeable partials (the sharded serving plane's scoring core) ------
+    def partial_topk_packed(self, qwords: np.ndarray, cand_rows: np.ndarray,
+                            top_k: int) -> TopKPartial:
+        """Candidate-restricted partial: rows without candidates stay fully
+        padded (NO local brute-force fallback — that decision is global)."""
         q = qwords.shape[0]
         ids = np.full((q, top_k), -1, np.int64)
-        scores = np.zeros((q, top_k), np.float32)
-        if n == 0:
-            return ids, scores
-        empty = ~(cand_rows >= 0).any(axis=1)
-        ne = np.flatnonzero(~empty)
-        if len(ne):
+        scores = np.full((q, top_k), NEG_INF, np.float32)
+        has = np.asarray(cand_rows >= 0).any(axis=1) if cand_rows.size \
+            else np.zeros(q, bool)
+        ne = np.flatnonzero(has)
+        if len(ne) and self.buffer.size:
             rows = cand_rows[ne]
             union_ids = dedupe_union(rows)
             ids[ne], scores[ne] = self._rank(
                 qwords[ne], union_ids, candidate_mask(rows, union_ids), top_k)
-        em = np.flatnonzero(empty)
-        if len(em):
-            # brute force only the no-candidate rows over the whole index —
-            # independently per row, without widening the scored union of
-            # the rows that do have candidates (mask=None: every column
-            # counts, no (Q', N) bool allocation)
-            union_ids = np.arange(n, dtype=np.int64)
-            ids[em], scores[em] = self._rank(qwords[em], union_ids, None,
-                                             top_k)
-        return ids, scores
+        return TopKPartial(ids, scores, has)
+
+    def brute_partial_packed(self, qwords: np.ndarray,
+                             top_k: int) -> TopKPartial:
+        """Brute-force partial: every stored item scored for every row
+        (mask=None: no (Q, N) bool allocation).  ``has_candidates`` is False
+        throughout — this leg never votes on the fallback decision."""
+        q = qwords.shape[0]
+        ids = np.full((q, top_k), -1, np.int64)
+        scores = np.full((q, top_k), NEG_INF, np.float32)
+        if self.buffer.size and q:
+            union_ids = np.arange(self.buffer.size, dtype=np.int64)
+            ids, scores = self._rank(qwords, union_ids, None, top_k)
+        return TopKPartial(ids, scores, np.zeros(q, bool))
 
     def _rank(self, qwords: np.ndarray, union_ids: np.ndarray,
               mask: np.ndarray | None,
               top_k: int) -> tuple[np.ndarray, np.ndarray]:
         """Score (Q', U) and select top-k per row from the masked columns
-        (mask=None: all columns are candidates)."""
+        (mask=None: all columns are candidates).  Returns partial-layout
+        rows: (score desc, id asc), NEG_INF/-1 padded."""
         cfg = self.buffer.cfg
         q = qwords.shape[0]
         est = np.asarray(ops.packed_estimated_jaccard_matrix(
@@ -98,13 +158,15 @@ class QueryPlanner:
         scored = est if mask is None else np.where(mask, est, NEG_INF)
         kk = min(top_k, scored.shape[1])
         # stable sort + ascending union_ids => ties broken by smaller id,
-        # matching the reference dict-path ranking exactly
+        # matching the reference dict-path ranking exactly (and making the
+        # partial's order identical to merge_topk's (score desc, id asc))
         order = np.argsort(-scored, axis=1, kind="stable")[:, :kk]
         row = np.arange(q)[:, None]
         top_scores = scored[row, order]
         hit = top_scores > NEG_INF
         ids = np.full((q, top_k), -1, np.int64)
-        scores = np.zeros((q, top_k), np.float32)
+        scores = np.full((q, top_k), NEG_INF, np.float32)
         ids[:, :kk] = np.where(hit, union_ids[order], -1)
-        scores[:, :kk] = np.where(hit, top_scores, 0.0).astype(np.float32)
+        scores[:, :kk] = np.where(hit, top_scores,
+                                  NEG_INF).astype(np.float32)
         return ids, scores

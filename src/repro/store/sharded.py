@@ -1,0 +1,209 @@
+"""ShardedSketchStore — the partitioned serving plane over SketchStore.
+
+Items are partitioned across S shards, each shard a full single-host
+``SketchStore`` (packed buffer + LSH table + planner).  A query batch is
+folded to band hashes **once**, broadcast to every shard, and each shard
+answers with a mergeable ``TopKPartial`` (candidate-restricted, local ids
+mapped to global); ``distributed.collectives.merge_topk`` reduces the S
+partials to the global top-k.  Because the merge order is the planner's own
+(score desc, id asc) ranking, S-shard answers equal the single-shard store's
+answers bit-for-bit on the same items (sole exception: the spill cap's
+documented trade on oversized non-tied spilled groups, see
+``BandedLSHTable.spilled_candidates``) — including the brute-force fallback:
+a query row brute-forces only when it has no candidate in *any* shard (the
+per-shard ``has_candidates`` votes are OR-reduced before the decision), and
+the fallback leg is itself a per-shard brute partial + merge.
+
+Partitioning: ``"round_robin"`` (global id mod S — balanced for streaming
+ingest) or ``"hash"`` (Fibonacci-hash of the global id — stable placement
+under resharding-style workflows).  Either way global ids are assigned in
+arrival order (0..N-1), identical to the single-shard store, and each shard
+keeps a local->global id map.  Both partitioners append gids in ascending
+order, so a shard's local rank order IS its global id order — per-shard
+score-tie breaks (smaller local id first) map to smaller-global-id first,
+which is what makes the merge bit-exact.
+
+This is single-process sharding with the multi-host seams explicit: the only
+cross-shard traffic is the (Q, n_bands) hash broadcast out and (Q, top_k)
+partials back, and ``merge_topk`` is associative, so S hosts reducing
+pairwise over the wire compute exactly what S local shards reduce in a loop.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lsh import band_hashes, band_hashes_packed
+from repro.distributed.collectives import merge_topk
+from repro.kernels import ops
+
+from ._growth import grown
+from .planner import TopKPartial, finalize_topk
+from .store import SketchStore, StoreConfig
+
+_GOLD = np.uint64(0x9E3779B97F4A7C15)    # Fibonacci hashing multiplier
+
+PARTITIONS = ("round_robin", "hash")
+
+
+class ShardedSketchStore:
+    """S-way partitioned SketchStore with exact global top-k.
+
+    ``n_shards=1`` degenerates to a thin wrapper over one ``SketchStore``
+    (same ids, same scores, same fallback behavior), so serving configs keep
+    a single code path and raise ``n_shards`` when one host's table or
+    buffer stops fitting.
+    """
+
+    def __init__(self, cfg: StoreConfig, n_shards: int = 1, *,
+                 partition: str = "round_robin", probe_impl: str = "auto"):
+        if n_shards <= 0:
+            raise ValueError("n_shards must be positive")
+        if partition not in PARTITIONS:
+            raise ValueError(f"partition must be one of {PARTITIONS} "
+                             f"(got {partition!r})")
+        self.cfg = cfg
+        self.n_shards = n_shards
+        self.partition = partition
+        self.shards = [SketchStore(cfg, probe_impl=probe_impl)
+                       for _ in range(n_shards)]
+        # local->global id map per shard (amortized-doubling append buffer)
+        self._gid_buf = [np.zeros(8, np.int64) for _ in range(n_shards)]
+        self._gid_len = [0] * n_shards
+        self.n_items = 0
+
+    # -- sizing ------------------------------------------------------------
+    @property
+    def size(self) -> int:
+        return self.n_items
+
+    @property
+    def n_spilled(self) -> int:
+        return sum(s.n_spilled for s in self.shards)
+
+    def shard_sizes(self) -> np.ndarray:
+        return np.asarray([s.size for s in self.shards], np.int64)
+
+    def _gids(self, shard: int) -> np.ndarray:
+        return self._gid_buf[shard][: self._gid_len[shard]]
+
+    # -- partitioning ------------------------------------------------------
+    def _shard_of(self, gids: np.ndarray) -> np.ndarray:
+        if self.partition == "round_robin":
+            return gids % self.n_shards
+        with np.errstate(over="ignore"):
+            h = gids.astype(np.uint64) * _GOLD
+        return ((h >> np.uint64(33)) % np.uint64(self.n_shards)) \
+            .astype(np.int64)
+
+    def _scatter(self, batch: np.ndarray, add_one) -> np.ndarray:
+        """Assign global ids, route batch rows to shards, record the maps."""
+        n = len(batch)
+        gids = np.arange(self.n_items, self.n_items + n, dtype=np.int64)
+        owner = self._shard_of(gids)
+        for s in range(self.n_shards):
+            sel = np.flatnonzero(owner == s)
+            if not len(sel):
+                continue
+            add_one(self.shards[s], batch[sel])
+            need = self._gid_len[s] + len(sel)
+            self._gid_buf[s] = grown(self._gid_buf[s], need)
+            self._gid_buf[s][self._gid_len[s]: need] = gids[sel]
+            self._gid_len[s] = need
+        self.n_items += n
+        return gids
+
+    # -- writes ------------------------------------------------------------
+    def add(self, sigs: np.ndarray) -> np.ndarray:
+        """Partition + index a (B, K) int32 signature batch; returns the
+        global ids (assigned in arrival order, same as one SketchStore)."""
+        return self._scatter(np.asarray(sigs), lambda sh, rows: sh.add(rows))
+
+    def add_packed(self, words: np.ndarray) -> np.ndarray:
+        """``add`` for (B, W) uint32 fused sign->pack words."""
+        return self._scatter(np.asarray(words, np.uint32),
+                             lambda sh, rows: sh.add_packed(rows))
+
+    # -- reads -------------------------------------------------------------
+    def _to_global(self, shard: int, part: TopKPartial) -> TopKPartial:
+        """Map a shard partial's local ids to global ids.  The gid map is
+        monotone (both partitioners append ascending gids), so rows stay in
+        (score desc, id asc) order — no re-sort needed before the merge."""
+        gid = self._gids(shard)
+        if not len(gid):              # empty shard: partial is all padding
+            return part
+        hit = part.ids >= 0
+        ids = np.where(hit, gid[np.where(hit, part.ids, 0)], np.int64(-1))
+        return TopKPartial(ids, part.scores, part.has_candidates)
+
+    def _merged_query(self, qwords: np.ndarray, shard_cands: list,
+                      top_k: int) -> tuple[np.ndarray, np.ndarray]:
+        """The shared scoring core: per-shard candidate partials -> merge ->
+        global brute-force leg for rows with no candidates anywhere."""
+        parts = [
+            self._to_global(s, st.planner.partial_topk_packed(
+                qwords, shard_cands[s], top_k))
+            for s, st in enumerate(self.shards)
+        ]
+        has_any = np.zeros(len(qwords), bool)
+        for p in parts:
+            has_any |= p.has_candidates
+        scores, ids = merge_topk([p.scores for p in parts],
+                                 [p.ids for p in parts], top_k)
+        em = np.flatnonzero(~has_any)
+        if len(em) and self.n_items:
+            brute = [
+                self._to_global(s, st.planner.brute_partial_packed(
+                    qwords[em], top_k))
+                for s, st in enumerate(self.shards)
+            ]
+            b_scores, b_ids = merge_topk([p.scores for p in brute],
+                                         [p.ids for p in brute], top_k)
+            scores[em] = b_scores
+            ids[em] = b_ids
+        return finalize_topk(TopKPartial(ids, scores, has_any))
+
+    def query(self, qsigs: np.ndarray,
+              top_k: int = 10) -> tuple[np.ndarray, np.ndarray]:
+        """(Q, K) signatures -> (ids (Q, top_k) [-1 pad], scores (Q, top_k)).
+
+        Bit-identical to single-shard ``SketchStore.query`` on the same
+        items, for any shard count and either partitioner."""
+        self._check_queryable("query()")
+        qsigs = np.asarray(qsigs)
+        hashes = band_hashes(qsigs, self.cfg.n_bands, self.cfg.rows_per_band)
+        cands = [st.candidate_rows_hashed(hashes, mode="sig",
+                                          spill_cap=top_k)
+                 for st in self.shards]
+        qwords = np.asarray(ops.pack_codes(jnp.asarray(qsigs, jnp.int32),
+                                           self.cfg.b))
+        return self._merged_query(qwords, cands, top_k)
+
+    def query_packed(self, qwords: np.ndarray,
+                     top_k: int = 10) -> tuple[np.ndarray, np.ndarray]:
+        """``query`` for already-packed (Q, W) uint32 query words."""
+        self._check_queryable("query_packed()")
+        qwords = np.asarray(qwords, np.uint32)
+        self.shards[0]._check_packed_banding()
+        hashes = band_hashes_packed(qwords, self.cfg.n_bands)
+        cands = [st.candidate_rows_hashed(hashes, mode="packed",
+                                          spill_cap=top_k)
+                 for st in self.shards]
+        return self._merged_query(qwords, cands, top_k)
+
+    def _check_queryable(self, op: str) -> None:
+        if not self.cfg.store_signatures:
+            raise RuntimeError(f"{op} needs stored signatures; this store "
+                               "was built with store_signatures=False")
+
+    def candidate_pairs(self) -> np.ndarray:
+        """Dedup-path pairs — single-shard only: a partitioned index never
+        co-buckets items from different shards, so cross-shard pairs would
+        be silently missed.  Run dedup on a 1-shard store."""
+        if self.n_shards != 1:
+            raise NotImplementedError(
+                "candidate_pairs() is exact only at n_shards=1 (cross-shard "
+                "pairs never share a shard-local bucket); run dedup on a "
+                "single-shard store")
+        return self.shards[0].candidate_pairs()

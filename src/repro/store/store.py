@@ -63,8 +63,12 @@ class StoreConfig:
 
 
 class SketchStore:
-    def __init__(self, cfg: StoreConfig):
+    def __init__(self, cfg: StoreConfig, *, probe_impl: str = "auto"):
         self.cfg = cfg
+        # probe backend for candidate generation (runtime knob, not
+        # snapshotted): "auto" -> numpy host loop on CPU, device kernel on
+        # TPU; see kernels/lsh_probe.py
+        self.probe_impl = probe_impl
         self.buffer = PackedSignatureBuffer(PackedConfig(
             k=cfg.k, b=cfg.b,
             capacity=cfg.capacity if cfg.store_signatures else 1))
@@ -187,33 +191,50 @@ class SketchStore:
         self.n_rebuilds += 1
 
     # -- reads -------------------------------------------------------------
-    def candidate_rows(self, qsigs: np.ndarray) -> np.ndarray:
+    def candidate_rows_hashed(self, hashes: np.ndarray, *, mode: str = "sig",
+                              spill_cap: int | None = None) -> np.ndarray:
+        """(Q, n_bands) uint64 band hashes -> (Q, C) candidate ids, -1 pad.
+
+        The hash-level core of ``candidate_rows``/``candidate_rows_packed``
+        — the sharded store folds a query batch's band hashes once and
+        probes every shard with them.  ``spill_cap`` bounds per-query
+        spilled matches (see ``BandedLSHTable.spilled_candidates``)."""
+        self._band_keys(mode, write=False)
+        cand = self.table.lookup(
+            hashes, impl=self.probe_impl).astype(np.int64)
+        spill = self.table.spilled_candidates(hashes, cap=spill_cap)
+        if spill.shape[1]:
+            cand = np.concatenate([cand, spill], axis=1)
+        return cand
+
+    def candidate_rows(self, qsigs: np.ndarray, *,
+                       spill_cap: int | None = None) -> np.ndarray:
         """(Q, K) signatures -> (Q, C) candidate item ids, -1 padded.
 
         Includes spilled entries whose recorded (band, key) matches the
         query, so the candidate set equals the reference dict-bucket path
         even with a non-empty spill."""
-        self._band_keys("sig", write=False)
         qsigs = np.asarray(qsigs)
         hashes = band_hashes(qsigs, self.cfg.n_bands, self.cfg.rows_per_band)
-        cand = self.table.lookup(hashes).astype(np.int64)
-        spill = self.table.spilled_candidates(hashes)
-        if spill.shape[1]:
-            cand = np.concatenate([cand, spill], axis=1)
-        return cand
+        return self.candidate_rows_hashed(hashes, mode="sig",
+                                          spill_cap=spill_cap)
 
     def query(self, qsigs: np.ndarray,
               top_k: int = 10) -> tuple[np.ndarray, np.ndarray]:
         """(Q, K) signatures -> (ids (Q, top_k) [-1 pad], scores (Q, top_k)).
 
-        Candidates (incl. per-query-matched spill) are scored with the
-        packed collision op; results are identical to the reference
-        dict-bucket path at b=32."""
+        Candidates (incl. per-query-matched spill, capped at top_k matches
+        per hot spilled key) are scored with the packed collision op;
+        results are identical to the reference dict-bucket path at b=32
+        except when a single spilled (band, key) group holds more than
+        top_k non-tied members — the documented spill-cap trade (see
+        ``BandedLSHTable.spilled_candidates``)."""
         if not self.cfg.store_signatures:
             raise RuntimeError("query() needs stored signatures; this store "
                                "was built with store_signatures=False")
         qsigs = np.asarray(qsigs)
-        return self.planner.topk(qsigs, self.candidate_rows(qsigs), top_k)
+        return self.planner.topk(
+            qsigs, self.candidate_rows(qsigs, spill_cap=top_k), top_k)
 
     def _check_packed_banding(self) -> None:
         # W % n_bands == 0 alone can pass on misaligned configs (pad words
@@ -226,17 +247,14 @@ class SketchStore:
                 f"rows_per_band={self.cfg.rows_per_band}, b={self.cfg.b}); "
                 "use add()/query() on raw signatures instead")
 
-    def candidate_rows_packed(self, qwords: np.ndarray) -> np.ndarray:
+    def candidate_rows_packed(self, qwords: np.ndarray, *,
+                              spill_cap: int | None = None) -> np.ndarray:
         """``candidate_rows`` for (Q, W) packed query words (fused path)."""
         self._check_packed_banding()
-        self._band_keys("packed", write=False)
         qwords = np.asarray(qwords, np.uint32)
         hashes = band_hashes_packed(qwords, self.cfg.n_bands)
-        cand = self.table.lookup(hashes).astype(np.int64)
-        spill = self.table.spilled_candidates(hashes)
-        if spill.shape[1]:
-            cand = np.concatenate([cand, spill], axis=1)
-        return cand
+        return self.candidate_rows_hashed(hashes, mode="packed",
+                                          spill_cap=spill_cap)
 
     def query_packed(self, qwords: np.ndarray,
                      top_k: int = 10) -> tuple[np.ndarray, np.ndarray]:
@@ -248,7 +266,8 @@ class SketchStore:
                                "store was built with store_signatures=False")
         qwords = np.asarray(qwords, np.uint32)
         return self.planner.topk_packed(
-            qwords, self.candidate_rows_packed(qwords), top_k)
+            qwords, self.candidate_rows_packed(qwords, spill_cap=top_k),
+            top_k)
 
     def candidate_pairs(self) -> np.ndarray:
         """(P, 2) int64 unique (i, j), i < j, sharing >= 1 band bucket."""

@@ -27,10 +27,13 @@ from __future__ import annotations
 
 import numpy as np
 
+# probe chain + empty-slot sentinel are owned by the probe-kernel module so
+# the host walk and the device impls can never diverge
+from repro.kernels.lsh_probe import SENTINEL_KEY, probe_offset  # noqa: F401
+
 from ._growth import grown
 
 _HASH_BUF_MIN = 64
-SENTINEL_KEY = np.uint64(0xFFFFFFFFFFFFFFFF)
 
 
 def _halves(keys: np.ndarray) -> np.ndarray:
@@ -41,11 +44,10 @@ def _halves(keys: np.ndarray) -> np.ndarray:
 class BandedLSHTable:
     @staticmethod
     def _offset(t: int) -> int:
-        """Quadratic (triangular) probe offset — breaks the primary
-        clustering that gives linear probing its heavy chain-length tail.
+        """The shared quadratic probe chain (kernels.lsh_probe.probe_offset).
         Insert and lookup walk the same sequence, and slots are never freed,
         so stop-at-first-unused stays a correct absence test."""
-        return t * (t + 1) // 2
+        return probe_offset(t)
 
     def __init__(self, n_bands: int, n_slots: int = 2048,
                  bucket_width: int = 8, max_probes: int = 16):
@@ -62,6 +64,8 @@ class BandedLSHTable:
 
     def _alloc(self) -> None:
         nb, ns, w = self.n_bands, self.n_slots, self.bucket_width
+        self._records_version = getattr(self, "_records_version", 0) + 1
+        self._dev_records = None          # (version, jax array) upload cache
         self.records = np.full((nb, ns, 2 + w), -1, np.int32)
         self.used = np.zeros((nb, ns), bool)       # insert-time bookkeeping
         self.counts = np.zeros((nb, ns), np.int32)
@@ -123,6 +127,7 @@ class BandedLSHTable:
         self._insert(hashes, ids)
 
     def _insert(self, hashes: np.ndarray, ids: np.ndarray) -> None:
+        self._records_version += 1        # records mutate: device copy stale
         nb, ns, w = self.n_bands, self.n_slots, self.bucket_width
         b = hashes.shape[0]
         ent_band = np.tile(np.arange(nb, dtype=np.int64), b)
@@ -224,11 +229,36 @@ class BandedLSHTable:
             active = active[~hit & ~unused]    # mismatched slot: keep probing
         return slot
 
-    def lookup(self, hashes: np.ndarray) -> np.ndarray:
+    def device_records(self):
+        """(n_bands * n_slots, 2 + W) int32 device copy of the fused records,
+        cached by mutation version — the table uploads once per build/rebuild
+        and query batches probe the resident copy (kernels/lsh_probe.py)."""
+        import jax.numpy as jnp       # local: table stays numpy-importable
+        cached = self._dev_records
+        if cached is None or cached[0] != self._records_version:
+            flat = self.records.reshape(-1, 2 + self.bucket_width)
+            self._dev_records = (self._records_version, jnp.asarray(flat))
+        return self._dev_records[1]
+
+    def lookup(self, hashes: np.ndarray, *, impl: str = "numpy") -> np.ndarray:
         """(Q, n_bands) band hashes -> (Q, n_bands * bucket_width) candidate
         item ids, -1 padded.  One fused record gather per probe — key compare
-        and posting ids share the cache line.  The batched hot path."""
+        and posting ids share the cache line.  The batched hot path.
+
+        ``impl`` selects the probe backend: ``"numpy"`` is this host loop
+        (the CPU-tuned reference), ``"jnp"``/``"pallas"`` run the probe leg on
+        device over ``device_records()`` via ``kernels.dispatch.lsh_probe``,
+        and ``"auto"`` resolves by backend (device kernel on TPU, numpy
+        otherwise).  All backends return identical candidates."""
         hashes = np.asarray(hashes, np.uint64)
+        if impl != "numpy":
+            from repro.kernels import dispatch
+            if impl == "auto":
+                impl = dispatch.select_probe_impl()
+            if impl != "numpy":
+                return dispatch.lsh_probe(
+                    self.device_records(), hashes, n_slots=self.n_slots,
+                    max_probes=self.max_probes, impl=impl)
         q, nb = hashes.shape
         ns, w = self.n_slots, self.bucket_width
         key = np.ascontiguousarray(hashes.reshape(-1))
@@ -255,12 +285,31 @@ class BandedLSHTable:
             active = active[~hit & (k64 != -1)]
         return out.reshape(q, nb * w)
 
-    def spilled_candidates(self, hashes: np.ndarray) -> np.ndarray:
+    def spilled_candidates(self, hashes: np.ndarray, *,
+                           cap: int | None = None) -> np.ndarray:
         """(Q, n_bands) band hashes -> (Q, M) spilled item ids whose recorded
-        (band, key) matches the query, -1 padded (M = max matches; 0 wide
-        when nothing matches).  Preserves the LSH contract for spilled
-        entries: a returned id still shares a band bucket key with the
-        query.  Rare path — the spill list is small by construction."""
+        (band, key) matches the query, -1 padded, unique-per-row (an id
+        spilled in several matching bands appears once).  M = max unique
+        matches over the batch, 0 wide when nothing matches.  Preserves the
+        LSH contract for spilled entries: a returned id still shares a band
+        bucket key with the query.  Rare path — the spill list is small by
+        construction.
+
+        ``cap`` bounds each matched spilled (band, key) *group* to its
+        ``cap`` smallest ids, so one hot spilled key (an oversized duplicate
+        cluster left spilled by the growth caps) cannot widen (Q, M) for
+        every query in the batch: row width is bounded by n_bands * cap
+        whatever the group sizes.  The cap is per group, never across
+        groups — candidates from differently-keyed groups are never dropped
+        in favor of smaller ids elsewhere, so capping only loses candidates
+        *inside* an oversized group.  Query paths pass ``cap=top_k``: hot
+        groups are in practice near-duplicate clusters whose members tie in
+        score, ties break toward smaller ids, and the group's ``top_k``
+        smallest are exactly the tie-winners.  The trade is explicit: a
+        spilled group with > cap members whose scores do NOT tie can lose a
+        higher-scoring larger id (and, sharded, per-shard caps keep
+        per-shard smallest — the only window where S-shard and 1-shard
+        answers may differ).  ``cap=None`` is exact."""
         q = len(hashes)
         if not len(self._spill_id):
             return np.zeros((q, 0), np.int64)
@@ -274,11 +323,15 @@ class BandedLSHTable:
             lo = np.searchsorted(keys, col, "left")
             hi = np.searchsorted(keys, col, "right")
             for qi in np.flatnonzero(hi > lo):
-                rows[qi].extend(ids[lo[qi]: hi[qi]].tolist())
-        m = max(len(r) for r in rows)
+                grp = ids[lo[qi]: hi[qi]]      # one (band, key) group
+                if cap is not None and len(grp) > cap:
+                    grp = np.sort(grp)[:cap]
+                rows[qi].extend(grp.tolist())
+        uniq = [np.unique(np.asarray(r, np.int64)) for r in rows]
+        m = max(len(u) for u in uniq)
         out = np.full((q, m), -1, np.int64)
-        for qi, r in enumerate(rows):
-            out[qi, : len(r)] = r
+        for qi, u in enumerate(uniq):
+            out[qi, : len(u)] = u
         return out
 
     # -- candidate pairs (dedup path) --------------------------------------

@@ -96,8 +96,15 @@ def test_fused_pack_bit_identical(B, D, K, dens, b):
                                         **BLOCKS)
         assert got.dtype == jnp.uint32
         assert np.array_equal(np.asarray(got), want), impl
-    got = dispatch.signatures_sparse(idx, pi, K, impl="windows", pack_b=b)
-    assert np.array_equal(np.asarray(got), want)
+    # sparse paths: window-min kernels fuse the same epilogue (gather packs
+    # as a separate step but must agree bit-for-bit)
+    for impl, blocks in (("gather", {}),
+                         ("windows", {"block_j": 4}),
+                         ("pallas", {"block_b": 2, "block_j": 4})):
+        got = dispatch.signatures_sparse(idx, pi, K, impl=impl, pack_b=b,
+                                         **blocks)
+        assert got.dtype == jnp.uint32, impl
+        assert np.array_equal(np.asarray(got), want), impl
 
 
 def test_auto_policy():

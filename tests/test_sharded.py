@@ -1,0 +1,211 @@
+"""Sharded serving plane: partition + broadcast + mergeable top-k.
+
+The acceptance contract: ``ShardedSketchStore`` with S in {1, 2, 3, 8}
+answers *exactly* like a single-shard ``SketchStore`` on the same items —
+ids, scores, padding, and the empty-candidate brute-force-fallback rows —
+for both partitioners and both ingest paths (raw signatures and fused
+packed words).  Plus unit coverage of ``merge_topk``'s algebra.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.distributed.collectives import merge_topk
+from repro.kernels import ops
+from repro.store import ShardedSketchStore, SketchStore, StoreConfig
+
+SHARD_COUNTS = [1, 2, 3, 8]
+K, NB, R = 64, 16, 4
+
+
+def _corpus(n=160, k=K, seed=0, dup_pairs=3):
+    rng = np.random.default_rng(seed)
+    sigs = rng.integers(0, 1 << 16, (n, k), dtype=np.int32)
+    for t in range(dup_pairs):          # planted exact duplicates
+        sigs[n - 1 - t] = sigs[t]
+    return sigs
+
+
+def _queries(sigs, n_strangers=2, seed=1):
+    """Query batch mixing indexed rows with strangers that hit no bucket
+    anywhere (forcing the global brute-force-fallback leg)."""
+    rng = np.random.default_rng(seed)
+    strangers = rng.integers(1 << 20, 1 << 24,
+                             (n_strangers, sigs.shape[1]), dtype=np.int32)
+    return np.concatenate([sigs[:12], strangers])
+
+
+@pytest.mark.parametrize("s", SHARD_COUNTS)
+@pytest.mark.parametrize("partition", ["round_robin", "hash"])
+def test_sharded_query_matches_single_store(s, partition):
+    sigs = _corpus()
+    cfg = StoreConfig(k=K, n_bands=NB, rows_per_band=R)
+    single = SketchStore(cfg)
+    single.add(sigs)
+    sharded = ShardedSketchStore(cfg, s, partition=partition)
+    gids = sharded.add(sigs)
+    assert np.array_equal(gids, np.arange(len(sigs)))   # arrival-order ids
+    q = _queries(sigs)
+    want_ids, want_scores = single.query(q, top_k=5)
+    got_ids, got_scores = sharded.query(q, top_k=5)
+    assert np.array_equal(want_ids, got_ids)
+    assert np.array_equal(want_scores, got_scores)
+
+
+@pytest.mark.parametrize("s", SHARD_COUNTS)
+def test_sharded_query_packed_matches_single_store(s):
+    sigs = _corpus(seed=3)
+    cfg = StoreConfig(k=K, n_bands=NB, rows_per_band=R)
+    words = np.asarray(ops.pack_codes(jnp.asarray(sigs), 32))
+    qw = np.asarray(ops.pack_codes(jnp.asarray(_queries(sigs, seed=4)), 32))
+    single = SketchStore(cfg)
+    single.add_packed(words)
+    sharded = ShardedSketchStore(cfg, s)
+    sharded.add_packed(words)
+    want_ids, want_scores = single.query_packed(qw, top_k=6)
+    got_ids, got_scores = sharded.query_packed(qw, top_k=6)
+    assert np.array_equal(want_ids, got_ids)
+    assert np.array_equal(want_scores, got_scores)
+
+
+@pytest.mark.parametrize("s", [2, 8])
+def test_sharded_bbit_packed_store(s):
+    """Fully-packed b=8 plane: sharded == single, and exact dups surface."""
+    sigs = _corpus(seed=5)
+    cfg = StoreConfig(k=K, n_bands=NB, rows_per_band=R, b=8)
+    words = np.asarray(ops.pack_codes(jnp.asarray(sigs), 8))
+    single = SketchStore(cfg)
+    single.add_packed(words)
+    sharded = ShardedSketchStore(cfg, s)
+    sharded.add_packed(words)
+    want = single.query_packed(words[:8], top_k=3)
+    got = sharded.query_packed(words[:8], top_k=3)
+    assert np.array_equal(want[0], got[0])
+    assert np.array_equal(want[1], got[1])
+    assert (got[0][:, 0] == np.arange(8)).all()       # self-hit on top
+
+
+def test_sharded_incremental_adds_interleave():
+    """Global ids stay arrival-ordered across many small batches, and the
+    merged answers still match a single store fed identically."""
+    sigs = _corpus(n=230, seed=6)
+    cfg = StoreConfig(k=K, n_bands=NB, rows_per_band=R,
+                      n_slots=64, bucket_width=2)   # force rebuilds too
+    single = SketchStore(cfg)
+    sharded = ShardedSketchStore(cfg, 3)
+    for lo in range(0, len(sigs), 37):
+        batch = sigs[lo: lo + 37]
+        ids_a = single.add(batch)
+        ids_b = sharded.add(batch)
+        assert np.array_equal(ids_a, ids_b)
+    q = _queries(sigs, seed=7)
+    want = single.query(q, top_k=4)
+    got = sharded.query(q, top_k=4)
+    assert np.array_equal(want[0], got[0])
+    assert np.array_equal(want[1], got[1])
+
+
+def test_sharded_empty_shards_and_tiny_corpus():
+    """S > N leaves shards empty; queries must still answer exactly."""
+    sigs = _corpus(n=3, seed=8, dup_pairs=0)
+    cfg = StoreConfig(k=K, n_bands=NB, rows_per_band=R)
+    single = SketchStore(cfg)
+    single.add(sigs)
+    sharded = ShardedSketchStore(cfg, 8)
+    sharded.add(sigs)
+    assert int(sharded.shard_sizes().sum()) == 3
+    q = _queries(sigs[:2], n_strangers=1, seed=9)
+    want = single.query(q, top_k=5)
+    got = sharded.query(q, top_k=5)
+    assert np.array_equal(want[0], got[0])
+    assert np.array_equal(want[1], got[1])
+
+
+def test_sharded_spill_stays_exact():
+    """Spilled entries (width-1 buckets) must surface identically through
+    the per-shard spill matching + merge."""
+    rng = np.random.default_rng(15)
+    sigs = rng.integers(0, 1 << 16, (10, K), dtype=np.int32)
+    sigs[1] = sigs[0]                       # width-1 bucket -> spill
+    cfg = StoreConfig(k=K, n_bands=NB, rows_per_band=R,
+                      bucket_width=1, auto_rebuild=False)
+    single = SketchStore(cfg)
+    single.add(sigs)
+    assert single.n_spilled > 0
+    for s in (2, 3):
+        sharded = ShardedSketchStore(cfg, s)
+        sharded.add(sigs)
+        want = single.query(sigs[[0, 3]], top_k=4)
+        got = sharded.query(sigs[[0, 3]], top_k=4)
+        assert np.array_equal(want[0], got[0]), s
+        assert np.array_equal(want[1], got[1]), s
+
+
+def test_sharded_guards():
+    cfg = StoreConfig(k=K, n_bands=NB, rows_per_band=R)
+    with pytest.raises(ValueError):
+        ShardedSketchStore(cfg, 0)
+    with pytest.raises(ValueError):
+        ShardedSketchStore(cfg, 2, partition="nope")
+    sh = ShardedSketchStore(cfg, 2)
+    sh.add(_corpus(n=8, dup_pairs=0))
+    with pytest.raises(NotImplementedError):
+        sh.candidate_pairs()               # cross-shard pairs unrepresentable
+    cfg_np = StoreConfig(k=K, n_bands=NB, rows_per_band=R,
+                         store_signatures=False)
+    with pytest.raises(RuntimeError):
+        ShardedSketchStore(cfg_np, 2).query(np.zeros((1, K), np.int32))
+    # single-shard dedup path still works through the wrapper
+    sh1 = ShardedSketchStore(cfg, 1)
+    sh1.add(_corpus(n=20, seed=2))
+    assert sh1.candidate_pairs().shape[1] == 2
+
+
+# -- merge_topk algebra ------------------------------------------------------
+
+def _part(scores, ids):
+    return (np.asarray(scores, np.float32)[None, :],
+            np.asarray(ids, np.int64)[None, :])
+
+
+def test_merge_topk_order_and_ties():
+    inf = np.float32(-np.inf)
+    s1, i1 = _part([0.9, 0.5, inf], [4, 7, -1])
+    s2, i2 = _part([0.9, 0.5], [2, 1])
+    scores, ids = merge_topk([s1, s2], [i1, i2], 4)
+    # ties break toward the smaller id, padding sinks to the tail
+    assert ids.tolist() == [[2, 4, 1, 7]]
+    assert np.allclose(scores, [[0.9, 0.9, 0.5, 0.5]])
+
+
+def test_merge_topk_associative_commutative():
+    rng = np.random.default_rng(11)
+    parts = []
+    next_id = 0
+    for _ in range(4):                     # disjoint id sets, random scores
+        k = rng.integers(1, 6)
+        ids = np.arange(next_id, next_id + k, dtype=np.int64)
+        rng.shuffle(ids)
+        scores = rng.choice([0.25, 0.5, 0.75, 1.0], size=k).astype(np.float32)
+        order = np.lexsort((ids, -scores))
+        parts.append((scores[order][None, :], ids[order][None, :]))
+        next_id += k
+    flat = merge_topk([p[0] for p in parts], [p[1] for p in parts], 5)
+    # pairwise tree, reversed order
+    left = merge_topk([parts[3][0], parts[2][0]],
+                      [parts[3][1], parts[2][1]], 5)
+    right = merge_topk([parts[1][0], parts[0][0]],
+                       [parts[1][1], parts[0][1]], 5)
+    tree = merge_topk([left[0], right[0]], [left[1], right[1]], 5)
+    assert np.array_equal(flat[1], tree[1])
+    assert np.array_equal(flat[0], tree[0])
+
+
+def test_merge_topk_widens_and_pads():
+    s1, i1 = _part([0.5], [3])
+    scores, ids = merge_topk([s1], [i1], 4)
+    assert ids.tolist() == [[3, -1, -1, -1]]
+    assert scores[0, 0] == np.float32(0.5)
+    assert np.isneginf(scores[0, 1:]).all()

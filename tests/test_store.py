@@ -137,6 +137,103 @@ def test_table_spill_and_rebuild():
     assert got == candidate_pairs(hashes)
 
 
+def test_table_growth_rebuild_spill_replay_parity():
+    """Insert past capacity in stages, forcing both spill modes, rebuilding
+    between stages — after every stage the lookup must match the dict
+    reference exactly (the replay log must renumber nothing)."""
+    rng = np.random.default_rng(17)
+    sigs = rng.integers(0, 25, (400, 16), dtype=np.int32)  # heavy collisions
+    sigs[300:330] = sigs[0]            # oversized cluster -> overflow spills
+    hashes = band_hashes(sigs, 4, 4)
+    table = BandedLSHTable(4, n_slots=16, bucket_width=1, max_probes=2)
+    geometries = [dict(n_slots=64), dict(bucket_width=8),
+                  dict(n_slots=1024, bucket_width=64, max_probes=16)]
+    n = 0
+    for stage, (add, geom) in enumerate(zip((100, 150, 150), geometries)):
+        table.insert(hashes[n: n + add], np.arange(n, n + add))
+        n += add
+        assert table.n_spilled > 0 or stage == len(geometries) - 1
+        table.rebuild(**geom)
+        want = _dict_lookup(hashes[:n], hashes[:30])
+        got = table.lookup(hashes[:30])
+        spill = table.spilled_candidates(hashes[:30])
+        for q in range(30):
+            mine = set(got[q][got[q] >= 0].tolist())
+            mine |= set(spill[q][spill[q] >= 0].tolist())
+            assert mine == want[q], (stage, q)
+    # final geometry drains everything but the oversized cluster's overflow
+    assert table.n_items == n
+    got = set(map(tuple, table.candidate_pairs()))
+    assert got == candidate_pairs(hashes[:n])
+
+
+def test_spilled_candidates_dedup_and_cap():
+    """A hot spilled key must not widen (Q, M) past the cap, and the capped
+    row keeps the smallest matching ids (the score-tie winners)."""
+    rng = np.random.default_rng(18)
+    sigs = np.broadcast_to(rng.integers(0, 1 << 16, (1, 16), np.int32),
+                           (40, 16)).copy()                 # one hot cluster
+    sigs[30:] = rng.integers(0, 1 << 16, (10, 16), dtype=np.int32)
+    hashes = band_hashes(sigs, 4, 4)
+    table = BandedLSHTable(4, n_slots=64, bucket_width=2, max_probes=4)
+    table.insert(hashes, np.arange(40))
+    assert table.n_spill_overflow > 0
+    full = table.spilled_candidates(hashes[:5])
+    # dedup: an id spilled in several matching bands appears once per row
+    row = full[0][full[0] >= 0]
+    assert len(row) == len(np.unique(row))
+    capped = table.spilled_candidates(hashes[:5], cap=3)
+    assert capped.shape[1] == 3
+    for q in range(5):
+        want = np.sort(full[q][full[q] >= 0])[:3]
+        got = capped[q][capped[q] >= 0]
+        assert np.array_equal(got, want), q
+
+
+def test_spill_cap_is_per_group_not_across_groups():
+    """Two spilled clusters sharing a band: capping must never trade one
+    group's (high-scoring) members for another group's smaller ids — the
+    capped query must still match the uncapped reference exactly."""
+    rng = np.random.default_rng(21)
+    k, nb, r = 64, 16, 4
+    a = rng.integers(0, 1 << 16, k, dtype=np.int32)
+    b = rng.integers(0, 1 << 16, k, dtype=np.int32)
+    b[: r] = a[: r]                       # clusters share band 0 only
+    sigs = np.concatenate([np.tile(a, (6, 1)), np.tile(b, (6, 1))])
+    store = SketchStore(StoreConfig(k=k, n_bands=nb, rows_per_band=r,
+                                    bucket_width=1, auto_rebuild=False))
+    store.add(sigs)
+    assert store.n_spilled > 0
+    ids, scores = store.query(sigs[[6]], top_k=3)   # query cluster B
+    # reference: B's own members (score 1.0, smallest ids first)
+    assert np.array_equal(ids[0], [6, 7, 8]), ids[0]
+    assert np.allclose(scores[0], 1.0)
+    # and sharded answers stay identical on the same data
+    from repro.store import ShardedSketchStore
+    sh = ShardedSketchStore(store.cfg, 2)
+    sh.add(sigs)
+    ids2, scores2 = sh.query(sigs[[6]], top_k=3)
+    assert np.array_equal(ids, ids2)
+    assert np.array_equal(scores, scores2)
+
+
+def test_query_with_hot_spill_caps_width_but_keeps_top_hits():
+    """End-to-end: a hot spilled duplicate cluster larger than any bucket
+    still ranks its smallest ids on top (score ties break toward smaller
+    ids, which is exactly what the cap retains)."""
+    rng = np.random.default_rng(19)
+    k, nb, r = 64, 16, 4
+    sigs = np.broadcast_to(rng.integers(0, 1 << 16, (1, k), np.int32),
+                           (50, k)).copy()
+    store = SketchStore(StoreConfig(k=k, n_bands=nb, rows_per_band=r,
+                                    bucket_width=2, auto_rebuild=False))
+    store.add(sigs)
+    assert store.n_spilled > 0
+    ids, scores = store.query(sigs[[0]], top_k=5)
+    assert np.array_equal(ids[0], np.arange(5))     # smallest ids of the tie
+    assert np.allclose(scores[0], 1.0)
+
+
 def test_table_probe_exhaustion_spills_then_rebuild_drains():
     rng = np.random.default_rng(5)
     sigs = rng.integers(0, 1 << 16, (120, 16), dtype=np.int32)
