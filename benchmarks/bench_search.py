@@ -9,8 +9,13 @@ the subsystem exists for), and end-to-end query QPS including packed scoring.
 The ``--shards`` axis measures the partitioned plane (`ShardedSketchStore`):
 per-S index build and end-to-end query throughput (candidate generation +
 per-shard partial top-k + ``merge_topk``), asserting S-shard answers equal
-the single-shard answers exactly.  Rows are returned for the
-``BENCH_search.json`` artifact (written by ``run.py``).
+the single-shard answers exactly.  The ``--transport`` axis runs the same
+plane over real tcp shard workers (``repro.transport``) and records the
+query wall-time split — submit/serialize (broadcast), per-shard partial
+compute + gather (partial), and reduction (merge) — next to the inproc
+split, so transport overhead is tracked per shard count from day one.
+Rows are returned for the ``BENCH_search.json`` artifact (written by
+``run.py``).
 
 Standalone:  PYTHONPATH=src python -m benchmarks.bench_search --smoke
 """
@@ -68,9 +73,18 @@ def _timed_block(fn, iters=15):
     return sorted(times)[len(times) // 2], out
 
 
+def _timing_split(sh, n_queries: int) -> str:
+    """`last_timings` -> per-query broadcast/partial/merge derived fields."""
+    t = sh.last_timings
+    return "|".join(f"{key.split('_')[0]}_us="
+                    f"{t.get(key, 0.0) * 1e6 / n_queries:.1f}"
+                    for key in ("broadcast_s", "partial_s", "merge_s"))
+
+
 def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
         n_bands: int = 32, rows_per_band: int = 4,
-        shards: tuple[int, ...] = (2, 4)) -> list[dict]:
+        shards: tuple[int, ...] = (2, 4),
+        transports: tuple[str, ...] = ("inproc", "tcp")) -> list[dict]:
     rows_out: list[dict] = []
 
     def em(name, us, derived):
@@ -143,6 +157,7 @@ def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
        f"qps={n_queries / t_query:.0f}|n_items={n_items}")
 
     # sharded serving plane: build + candgen+merge throughput per shard count
+    # and per transport (inproc loop vs real tcp shard workers on localhost)
     # (per-shard geometry sized for its own n_items/S slice — sizing every
     # shard for the full corpus would run S tables at 1/S load and flatter
     # the sharded timings; results are geometry-independent either way)
@@ -150,21 +165,53 @@ def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
         cfg_s = StoreConfig.sized_for(
             -(-n_items // s), k=k, n_bands=n_bands,
             rows_per_band=rows_per_band, bucket_width=4)
-        sh = ShardedSketchStore(cfg_s, n_shards=s)
-        t0 = time.perf_counter()
-        sh.add(sigs)
-        t_build = time.perf_counter() - t0
-        sh.query(qsigs, top_k=10)          # warm per-shard traces
-        t_q, (ids, scores) = _timed_block(
-            lambda: sh.query(qsigs, top_k=10), iters=5)
-        # the merge contract: S shards answer exactly like one store
-        assert np.array_equal(ids, ref_ids), f"shard-merge ids S={s}"
-        assert np.array_equal(scores, ref_scores), f"shard-merge scores S={s}"
-        em(f"search_build_sharded_s{s}", t_build * 1e6,
-           f"items_per_s={n_items / t_build:.0f}"
-           f"|sizes={sh.shard_sizes().tolist()}")
-        em(f"search_query_sharded_s{s}", t_q * 1e6 / n_queries,
-           f"qps={n_queries / t_q:.0f}|n_shards={s}|merge=exact")
+        if "inproc" in transports:
+            sh = ShardedSketchStore(cfg_s, n_shards=s)
+            t0 = time.perf_counter()
+            sh.add(sigs)
+            t_build = time.perf_counter() - t0
+            sh.query(qsigs, top_k=10)      # warm per-shard traces
+            t_q, (ids, scores) = _timed_block(
+                lambda: sh.query(qsigs, top_k=10), iters=5)
+            # the merge contract: S shards answer exactly like one store
+            assert np.array_equal(ids, ref_ids), f"shard-merge ids S={s}"
+            assert np.array_equal(scores, ref_scores), \
+                f"shard-merge scores S={s}"
+            em(f"search_build_sharded_s{s}", t_build * 1e6,
+               f"items_per_s={n_items / t_build:.0f}"
+               f"|sizes={sh.shard_sizes().tolist()}")
+            em(f"search_query_sharded_s{s}", t_q * 1e6 / n_queries,
+               f"qps={n_queries / t_q:.0f}|n_shards={s}|merge=exact|"
+               + _timing_split(sh, n_queries))
+        if "tcp" in transports:
+            from repro.transport import (connect_sharded, shutdown_plane,
+                                         spawn_workers)
+            handles = spawn_workers(cfg_s, s)
+            sh = None
+            try:
+                sh = connect_sharded([h.address for h in handles], cfg_s)
+                t0 = time.perf_counter()
+                sh.add(sigs)               # over the wire, ADD per shard
+                t_build = time.perf_counter() - t0
+                sh.query(qsigs, top_k=10)  # warm worker-side traces
+                t_q, (ids, scores) = _timed_block(
+                    lambda: sh.query(qsigs, top_k=10), iters=5)
+                # tcp answers must equal the single store bit-for-bit too
+                assert np.array_equal(ids, ref_ids), f"tcp-merge ids S={s}"
+                assert np.array_equal(scores, ref_scores), \
+                    f"tcp-merge scores S={s}"
+                em(f"search_build_tcp_s{s}", t_build * 1e6,
+                   f"items_per_s={n_items / t_build:.0f}"
+                   f"|sizes={sh.shard_sizes().tolist()}")
+                em(f"search_query_tcp_s{s}", t_q * 1e6 / n_queries,
+                   f"qps={n_queries / t_q:.0f}|n_shards={s}|merge=exact|"
+                   + _timing_split(sh, n_queries))
+            finally:
+                if sh is not None:
+                    shutdown_plane(sh, handles)
+                else:                      # connect failed: nothing to ack
+                    for h in handles:
+                        h.terminate()
 
     return rows_out
 
@@ -180,6 +227,9 @@ def main(argv=None) -> None:
                          "comparable)")
     ap.add_argument("--shards", default="2,4",
                     help="comma-separated shard counts for the sharded axis")
+    ap.add_argument("--transport", default="both",
+                    choices=["both", "inproc", "tcp"],
+                    help="which shard backends the sharded axis measures")
     ap.add_argument("--n-items", type=int, default=None)
     ap.add_argument("--n-queries", type=int, default=None)
     args = ap.parse_args(argv)
@@ -193,6 +243,8 @@ def main(argv=None) -> None:
     if args.n_queries is not None:
         kw["n_queries"] = args.n_queries
     kw["shards"] = tuple(int(s) for s in args.shards.split(",") if s)
+    kw["transports"] = ("inproc", "tcp") if args.transport == "both" \
+        else (args.transport,)
     print("name,us_per_call,derived")
     run(**kw)
 

@@ -277,8 +277,17 @@ def analyze(text: str) -> HloCost:
                         walk(cname, fm, 0.0, depth + 1)
             else:
                 for cname, role in _called(op):
-                    if role == "fusion" or role == "apply":
+                    if role == "fusion":
                         walk(cname, fm, 0.0, depth + 1)   # boundary bytes only
+                    elif role == "apply":
+                        # plain `call` interiors materialize for real — some
+                        # XLA versions wrap scan bodies in a call, and
+                        # zeroing bytes there hides every per-trip buffer
+                        # from the naive model.  Non-call to_apply users
+                        # (reduce/map/sort combiners) stay boundary-only:
+                        # their scalar combiners never materialize.
+                        walk(cname, fm, bm if op.kind == "call" else 0.0,
+                             depth + 1)
                     elif role == "branch":
                         walk(cname, fm, bm, depth + 1)
 

@@ -13,7 +13,10 @@ Serving leg: ``merge_topk`` is the sharded query plane's reduction — an
 associative, commutative merge of padded per-shard top-k partials
 (``store.planner.TopKPartial`` layout), so S-shard answers reduce in any
 grouping (pairwise tree across hosts, or one flat concat) to exactly the
-single-shard ranking.
+single-shard ranking.  This is the reduction the multi-host transport
+(``repro.transport``) rides: the ``TopKPartial`` arrays are the literal
+wire payload of a worker's PARTIAL frame, and the associativity is what
+lets a coordinator merge replies in whatever order workers answer.
 """
 
 from __future__ import annotations

@@ -49,19 +49,22 @@ def serve_search(args) -> None:
     docs, _ = corpus_with_duplicates(args.docs, vocab=30_000, doc_len=256,
                                      dup_fraction=0.4, seed=0)
     idx = batch_shingles(docs, n=3, d=1 << 14)
-    svc = SimilaritySearchService(SearchConfig(
-        d=1 << 14, k=256, n_bands=64, rows_per_band=4,
-        n_shards=args.shards, partition=args.partition,
-        probe_impl=args.probe))
-    svc.add_sparse(idx)
-    t0 = time.perf_counter()
-    ids, scores = svc.query_sparse(idx[: args.batch], top_k=5)
-    dt = time.perf_counter() - t0
-    sizes = svc.store.shard_sizes().tolist()
-    print(f"[serve] search over {svc.size} docs "
-          f"({args.shards} shard(s) {sizes}, probe={args.probe}): "
-          f"{args.batch} queries in {dt * 1e3:.1f} ms; top-1 self-hit "
-          f"{(ids[:, 0] == np.arange(args.batch)).mean() * 100:.0f}%")
+    # tcp: one shard worker process per shard on localhost, reaped by
+    # close() — same answers as inproc, bit-for-bit
+    with SimilaritySearchService(SearchConfig(
+            d=1 << 14, k=256, n_bands=64, rows_per_band=4,
+            n_shards=args.shards, partition=args.partition,
+            probe_impl=args.probe, transport=args.transport)) as svc:
+        svc.add_sparse(idx)
+        t0 = time.perf_counter()
+        ids, scores = svc.query_sparse(idx[: args.batch], top_k=5)
+        dt = time.perf_counter() - t0
+        sizes = svc.store.shard_sizes().tolist()
+        print(f"[serve] search over {svc.size} docs "
+              f"({args.shards} shard(s) {sizes}, probe={args.probe}, "
+              f"transport={args.transport}): "
+              f"{args.batch} queries in {dt * 1e3:.1f} ms; top-1 self-hit "
+              f"{(ids[:, 0] == np.arange(args.batch)).mean() * 100:.0f}%")
 
 
 def main() -> None:
@@ -79,6 +82,10 @@ def main() -> None:
                     default="round_robin")
     ap.add_argument("--probe", choices=["auto", "numpy", "jnp", "pallas"],
                     default="auto", help="LSH bucket-probe backend")
+    ap.add_argument("--transport", choices=["inproc", "tcp"],
+                    default="inproc",
+                    help="shard backend: in-process loop or spawned tcp "
+                         "shard workers (search mode)")
     args = ap.parse_args()
     if args.mode == "lm":
         serve_lm(args)

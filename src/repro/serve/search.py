@@ -13,6 +13,13 @@ codes are the exact signatures, so results match the unpacked reference path
 bit-for-bit; ``b<32`` trades a small upward score bias (Li & Koenig, 2011)
 for 32/b smaller index memory.  ``probe_impl`` picks the bucket-probe
 backend ("auto": numpy host loop on CPU, device Pallas kernel on TPU).
+
+``transport`` picks where the shards live: ``"inproc"`` (default) runs them
+in this process; ``"tcp"`` spawns one shard worker process per shard on
+localhost and talks the framed wire protocol (``repro.transport``) — same
+answers bit-for-bit, but the index outgrows one process.  tcp services own
+their workers: call ``close()`` (or use the service as a context manager)
+to shut them down.
 """
 
 from __future__ import annotations
@@ -24,6 +31,8 @@ import numpy as np
 
 from repro.core.engine import SketchConfig, SketchEngine
 from repro.store import ShardedSketchStore, StoreConfig
+
+TRANSPORTS = ("inproc", "tcp")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,21 +48,40 @@ class SearchConfig:
     n_shards: int = 1           # index partitions (1 = single-store path)
     partition: str = "round_robin"   # or "hash" (see store/sharded.py)
     probe_impl: str = "auto"    # LSH probe backend: numpy | jnp | pallas
+    transport: str = "inproc"   # shard backend: inproc | tcp (worker procs)
 
 
 class SimilaritySearchService:
     def __init__(self, cfg: SearchConfig, mesh=None):
         if cfg.n_bands * cfg.rows_per_band != cfg.k:
             raise ValueError("n_bands * rows_per_band must equal k")
+        if cfg.transport not in TRANSPORTS:
+            raise ValueError(f"transport must be one of {TRANSPORTS} "
+                             f"(got {cfg.transport!r})")
         self.cfg = cfg
         self.engine = SketchEngine(SketchConfig(d=cfg.d, k=cfg.k,
                                                 seed=cfg.seed), mesh=mesh)
-        self.store = ShardedSketchStore(
-            StoreConfig(k=cfg.k, n_bands=cfg.n_bands,
-                        rows_per_band=cfg.rows_per_band, b=cfg.b,
-                        n_slots=cfg.n_slots, bucket_width=cfg.bucket_width),
-            n_shards=cfg.n_shards, partition=cfg.partition,
-            probe_impl=cfg.probe_impl)
+        store_cfg = StoreConfig(k=cfg.k, n_bands=cfg.n_bands,
+                                rows_per_band=cfg.rows_per_band, b=cfg.b,
+                                n_slots=cfg.n_slots,
+                                bucket_width=cfg.bucket_width)
+        self._workers: list = []
+        if cfg.transport == "tcp":
+            from repro.transport import connect_sharded, spawn_workers
+            self._workers = spawn_workers(store_cfg, cfg.n_shards,
+                                          probe_impl=cfg.probe_impl)
+            try:
+                self.store = connect_sharded(
+                    [h.address for h in self._workers], store_cfg,
+                    partition=cfg.partition)
+            except BaseException:
+                for h in self._workers:    # no orphan worker processes
+                    h.terminate()
+                raise
+        else:
+            self.store = ShardedSketchStore(
+                store_cfg, n_shards=cfg.n_shards, partition=cfg.partition,
+                probe_impl=cfg.probe_impl)
 
     # -- indexing ----------------------------------------------------------
     def add_sparse(self, idx: np.ndarray) -> None:
@@ -85,3 +113,21 @@ class SimilaritySearchService:
         candidates keeps its bucket-restricted ranking)."""
         assert self.store.size > 0
         return self.store.query(qsigs, top_k)
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self) -> None:
+        """Shut down shard workers (tcp transport); idempotent, inproc no-op.
+
+        Graceful first (SHUTDOWN over the wire), then a hard terminate for
+        any worker that did not exit in time.
+        """
+        if self._workers:
+            from repro.transport import shutdown_plane
+            shutdown_plane(self.store, self._workers)
+        self._workers = []
+
+    def __enter__(self) -> "SimilaritySearchService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -14,6 +14,21 @@ a query row brute-forces only when it has no candidate in *any* shard (the
 per-shard ``has_candidates`` votes are OR-reduced before the decision), and
 the fallback leg is itself a per-shard brute partial + merge.
 
+Where a shard *lives* is behind the ``ShardBackend`` protocol:
+
+  * ``InProcessShard`` — the shard's ``SketchStore`` in this process (the
+    default; what PR 3 ran inline);
+  * ``transport.client.RemoteShard`` — the same operations against a shard
+    worker process over the framed TCP wire protocol.
+
+The coordinator keeps only cfg + partition + gid maps and never scores
+anything itself, so the two backends are interchangeable per shard and the
+answers are bit-identical either way — the backend moves *where* the
+per-shard legs run, never *what* they compute.  The query path is split
+into ``start_query``/``start_brute`` (submit) and ``Pending.result()``
+(gather) so remote shards all compute concurrently under the client's
+fan-out loop; in-process shards evaluate lazily at gather time.
+
 Partitioning: ``"round_robin"`` (global id mod S — balanced for streaming
 ingest) or ``"hash"`` (Fibonacci-hash of the global id — stable placement
 under resharding-style workflows).  Either way global ids are assigned in
@@ -23,13 +38,18 @@ order, so a shard's local rank order IS its global id order — per-shard
 score-tie breaks (smaller local id first) map to smaller-global-id first,
 which is what makes the merge bit-exact.
 
-This is single-process sharding with the multi-host seams explicit: the only
-cross-shard traffic is the (Q, n_bands) hash broadcast out and (Q, top_k)
-partials back, and ``merge_topk`` is associative, so S hosts reducing
-pairwise over the wire compute exactly what S local shards reduce in a loop.
+``save``/``load`` snapshot the whole plane to a directory: one
+``SketchStore`` npz per shard plus a manifest (cfg, n_shards, partition,
+gid maps).  Shard workers boot from the same per-shard files
+(``transport.server.spawn_workers(snapshot_dir=...)``), and ``load`` with
+remote backends restores just the coordinator state.
 """
 
 from __future__ import annotations
+
+import os
+import time
+from typing import Protocol
 
 import jax.numpy as jnp
 import numpy as np
@@ -40,11 +60,112 @@ from repro.kernels import ops
 
 from ._growth import grown
 from .planner import TopKPartial, finalize_topk
-from .store import SketchStore, StoreConfig
+from .store import SketchStore, StoreConfig, check_packed_banding
 
 _GOLD = np.uint64(0x9E3779B97F4A7C15)    # Fibonacci hashing multiplier
 
 PARTITIONS = ("round_robin", "hash")
+
+MANIFEST_FILE = "manifest.npz"
+
+
+def shard_snapshot_path(dirpath: str, shard: int) -> str:
+    """Per-shard ``SketchStore`` snapshot inside a plane snapshot dir."""
+    return os.path.join(dirpath, f"shard_{shard}.npz")
+
+
+# -- the backend seam ---------------------------------------------------------
+
+class Pending(Protocol):
+    """Handle for one submitted per-shard query leg."""
+
+    def result(self) -> TopKPartial: ...
+
+
+class ShardBackend(Protocol):
+    """One shard of the serving plane, wherever it lives.
+
+    The contract mirrors what the coordinator needs and nothing more:
+    writes route a partitioned batch (local ids are assigned worker-side in
+    arrival order, exactly like ``SketchStore``), queries are a
+    submit/gather pair so S shards can compute concurrently, and partials
+    come back in local ids (the coordinator owns the gid maps).
+    """
+
+    def add(self, sigs: np.ndarray) -> int: ...
+    def add_packed(self, words: np.ndarray) -> int: ...
+    def start_query(self, hashes: np.ndarray, qwords: np.ndarray,
+                    top_k: int, mode: str) -> Pending: ...
+    def start_brute(self, qwords: np.ndarray, top_k: int) -> Pending: ...
+    def stats(self) -> dict: ...
+    def save(self, path: str) -> None: ...
+    def close(self) -> None: ...
+
+
+class _Lazy:
+    """In-process Pending: evaluate at gather time (mirrors the remote
+    submit/gather split so fan-out timing buckets mean the same thing)."""
+
+    def __init__(self, fn):
+        self._fn = fn
+
+    def result(self) -> TopKPartial:
+        return self._fn()
+
+
+class InProcessShard:
+    """``ShardBackend`` over a local ``SketchStore`` (the classic path)."""
+
+    def __init__(self, cfg: StoreConfig | None = None, *,
+                 probe_impl: str | None = None,
+                 store: SketchStore | None = None):
+        if store is None:
+            if cfg is None:
+                raise ValueError("InProcessShard needs cfg or store")
+            store = SketchStore(cfg, probe_impl=probe_impl or "auto")
+        elif probe_impl is not None:     # never clobber a configured store
+            store.probe_impl = probe_impl
+        self.store = store
+
+    def _add(self, fn, batch) -> int:
+        # tag exceptions that left the store partially mutated (append
+        # landed, insert raised) so _scatter knows a retry would duplicate
+        before = (self.store.size, self.store.table.n_items)
+        try:
+            return len(fn(batch))
+        except BaseException as e:
+            if (self.store.size, self.store.table.n_items) != before:
+                e.dirty = True
+            raise
+
+    def add(self, sigs: np.ndarray) -> int:
+        return self._add(self.store.add, sigs)
+
+    def add_packed(self, words: np.ndarray) -> int:
+        return self._add(self.store.add_packed, words)
+
+    def start_query(self, hashes: np.ndarray, qwords: np.ndarray,
+                    top_k: int, mode: str) -> _Lazy:
+        def run():
+            cands = self.store.candidate_rows_hashed(hashes, mode=mode,
+                                                     spill_cap=top_k)
+            return self.store.planner.partial_topk_packed(qwords, cands,
+                                                          top_k)
+        return _Lazy(run)
+
+    def start_brute(self, qwords: np.ndarray, top_k: int) -> _Lazy:
+        return _Lazy(lambda: self.store.planner.brute_partial_packed(
+            qwords, top_k))
+
+    def stats(self) -> dict:
+        return {"size": self.store.size, "n_spilled": self.store.n_spilled,
+                "n_rebuilds": self.store.n_rebuilds}
+
+    def save(self, path: str) -> None:
+        self.store.save(path)
+
+    def close(self) -> None:
+        pass
 
 
 class ShardedSketchStore:
@@ -53,11 +174,18 @@ class ShardedSketchStore:
     ``n_shards=1`` degenerates to a thin wrapper over one ``SketchStore``
     (same ids, same scores, same fallback behavior), so serving configs keep
     a single code path and raise ``n_shards`` when one host's table or
-    buffer stops fitting.
+    buffer stops fitting.  Pass ``backends`` (e.g. ``RemoteShard``s from
+    ``transport.client``) to run the same plane over shard worker
+    processes; the default builds ``InProcessShard``s.
     """
 
     def __init__(self, cfg: StoreConfig, n_shards: int = 1, *,
-                 partition: str = "round_robin", probe_impl: str = "auto"):
+                 partition: str = "round_robin", probe_impl: str = "auto",
+                 backends: list | None = None):
+        if backends is not None:
+            if not backends:
+                raise ValueError("backends must be non-empty")
+            n_shards = len(backends)
         if n_shards <= 0:
             raise ValueError("n_shards must be positive")
         if partition not in PARTITIONS:
@@ -66,12 +194,18 @@ class ShardedSketchStore:
         self.cfg = cfg
         self.n_shards = n_shards
         self.partition = partition
-        self.shards = [SketchStore(cfg, probe_impl=probe_impl)
-                       for _ in range(n_shards)]
+        self.shards = backends if backends is not None else [
+            InProcessShard(cfg, probe_impl=probe_impl)
+            for _ in range(n_shards)]
         # local->global id map per shard (amortized-doubling append buffer)
         self._gid_buf = [np.zeros(8, np.int64) for _ in range(n_shards)]
         self._gid_len = [0] * n_shards
         self.n_items = 0
+        # wall-time split of the last query: submit/serialize (broadcast),
+        # per-shard partial compute + gather (partial), reduction (merge)
+        self.last_timings: dict[str, float] = {}
+        # set when a partial write left coordinator/worker state divergent
+        self._failed: str | None = None
 
     # -- sizing ------------------------------------------------------------
     @property
@@ -80,10 +214,10 @@ class ShardedSketchStore:
 
     @property
     def n_spilled(self) -> int:
-        return sum(s.n_spilled for s in self.shards)
+        return sum(s.stats()["n_spilled"] for s in self.shards)
 
     def shard_sizes(self) -> np.ndarray:
-        return np.asarray([s.size for s in self.shards], np.int64)
+        return np.asarray([s.stats()["size"] for s in self.shards], np.int64)
 
     def _gids(self, shard: int) -> np.ndarray:
         return self._gid_buf[shard][: self._gid_len[shard]]
@@ -97,20 +231,48 @@ class ShardedSketchStore:
         return ((h >> np.uint64(33)) % np.uint64(self.n_shards)) \
             .astype(np.int64)
 
+    def _check_consistent(self) -> None:
+        if self._failed:
+            raise RuntimeError(
+                f"plane is inconsistent after a failed add ({self._failed}); "
+                "rebuild it or reload from the last snapshot")
+
     def _scatter(self, batch: np.ndarray, add_one) -> np.ndarray:
-        """Assign global ids, route batch rows to shards, record the maps."""
+        """Assign global ids, route batch rows to shards, record the maps.
+
+        A batch is all-or-nothing at the coordinator: if a shard fails
+        after an earlier shard already indexed its slice, or the failing
+        shard itself reports a partial write (``e.dirty`` — worker indexed
+        rows but errored, or an in-process append landed before the insert
+        raised), retrying would re-issue the same gids and duplicate rows —
+        so the plane is marked inconsistent and refuses further writes and
+        reads instead of silently double-indexing.  A clean pre-write
+        failure (validation error, dead worker before any write) leaves
+        the plane usable.
+        """
+        self._check_consistent()
         n = len(batch)
         gids = np.arange(self.n_items, self.n_items + n, dtype=np.int64)
         owner = self._shard_of(gids)
-        for s in range(self.n_shards):
-            sel = np.flatnonzero(owner == s)
-            if not len(sel):
-                continue
-            add_one(self.shards[s], batch[sel])
-            need = self._gid_len[s] + len(sel)
-            self._gid_buf[s] = grown(self._gid_buf[s], need)
-            self._gid_buf[s][self._gid_len[s]: need] = gids[sel]
-            self._gid_len[s] = need
+        wrote_any = False
+        try:
+            for s in range(self.n_shards):
+                sel = np.flatnonzero(owner == s)
+                if not len(sel):
+                    continue
+                added = add_one(self.shards[s], batch[sel])
+                wrote_any = True
+                if added != len(sel):
+                    raise RuntimeError(
+                        f"shard {s} indexed {added} of {len(sel)} rows")
+                need = self._gid_len[s] + len(sel)
+                self._gid_buf[s] = grown(self._gid_buf[s], need)
+                self._gid_buf[s][self._gid_len[s]: need] = gids[sel]
+                self._gid_len[s] = need
+        except BaseException as e:
+            if wrote_any or getattr(e, "dirty", False):
+                self._failed = f"{type(e).__name__} mid-batch"
+            raise
         self.n_items += n
         return gids
 
@@ -118,7 +280,8 @@ class ShardedSketchStore:
     def add(self, sigs: np.ndarray) -> np.ndarray:
         """Partition + index a (B, K) int32 signature batch; returns the
         global ids (assigned in arrival order, same as one SketchStore)."""
-        return self._scatter(np.asarray(sigs), lambda sh, rows: sh.add(rows))
+        return self._scatter(np.asarray(sigs),
+                             lambda sh, rows: sh.add(rows))
 
     def add_packed(self, words: np.ndarray) -> np.ndarray:
         """``add`` for (B, W) uint32 fused sign->pack words."""
@@ -137,31 +300,42 @@ class ShardedSketchStore:
         ids = np.where(hit, gid[np.where(hit, part.ids, 0)], np.int64(-1))
         return TopKPartial(ids, part.scores, part.has_candidates)
 
-    def _merged_query(self, qwords: np.ndarray, shard_cands: list,
-                      top_k: int) -> tuple[np.ndarray, np.ndarray]:
+    def _fanout(self, start, tally: dict) -> list[TopKPartial]:
+        """One submit/gather round over all shards, timed into ``tally``."""
+        t0 = time.perf_counter()
+        pend = [start(sh) for sh in self.shards]
+        t1 = time.perf_counter()
+        parts = [self._to_global(s, p.result()) for s, p in enumerate(pend)]
+        t2 = time.perf_counter()
+        tally["broadcast_s"] += t1 - t0
+        tally["partial_s"] += t2 - t1
+        return parts
+
+    def _merged_query(self, hashes: np.ndarray, qwords: np.ndarray,
+                      top_k: int, mode: str) -> tuple[np.ndarray, np.ndarray]:
         """The shared scoring core: per-shard candidate partials -> merge ->
         global brute-force leg for rows with no candidates anywhere."""
-        parts = [
-            self._to_global(s, st.planner.partial_topk_packed(
-                qwords, shard_cands[s], top_k))
-            for s, st in enumerate(self.shards)
-        ]
+        tally = {"broadcast_s": 0.0, "partial_s": 0.0, "merge_s": 0.0}
+        parts = self._fanout(
+            lambda sh: sh.start_query(hashes, qwords, top_k, mode), tally)
         has_any = np.zeros(len(qwords), bool)
         for p in parts:
             has_any |= p.has_candidates
+        t0 = time.perf_counter()
         scores, ids = merge_topk([p.scores for p in parts],
                                  [p.ids for p in parts], top_k)
+        tally["merge_s"] += time.perf_counter() - t0
         em = np.flatnonzero(~has_any)
         if len(em) and self.n_items:
-            brute = [
-                self._to_global(s, st.planner.brute_partial_packed(
-                    qwords[em], top_k))
-                for s, st in enumerate(self.shards)
-            ]
+            brute = self._fanout(
+                lambda sh: sh.start_brute(qwords[em], top_k), tally)
+            t0 = time.perf_counter()
             b_scores, b_ids = merge_topk([p.scores for p in brute],
                                          [p.ids for p in brute], top_k)
             scores[em] = b_scores
             ids[em] = b_ids
+            tally["merge_s"] += time.perf_counter() - t0
+        self.last_timings = tally
         return finalize_topk(TopKPartial(ids, scores, has_any))
 
     def query(self, qsigs: np.ndarray,
@@ -169,30 +343,26 @@ class ShardedSketchStore:
         """(Q, K) signatures -> (ids (Q, top_k) [-1 pad], scores (Q, top_k)).
 
         Bit-identical to single-shard ``SketchStore.query`` on the same
-        items, for any shard count and either partitioner."""
+        items, for any shard count, either partitioner, and either
+        backend."""
         self._check_queryable("query()")
         qsigs = np.asarray(qsigs)
         hashes = band_hashes(qsigs, self.cfg.n_bands, self.cfg.rows_per_band)
-        cands = [st.candidate_rows_hashed(hashes, mode="sig",
-                                          spill_cap=top_k)
-                 for st in self.shards]
         qwords = np.asarray(ops.pack_codes(jnp.asarray(qsigs, jnp.int32),
                                            self.cfg.b))
-        return self._merged_query(qwords, cands, top_k)
+        return self._merged_query(hashes, qwords, top_k, "sig")
 
     def query_packed(self, qwords: np.ndarray,
                      top_k: int = 10) -> tuple[np.ndarray, np.ndarray]:
         """``query`` for already-packed (Q, W) uint32 query words."""
         self._check_queryable("query_packed()")
+        check_packed_banding(self.cfg)
         qwords = np.asarray(qwords, np.uint32)
-        self.shards[0]._check_packed_banding()
         hashes = band_hashes_packed(qwords, self.cfg.n_bands)
-        cands = [st.candidate_rows_hashed(hashes, mode="packed",
-                                          spill_cap=top_k)
-                 for st in self.shards]
-        return self._merged_query(qwords, cands, top_k)
+        return self._merged_query(hashes, qwords, top_k, "packed")
 
     def _check_queryable(self, op: str) -> None:
+        self._check_consistent()
         if not self.cfg.store_signatures:
             raise RuntimeError(f"{op} needs stored signatures; this store "
                                "was built with store_signatures=False")
@@ -206,4 +376,66 @@ class ShardedSketchStore:
                 "candidate_pairs() is exact only at n_shards=1 (cross-shard "
                 "pairs never share a shard-local bucket); run dedup on a "
                 "single-shard store")
-        return self.shards[0].candidate_pairs()
+        if not isinstance(self.shards[0], InProcessShard):
+            raise NotImplementedError(
+                "candidate_pairs() needs the shard's table in-process; "
+                "load the snapshot into an InProcessShard store for dedup")
+        return self.shards[0].store.candidate_pairs()
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self) -> None:
+        """Release backend resources (sockets for remote shards)."""
+        for sh in self.shards:
+            sh.close()
+
+    # -- snapshots ---------------------------------------------------------
+    def save(self, dirpath: str) -> None:
+        """Snapshot the plane: per-shard ``SketchStore`` npz + manifest.
+
+        Remote backends write their shard file worker-side (same filesystem
+        in the localhost deployment); the manifest (cfg, partition, gid
+        maps) is always written here, since only the coordinator has it.
+        """
+        self._check_consistent()
+        os.makedirs(dirpath, exist_ok=True)
+        for i, sh in enumerate(self.shards):
+            sh.save(shard_snapshot_path(dirpath, i))
+        ints, thr = self.cfg.to_manifest()
+        gids = {f"gids_{i}": self._gids(i) for i in range(self.n_shards)}
+        np.savez(os.path.join(dirpath, MANIFEST_FILE),
+                 n_shards=self.n_shards, n_items=self.n_items,
+                 partition=self.partition, cfg=ints, cfg_thresholds=thr,
+                 **gids)
+
+    @classmethod
+    def load(cls, dirpath: str, *, backends: list | None = None,
+             probe_impl: str = "auto") -> "ShardedSketchStore":
+        """Restore a plane snapshot.
+
+        Default: every shard is loaded into an ``InProcessShard``.  With
+        ``backends`` (remote shards already booted from the same snapshot
+        via ``spawn_workers(snapshot_dir=...)``), only the coordinator
+        state — cfg, partition, gid maps — is restored here.
+        """
+        with np.load(os.path.join(dirpath, MANIFEST_FILE)) as z:
+            n_shards = int(z["n_shards"])
+            n_items = int(z["n_items"])
+            partition = str(z["partition"])
+            cfg = StoreConfig.from_manifest(z["cfg"], z["cfg_thresholds"])
+            gids = [np.asarray(z[f"gids_{i}"], np.int64)
+                    for i in range(n_shards)]
+        if backends is None:
+            backends = [
+                InProcessShard(store=SketchStore.load(
+                    shard_snapshot_path(dirpath, i)), probe_impl=probe_impl)
+                for i in range(n_shards)]
+        elif len(backends) != n_shards:
+            raise ValueError(f"snapshot has {n_shards} shards, got "
+                             f"{len(backends)} backends")
+        store = cls(cfg, n_shards, partition=partition, backends=backends)
+        for i, g in enumerate(gids):
+            store._gid_buf[i] = grown(store._gid_buf[i], len(g))
+            store._gid_buf[i][: len(g)] = g
+            store._gid_len[i] = len(g)
+        store.n_items = n_items
+        return store

@@ -49,6 +49,27 @@ class StoreConfig:
         if self.b not in ops.PACK_BITS:
             raise ValueError(f"b must be one of {ops.PACK_BITS} (got {self.b})")
 
+    # -- positional snapshot encoding (one definition: SketchStore npz and
+    # the sharded-plane manifest must never drift apart field-by-field) ----
+    def to_manifest(self) -> tuple[np.ndarray, np.ndarray]:
+        """(int fields (10,) int64, threshold fields (2,) float64)."""
+        ints = np.asarray([self.k, self.n_bands, self.rows_per_band, self.b,
+                           self.n_slots, self.bucket_width, self.max_probes,
+                           self.capacity, int(self.auto_rebuild),
+                           int(self.store_signatures)], np.int64)
+        thr = np.asarray([self.rebuild_load_factor,
+                          self.rebuild_spill_fraction])
+        return ints, thr
+
+    @classmethod
+    def from_manifest(cls, ints, thr) -> "StoreConfig":
+        k, nb, r, b, ns, w, p, cap, auto, keep = (int(x) for x in ints[:10])
+        load_f, spill_f = (float(x) for x in thr)
+        return cls(k=k, n_bands=nb, rows_per_band=r, b=b, n_slots=ns,
+                   bucket_width=w, max_probes=p, capacity=cap,
+                   rebuild_load_factor=load_f, rebuild_spill_fraction=spill_f,
+                   auto_rebuild=bool(auto), store_signatures=bool(keep))
+
     @classmethod
     def sized_for(cls, n_items: int, *, target_load: float = 0.5,
                   **kw) -> "StoreConfig":
@@ -60,6 +81,23 @@ class StoreConfig:
         kw.setdefault("n_slots", n_slots)
         kw.setdefault("capacity", max(n_items, 8))
         return cls(**kw)
+
+
+def check_packed_banding(cfg: StoreConfig) -> None:
+    """Packed banding needs every band to start on a word boundary.
+
+    W % n_bands == 0 alone can pass on misaligned configs (pad words
+    absorbing the mismatch), so this enforces the real invariant.  Shared by
+    ``SketchStore`` and the coordinator side of ``ShardedSketchStore`` —
+    with remote backends the coordinator folds the band hashes itself and
+    must reject the same configs its workers would.
+    """
+    cpw = 32 // cfg.b
+    if cfg.rows_per_band % cpw:
+        raise ValueError(
+            f"packed banding needs rows_per_band % (32/b) == 0 (got "
+            f"rows_per_band={cfg.rows_per_band}, b={cfg.b}); "
+            "use add()/query() on raw signatures instead")
 
 
 class SketchStore:
@@ -237,15 +275,7 @@ class SketchStore:
             qsigs, self.candidate_rows(qsigs, spill_cap=top_k), top_k)
 
     def _check_packed_banding(self) -> None:
-        # W % n_bands == 0 alone can pass on misaligned configs (pad words
-        # absorbing the mismatch), so enforce the real invariant: every band
-        # starts on a word boundary
-        cpw = 32 // self.cfg.b
-        if self.cfg.rows_per_band % cpw:
-            raise ValueError(
-                f"packed banding needs rows_per_band % (32/b) == 0 (got "
-                f"rows_per_band={self.cfg.rows_per_band}, b={self.cfg.b}); "
-                "use add()/query() on raw signatures instead")
+        check_packed_banding(self.cfg)
 
     def candidate_rows_packed(self, qwords: np.ndarray, *,
                               spill_cap: int | None = None) -> np.ndarray:
@@ -277,33 +307,27 @@ class SketchStore:
     _BAND_MODES = (None, "sig", "packed")   # snapshot encoding of _band_mode
 
     def save(self, path: str) -> None:
-        cfg = self.cfg
+        # snapshot the LIVE table geometry, not the boot values, so load
+        # rebuilds at the grown size instead of replaying every doubling
+        live = dataclasses.replace(
+            self.cfg, n_slots=self.table.n_slots,
+            bucket_width=self.table.bucket_width,
+            max_probes=self.table.max_probes)
+        ints, thr = live.to_manifest()
         np.savez(path,
                  words=np.asarray(self.buffer.all_packed()),
-                 cfg=np.asarray([cfg.k, cfg.n_bands, cfg.rows_per_band, cfg.b,
-                                 self.table.n_slots, self.table.bucket_width,
-                                 self.table.max_probes, cfg.capacity,
-                                 int(cfg.auto_rebuild),
-                                 int(cfg.store_signatures),
-                                 self._BAND_MODES.index(self._band_mode)],
-                                np.int64),
-                 cfg_thresholds=np.asarray([cfg.rebuild_load_factor,
-                                            cfg.rebuild_spill_fraction]),
+                 cfg=np.concatenate([ints, np.asarray(
+                     [self._BAND_MODES.index(self._band_mode)], np.int64)]),
+                 cfg_thresholds=thr,
                  table_hashes=self.table.hash_log)
 
     @classmethod
     def load(cls, path: str) -> "SketchStore":
         with np.load(path) as z:
-            k, nb, r, b, ns, w, p, cap, auto, keep, *mode = \
-                (int(x) for x in z["cfg"])
-            load_f, spill_f = (float(x) for x in z["cfg_thresholds"])
-            store = cls(StoreConfig(k=k, n_bands=nb, rows_per_band=r, b=b,
-                                    n_slots=ns, bucket_width=w, max_probes=p,
-                                    capacity=cap, rebuild_load_factor=load_f,
-                                    rebuild_spill_fraction=spill_f,
-                                    auto_rebuild=bool(auto),
-                                    store_signatures=bool(keep)))
+            store = cls(StoreConfig.from_manifest(z["cfg"],
+                                                  z["cfg_thresholds"]))
             # pre-band-mode snapshots (10-int cfg) load with mode unset
+            mode = [int(x) for x in z["cfg"][10:]]
             store._band_mode = cls._BAND_MODES[mode[0]] if mode else None
             store.buffer = PackedSignatureBuffer.from_rows(
                 store.buffer.cfg, z["words"])

@@ -1,0 +1,29 @@
+"""Multi-host transport plane for the sharded serving store.
+
+The in-process ``ShardedSketchStore`` loop already computes with the
+multi-host seams explicit: one ``(Q, n_bands)`` band-hash broadcast out to
+every shard, one ``TopKPartial`` back per shard, reduced by the associative
+``distributed.collectives.merge_topk``.  This package turns those seams into
+an actual cross-process transport:
+
+  * ``wire``    — versioned, length-prefixed binary framing with zero-copy
+                  numpy (de)serialization and checksummed frames;
+  * ``server``  — a shard worker process hosting one ``SketchStore`` and
+                  serving framed requests over a TCP socket;
+  * ``client``  — the coordinator side: per-worker connections, a
+                  nonblocking fan-out/gather group, and the ``RemoteShard``
+                  backend that plugs workers into ``ShardedSketchStore``.
+
+Because every worker runs the exact same candidate + partial-top-k code as
+the in-process backend and the merge is associative, tcp-backed answers are
+bit-identical to the in-process plane on the same items.
+"""
+
+from .client import (RemoteShard, ShardConnection, TransportError,
+                     TransportTimeout, WorkerError, connect_sharded,
+                     shutdown_plane)
+from .server import WorkerHandle, spawn_workers
+
+__all__ = ["RemoteShard", "ShardConnection", "TransportError",
+           "TransportTimeout", "WorkerError", "connect_sharded",
+           "shutdown_plane", "WorkerHandle", "spawn_workers"]

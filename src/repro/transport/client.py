@@ -1,0 +1,452 @@
+"""Coordinator side of the shard transport: connections, fan-out, backends.
+
+``ShardConnection`` is one framed TCP connection to a shard worker with a
+blocking request/reply path (used for ADD, STATS, SNAPSHOT, SHUTDOWN).  The
+query hot path instead goes through ``FanoutGroup``: the coordinator submits
+one QUERY (or BRUTE) frame per worker, and the group drives every socket
+with a ``selectors`` event loop — nonblocking gather-writes out, incremental
+frame reassembly in — so all S workers compute their partials concurrently
+and replies are drained in whatever order they land.  One wall-clock
+deadline covers the whole fan-out: when it expires the group raises
+``TransportTimeout`` naming the shards still pending, and a worker that dies
+mid-flight (connection reset / EOF / ERROR frame) surfaces as
+``WorkerError`` — a failed query is always an exception, never a hang.
+
+``RemoteShard`` adapts one worker to the ``ShardBackend`` protocol
+(``store.sharded``), so ``ShardedSketchStore`` runs identically over
+in-process shards and tcp workers; ``connect_sharded`` builds the store for
+a worker address list, optionally restoring coordinator state (gid maps,
+partition) from a ``ShardedSketchStore.save`` snapshot directory.
+"""
+
+from __future__ import annotations
+
+import selectors
+import socket
+import time
+
+import numpy as np
+
+from repro.store.planner import TopKPartial
+from repro.store.sharded import ShardedSketchStore
+
+from . import wire
+from .wire import Message, MsgType
+
+
+class TransportError(RuntimeError):
+    """Base for coordinator-visible transport failures."""
+
+
+class WorkerError(TransportError):
+    """A worker answered with ERROR, died, or broke the stream."""
+
+
+class TransportTimeout(TransportError):
+    """The fan-out deadline expired with replies still pending."""
+
+
+def _partial_from(msg: Message) -> TopKPartial:
+    return TopKPartial(np.asarray(msg["ids"], np.int64),
+                       np.asarray(msg["scores"], np.float32),
+                       np.asarray(msg["has"], bool))
+
+
+class ShardConnection:
+    """One framed connection to a shard worker (blocking request/reply).
+
+    Every request gets a fresh sequence number and only the reply echoing
+    it is accepted; replies with older seqs are stale leftovers of a failed
+    fan-out (the worker answered after the coordinator stopped waiting) and
+    are discarded, so one failed broadcast cannot desynchronize the
+    connection for every later request.
+    """
+
+    def __init__(self, address: tuple[str, int], *, timeout: float = 30.0,
+                 max_payload: int = wire.MAX_PAYLOAD):
+        self.address = tuple(address)
+        self.timeout = timeout
+        self.max_payload = max_payload
+        self._seq = 0
+        self.broken: str | None = None     # why this conn is unusable
+        try:
+            self.sock = socket.create_connection(self.address,
+                                                 timeout=timeout)
+        except OSError as e:
+            raise WorkerError(f"cannot connect to worker at "
+                              f"{address[0]}:{address[1]}: {e}") from e
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+
+    def next_seq(self) -> int:
+        # seq 0 is reserved for connection-level worker errors (a decode
+        # failure the worker cannot attribute to any request)
+        self._seq = (self._seq + 1) & 0xFFFFFFFF or 1
+        return self._seq
+
+    def mark_broken(self, why: str) -> None:
+        """Poison the connection (framing no longer trustworthy)."""
+        self.broken = why
+        self.close()
+
+    def check_usable(self) -> None:
+        if self.broken:
+            raise WorkerError(
+                f"worker {self._name} connection unusable: {self.broken}")
+
+    def request(self, msg: Message) -> Message:
+        """Send one frame, read its reply (raises on ERROR replies)."""
+        self.check_usable()
+        msg.seq = self.next_seq()
+        try:
+            wire.send_message(self.sock, msg)
+            while True:
+                reply = wire.recv_message(self.sock,
+                                          max_payload=self.max_payload)
+                if reply.seq == msg.seq:
+                    break
+                if reply.type == MsgType.ERROR and reply.seq == 0:
+                    break      # connection-level worker error: surface it
+                # stale reply from an abandoned fan-out: drop and re-read
+        except socket.timeout as e:
+            # the frame may have been cut mid-send or mid-read; seq pairing
+            # only recovers frame-aligned streams, so poison the connection
+            self.mark_broken(f"timed out mid-{msg.type.name}")
+            raise TransportTimeout(
+                f"worker {self._name} timed out after {self.timeout}s "
+                f"({msg.type.name})") from e
+        except (wire.WireError, OSError) as e:
+            self.mark_broken(f"stream failed during {msg.type.name}: "
+                             f"{type(e).__name__}")
+            raise WorkerError(
+                f"worker {self._name} failed during {msg.type.name}: "
+                f"{type(e).__name__}: {e}") from e
+        return self._check(reply)
+
+    def _check(self, reply: Message) -> Message:
+        if reply.type == MsgType.ERROR:
+            err = WorkerError(f"worker {self._name}: {reply['error']}")
+            # worker says the failed op mutated its store (ADD landed
+            # partially): the coordinator must not treat a retry as safe
+            err.dirty = bool(reply.fields.get("dirty", 0))
+            raise err
+        return reply
+
+    @property
+    def _name(self) -> str:
+        return f"{self.address[0]}:{self.address[1]}"
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+class _Pending:
+    """Handle for one in-flight fan-out request."""
+
+    def __init__(self, group: "FanoutGroup", conn: ShardConnection):
+        self._group = group
+        self._conn = conn
+
+    def result(self) -> TopKPartial:
+        self._group.flush()
+        return _partial_from(self._group.take(self._conn))
+
+
+class FanoutGroup:
+    """Nonblocking broadcast/gather over a set of shard connections.
+
+    ``submit`` queues one outgoing frame per connection; the first
+    ``result()``/``flush()`` drives every socket through one ``selectors``
+    loop under a single deadline.  Sockets are nonblocking only inside the
+    loop, so the blocking request path stays usable between fan-outs.
+    """
+
+    def __init__(self, conns: list[ShardConnection], *,
+                 timeout: float = 30.0):
+        self.conns = list(conns)
+        self.timeout = timeout
+        self._out: dict[ShardConnection, list] = {}     # pending send buffers
+        self._out_total: dict[ShardConnection, int] = {}
+        self._in: dict[ShardConnection, bytearray] = {}
+        self._want: dict[ShardConnection, int] = {}     # expected reply seq
+        self._replies: dict[ShardConnection, Message] = {}
+
+    def submit(self, conn: ShardConnection, msg: Message) -> _Pending:
+        if conn in self._out or conn in self._replies:
+            raise TransportError("one outstanding fan-out request per shard")
+        try:
+            conn.check_usable()
+            msg.seq = conn.next_seq()
+            self._want[conn] = msg.seq
+            self._out[conn] = [memoryview(b) if not isinstance(b, memoryview)
+                               else b for b in wire.encode_message(msg)]
+            self._out_total[conn] = sum(b.nbytes for b in self._out[conn])
+            self._in[conn] = bytearray()
+        except BaseException:
+            self.reset()      # abandon siblings already queued this round
+            raise
+        return _Pending(self, conn)
+
+    def take(self, conn: ShardConnection) -> Message:
+        try:
+            return conn._check(self._replies.pop(conn))
+        except WorkerError:
+            # the round is abandoned: drop sibling replies so the next
+            # round starts clean instead of tripping the outstanding guard
+            self.reset()
+            raise
+
+    def reset(self) -> None:
+        """Drop every in-flight slot of the current (failed) round."""
+        self._out.clear()
+        self._out_total.clear()
+        self._in.clear()
+        self._replies.clear()
+
+    # -- the event loop ------------------------------------------------------
+    def flush(self) -> None:
+        """Drive all submitted requests to completion or raise.  A failed
+        fan-out clears every in-flight slot (including replies that did
+        land), so the group stays usable after the exception surfaces —
+        except connections whose request frame was cut mid-send, which are
+        poisoned (``ShardConnection.broken``) and raise on further use."""
+        try:
+            self._flush()
+        except BaseException:
+            self._replies.clear()
+            raise
+
+    def _flush(self) -> None:
+        pending = set(self._out)
+        if not pending:
+            return
+        deadline = time.monotonic() + self.timeout
+        sel = selectors.DefaultSelector()
+        try:
+            for conn in pending:
+                conn.sock.setblocking(False)
+                sel.register(conn.sock, selectors.EVENT_WRITE, conn)
+            while pending:
+                budget = deadline - time.monotonic()
+                if budget <= 0:
+                    names = sorted(c._name for c in pending)
+                    raise TransportTimeout(
+                        f"fan-out timed out after {self.timeout}s waiting on "
+                        f"{len(names)} shard(s): {', '.join(names)}")
+                for key, _ in sel.select(budget):
+                    conn = key.data
+                    if conn not in pending:
+                        continue
+                    try:
+                        if self._out[conn]:
+                            self._pump_send(sel, conn)
+                        else:
+                            self._pump_recv(sel, conn)
+                    except wire.WireError as e:
+                        raise WorkerError(
+                            f"worker {conn._name} broke the stream: "
+                            f"{type(e).__name__}: {e}") from e
+                    except OSError as e:
+                        raise WorkerError(
+                            f"worker {conn._name} connection failed: "
+                            f"{e}") from e
+                    if conn in self._replies:
+                        sel.unregister(conn.sock)
+                        pending.discard(conn)
+        finally:
+            sel.close()
+            for conn in self.conns:
+                try:
+                    conn.sock.setblocking(True)
+                    conn.sock.settimeout(conn.timeout)
+                except OSError:
+                    pass
+            # a frame cut mid-send or mid-read leaves the stream unframed —
+            # seq pairing only recovers frame-ALIGNED leftovers, so such
+            # connections are poisoned instead of misparsing later frames.
+            # (fully-unsent and fully-sent requests both stay in sync: the
+            # worker either never sees the request or answers a reply the
+            # seq discard handles.)
+            for conn, bufs in self._out.items():
+                left = sum(b.nbytes for b in bufs)
+                if 0 < left < self._out_total.get(conn, 0):
+                    conn.mark_broken(
+                        "request frame cut mid-send by a failed fan-out")
+            for conn in pending:
+                if len(self._in.get(conn, b"")) and not self._out.get(conn):
+                    conn.mark_broken(
+                        "reply frame partially consumed by a failed fan-out")
+            # a failed fan-out leaves no half-tracked state behind
+            self._out.clear()
+            self._out_total.clear()
+            self._in.clear()
+
+    def _pump_send(self, sel, conn: ShardConnection) -> None:
+        bufs = self._out[conn]
+        while bufs:
+            try:
+                sent = conn.sock.send(bufs[0])
+            except BlockingIOError:
+                return
+            if sent < bufs[0].nbytes:
+                bufs[0] = bufs[0].cast("B")[sent:]
+                return
+            bufs.pop(0)
+        sel.modify(conn.sock, selectors.EVENT_READ, conn)
+
+    def _pump_recv(self, sel, conn: ShardConnection) -> None:
+        buf = self._in[conn]
+        while True:
+            try:
+                chunk = conn.sock.recv(1 << 16)
+            except BlockingIOError:
+                return
+            if not chunk:
+                raise WorkerError(
+                    f"worker {conn._name} closed the connection mid-query "
+                    "(worker process died?)")
+            buf += chunk
+            if self._try_complete(conn):
+                return
+
+    def _try_complete(self, conn: ShardConnection) -> bool:
+        buf = self._in[conn]
+        while True:
+            if len(buf) < wire.HEADER_SIZE:
+                return False
+            mtype, seq, length, _ = wire.decode_header(
+                bytes(buf[: wire.HEADER_SIZE]), max_payload=conn.max_payload)
+            end = wire.HEADER_SIZE + length
+            if len(buf) < end:
+                return False
+            if seq != self._want[conn] and \
+                    not (mtype == MsgType.ERROR and seq == 0):
+                del buf[:end]      # stale reply from an abandoned fan-out
+                continue
+            if len(buf) > end:
+                raise wire.ProtocolError("unexpected bytes after reply frame")
+            # full frame validation (crc, payload decode) is wire's job —
+            # one definition shared with the blocking path
+            self._replies[conn] = wire.decode_frame(
+                memoryview(buf)[:end], max_payload=conn.max_payload)
+            return True
+
+    def close(self) -> None:
+        for conn in self.conns:
+            conn.close()
+
+
+class RemoteShard:
+    """``ShardBackend`` over one shard worker (see ``store.sharded``)."""
+
+    def __init__(self, conn: ShardConnection, group: FanoutGroup):
+        self.conn = conn
+        self.group = group
+
+    # -- writes (blocking request/reply) ------------------------------------
+    def add(self, sigs: np.ndarray) -> int:
+        return int(self.conn.request(Message(
+            MsgType.ADD, {"rows": np.ascontiguousarray(sigs, np.int32)}))["n"])
+
+    def add_packed(self, words: np.ndarray) -> int:
+        return int(self.conn.request(Message(
+            MsgType.ADD,
+            {"words": np.ascontiguousarray(words, np.uint32)}))["n"])
+
+    # -- the query fan-out ---------------------------------------------------
+    def start_query(self, hashes: np.ndarray, qwords: np.ndarray,
+                    top_k: int, mode: str) -> _Pending:
+        lo, hi = wire.split_u64(hashes)
+        return self.group.submit(self.conn, Message(MsgType.QUERY, {
+            "hash_lo": lo, "hash_hi": hi,
+            "qwords": np.ascontiguousarray(qwords, np.uint32),
+            "top_k": int(top_k), "mode": mode}))
+
+    def start_brute(self, qwords: np.ndarray, top_k: int) -> _Pending:
+        return self.group.submit(self.conn, Message(MsgType.BRUTE, {
+            "qwords": np.ascontiguousarray(qwords, np.uint32),
+            "top_k": int(top_k)}))
+
+    # -- control -------------------------------------------------------------
+    def stats(self) -> dict:
+        return dict(self.conn.request(Message(MsgType.STATS, {})).fields)
+
+    def save(self, path: str) -> None:
+        self.conn.request(Message(MsgType.SNAPSHOT, {"path": str(path)}))
+
+    def shutdown(self) -> None:
+        """Graceful worker exit (acked before the process leaves serve)."""
+        self.conn.request(Message(MsgType.SHUTDOWN, {}))
+        self.close()
+
+    def close(self) -> None:
+        self.conn.close()
+
+
+def shutdown_plane(store, handles, *, join_timeout: float = 10.0) -> bool:
+    """Stop a shard plane: graceful SHUTDOWN per remote shard, close the
+    store's backends, reap worker processes.  The one definition of the
+    teardown order (service close, benchmarks, and tests all use it).
+
+    Joins only wait when every shutdown was acked (a hung worker should
+    not stall the caller); ``terminate`` no-ops on cleanly-exited workers.
+    Safe on inproc planes (no shutdown legs, no handles).  Returns whether
+    every remote shard acked its SHUTDOWN.
+    """
+    clean = True
+    for sh in getattr(store, "shards", []):
+        if hasattr(sh, "shutdown"):
+            try:
+                sh.shutdown()
+            except Exception:
+                clean = False          # worker already dead or unreachable
+    store.close()
+    for h in handles:
+        if clean:
+            h.join(join_timeout)
+        h.terminate()
+    return clean
+
+
+def connect_sharded(addresses, cfg=None, *, snapshot_dir: str | None = None,
+                    partition: str = "round_robin",
+                    timeout: float = 30.0) -> ShardedSketchStore:
+    """Build a tcp-backed ``ShardedSketchStore`` over worker ``addresses``.
+
+    Fresh plane: pass the workers' ``StoreConfig`` as ``cfg``.  Snapshot
+    boot: pass the ``ShardedSketchStore.save`` directory the workers were
+    spawned from — coordinator state (cfg, partition, gid maps) is restored
+    from its manifest and must describe ``len(addresses)`` shards.
+    """
+    conns: list[ShardConnection] = []
+    try:
+        for a in addresses:
+            conns.append(ShardConnection(a, timeout=timeout))
+        group = FanoutGroup(conns, timeout=timeout)
+        backends = [RemoteShard(c, group) for c in conns]
+        if snapshot_dir is not None:
+            store = ShardedSketchStore.load(snapshot_dir, backends=backends)
+        elif cfg is None:
+            raise ValueError("connect_sharded needs cfg or snapshot_dir")
+        else:
+            store = ShardedSketchStore(cfg, len(backends),
+                                       partition=partition,
+                                       backends=backends)
+        # the coordinator's gid maps and the workers' stores must describe
+        # the same items — a coordinator connected without its snapshot (or
+        # to the wrong workers) would otherwise return shard-LOCAL ids as
+        # global answers with no error
+        for i, b in enumerate(backends):
+            size, want = int(b.stats()["size"]), store._gid_len[i]
+            if size != want:
+                raise WorkerError(
+                    f"worker {i} at {conns[i]._name} holds {size} items but "
+                    f"the coordinator's gid map has {want} — wrong "
+                    "snapshot_dir (or none) for these workers?")
+        return store
+    except BaseException:
+        for c in conns:        # no fd leak when a later step fails
+            c.close()
+        raise

@@ -1,0 +1,227 @@
+"""Shard worker process: one ``SketchStore`` behind a framed TCP socket.
+
+A worker is the remote half of the ``ShardBackend`` split: it owns exactly
+the state an ``InProcessShard`` owns (one ``SketchStore``) and serves the
+same operations over the wire protocol — ADD batches, the QUERY hash
+broadcast (candidates + ``partial_topk_packed``), the BRUTE fallback leg,
+STATS, SNAPSHOT, and a graceful SHUTDOWN.  All ranking code is the store's
+own; the worker adds no scoring logic, which is what keeps tcp answers
+bit-identical to the in-process plane.
+
+Workers are ``multiprocessing``-spawnable (the entry point takes only
+picklable arguments) and boot either empty from a ``StoreConfig`` or from a
+per-shard snapshot written by ``ShardedSketchStore.save``.  The bound
+address travels back to the parent over a one-shot pipe so workers can bind
+port 0 and never race over port numbers.
+
+Failure semantics: a handler exception is caught and answered with an ERROR
+frame (the connection stays up); a protocol-level decode failure (bad
+checksum, truncated frame) also gets an ERROR frame but then drops the
+connection, since the stream can no longer be trusted to be in sync.  EOF
+from the client returns the worker to ``accept`` — a coordinator can
+reconnect.  Only SHUTDOWN (acked first) exits the process.
+"""
+
+from __future__ import annotations
+
+import multiprocessing
+import os
+import socket
+import traceback
+
+import numpy as np
+
+from repro.store.sharded import shard_snapshot_path
+from repro.store.store import SketchStore, StoreConfig
+
+from . import wire
+from .wire import Message, MsgType
+
+
+def _handle(store: SketchStore, msg: Message) -> tuple[Message, bool]:
+    """One request -> (reply, keep_serving)."""
+    f = msg.fields
+    if msg.type == MsgType.ADD:
+        # a failed ADD must report whether it mutated the store: the
+        # coordinator keeps a retry safe only when the batch provably did
+        # not land (otherwise it poisons the plane instead of duplicating)
+        before = (store.size, store.table.n_items)
+        try:
+            if "rows" in f:
+                n = len(store.add(np.asarray(f["rows"], np.int32)))
+            elif "words" in f:
+                n = len(store.add_packed(np.asarray(f["words"], np.uint32)))
+            else:
+                raise wire.ProtocolError("ADD needs 'rows' or 'words'")
+        except Exception as e:
+            if (store.size, store.table.n_items) != before:
+                e.add_dirty = True
+            raise
+        return Message(MsgType.OK, {"n": n}), True
+    if msg.type == MsgType.QUERY:
+        hashes = wire.join_u64(f["hash_lo"], f["hash_hi"])
+        top_k = int(f["top_k"])
+        cands = store.candidate_rows_hashed(hashes, mode=f["mode"],
+                                            spill_cap=top_k)
+        part = store.planner.partial_topk_packed(
+            np.asarray(f["qwords"], np.uint32), cands, top_k)
+        return Message(MsgType.PARTIAL,
+                       {"ids": part.ids, "scores": part.scores,
+                        "has": part.has_candidates}), True
+    if msg.type == MsgType.BRUTE:
+        part = store.planner.brute_partial_packed(
+            np.asarray(f["qwords"], np.uint32), int(f["top_k"]))
+        return Message(MsgType.PARTIAL,
+                       {"ids": part.ids, "scores": part.scores,
+                        "has": part.has_candidates}), True
+    if msg.type == MsgType.STATS:
+        return Message(MsgType.OK, {"size": store.size,
+                                    "n_spilled": store.n_spilled,
+                                    "n_rebuilds": store.n_rebuilds,
+                                    "pid": os.getpid()}), True
+    if msg.type == MsgType.SNAPSHOT:
+        store.save(f["path"])
+        return Message(MsgType.OK, {}), True
+    if msg.type == MsgType.SHUTDOWN:
+        return Message(MsgType.OK, {}), False
+    raise wire.ProtocolError(f"unexpected message type {msg.type!r}")
+
+
+def _serve_conn(store: SketchStore, conn: socket.socket) -> bool:
+    """Serve one coordinator connection.  Returns False when SHUTDOWN."""
+    conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    while True:
+        try:
+            msg = wire.recv_message(conn)
+        except wire.ConnectionClosed:
+            return True                          # client went away: re-accept
+        except wire.WireError as e:              # stream out of sync: drop it
+            try:
+                wire.send_message(conn, Message(
+                    MsgType.ERROR, {"error": f"{type(e).__name__}: {e}"}))
+            except OSError:
+                pass
+            return True
+        try:
+            reply, keep = _handle(store, msg)
+        except Exception as e:                   # worker-side op failure
+            reply, keep = Message(MsgType.ERROR, {
+                "error": f"{type(e).__name__}: {e}",
+                "dirty": int(getattr(e, "add_dirty", False)),
+                "traceback": traceback.format_exc(limit=8)}), True
+        reply.seq = msg.seq                      # pair reply to its request
+        try:
+            wire.send_message(conn, reply)
+        except OSError:
+            return keep    # client vanished before reading: back to accept
+        if not keep:
+            return False
+
+
+def run_worker(ready_conn, cfg: StoreConfig | None, snapshot: str | None,
+               probe_impl: str, host: str, port: int) -> None:
+    """Worker entry point (spawn target — all arguments picklable).
+
+    Boots a ``SketchStore`` (empty from ``cfg``, or from ``snapshot``),
+    binds ``(host, port)`` (port 0 = ephemeral), reports the bound address
+    through ``ready_conn``, and serves until SHUTDOWN.
+    """
+    if snapshot is not None:
+        store = SketchStore.load(snapshot)
+        store.probe_impl = probe_impl
+    else:
+        if cfg is None:
+            raise ValueError("worker needs a StoreConfig or a snapshot")
+        store = SketchStore(cfg, probe_impl=probe_impl)
+    lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    try:
+        lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        lsock.bind((host, port))
+        lsock.listen(4)
+        ready_conn.send(lsock.getsockname())
+        ready_conn.close()
+        while True:
+            conn, _ = lsock.accept()
+            with conn:
+                if not _serve_conn(store, conn):
+                    return
+    finally:
+        lsock.close()
+
+
+class WorkerHandle:
+    """A spawned shard worker: its process and its bound address."""
+
+    def __init__(self, proc, address: tuple[str, int], shard: int):
+        self.proc = proc
+        self.address = address
+        self.shard = shard
+
+    @property
+    def alive(self) -> bool:
+        return self.proc.is_alive()
+
+    def join(self, timeout: float | None = None) -> None:
+        self.proc.join(timeout)
+
+    def terminate(self) -> None:
+        """Hard stop (the graceful path is a client-side SHUTDOWN)."""
+        if self.proc.is_alive():
+            self.proc.terminate()
+        self.proc.join(5)
+
+    def __repr__(self) -> str:
+        state = "alive" if self.alive else "dead"
+        return f"WorkerHandle(shard={self.shard}, " \
+               f"addr={self.address[0]}:{self.address[1]}, {state})"
+
+
+def spawn_workers(cfg: StoreConfig | None, n_shards: int, *,
+                  snapshot_dir: str | None = None, probe_impl: str = "auto",
+                  host: str = "127.0.0.1",
+                  start_timeout: float = 120.0) -> list[WorkerHandle]:
+    """Spawn ``n_shards`` shard workers on localhost; returns their handles.
+
+    Workers start in parallel (the dominant cost is each spawn re-importing
+    jax) and each reports its ephemeral port back before this returns.  With
+    ``snapshot_dir``, worker ``i`` boots from ``shard_{i}.npz`` inside it
+    (the ``ShardedSketchStore.save`` layout) instead of empty from ``cfg``.
+    """
+    ctx = multiprocessing.get_context("spawn")
+    started = []
+    try:
+        for i in range(n_shards):
+            snap = shard_snapshot_path(snapshot_dir, i) \
+                if snapshot_dir is not None else None
+            parent, child = ctx.Pipe(duplex=False)
+            proc = ctx.Process(
+                target=run_worker,
+                args=(child, cfg, snap, probe_impl, host, 0),
+                daemon=True, name=f"shard-worker-{i}")
+            proc.start()
+            child.close()
+            started.append((proc, parent, i))
+        handles = []
+        for proc, parent, i in started:
+            if not parent.poll(start_timeout):
+                if not proc.is_alive():
+                    raise RuntimeError(
+                        f"shard worker {i} exited (code {proc.exitcode}) "
+                        "before reporting its address")
+                raise TimeoutError(
+                    f"shard worker {i} did not report its address within "
+                    f"{start_timeout:.0f}s")
+            try:
+                handles.append(WorkerHandle(proc, tuple(parent.recv()), i))
+            except EOFError as e:
+                proc.join(5)
+                raise RuntimeError(
+                    f"shard worker {i} died during startup "
+                    f"(exitcode {proc.exitcode})") from e
+            parent.close()
+        return handles
+    except Exception:
+        for proc, _, _ in started:
+            if proc.is_alive():
+                proc.terminate()
+        raise

@@ -32,19 +32,32 @@ def test_matches_xla_on_scan_free_module():
 def test_fused_bytes_ignore_elementwise_chains():
     """Elementwise work inside a scan body is free under the TPU-fusion proxy
     but piles up per trip under naive accounting. (A straight-line chain gets
-    fused by XLA:CPU itself, so the scan keeps the ops distinct.)"""
+    fused by XLA:CPU itself, so the scan keeps the ops distinct.)
+
+    The premise — "naive accounting sees the body's work once per trip" —
+    depends on how this XLA version lays the body out (direct ops, per-op
+    kLoop fusions, or one fused call), so it is gated on *observed* HLO
+    behavior, not a version check: if doubling the trip count does not grow
+    naive bytes, this XLA emits the body in a form the naive model cannot
+    see per-trip work in, and the naive-vs-fused contrast is untestable.
+    """
     def body(y, _):
         y = jnp.tanh(y) * 1.01 + 0.1
         y = jnp.exp(y * 0.1) - 1.0
         return y, None
 
-    def f(x):
-        y, _ = jax.lax.scan(body, x, None, length=30)
-        return y
+    def compiled(length):
+        def f(x):
+            y, _ = jax.lax.scan(body, x, None, length=length)
+            return y
+        x = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+        return jax.jit(f).lower(x).compile()
 
-    x = jax.ShapeDtypeStruct((512, 512), jnp.float32)
-    c = jax.jit(f).lower(x).compile()
-    got = hlo.analyze(c.as_text())
+    got = hlo.analyze(compiled(30).as_text())
+    doubled = hlo.analyze(compiled(60).as_text())
+    if doubled.bytes_naive < 1.5 * got.bytes_naive:
+        pytest.skip("this XLA emits the scan body in a form whose per-trip "
+                    "buffers are invisible to naive accounting")
     assert got.bytes < got.bytes_naive / 3, (got.bytes, got.bytes_naive)
 
 

@@ -163,6 +163,97 @@ def test_sharded_guards():
     assert sh1.candidate_pairs().shape[1] == 2
 
 
+def test_partial_write_poisons_plane():
+    """If a later shard fails after an earlier shard indexed its slice (a
+    remote-backend failure mode), the plane refuses further writes and
+    reads instead of double-indexing rows on retry."""
+    from repro.store import InProcessShard
+
+    cfg = StoreConfig(k=K, n_bands=NB, rows_per_band=R)
+
+    class FailingShard(InProcessShard):
+        def add(self, sigs):
+            raise ConnectionError("worker died mid-batch")
+
+    sharded = ShardedSketchStore(
+        cfg, backends=[InProcessShard(cfg), FailingShard(cfg)])
+    sigs = _corpus(n=20, dup_pairs=0)
+    with pytest.raises(ConnectionError):
+        sharded.add(sigs)
+    with pytest.raises(RuntimeError, match="inconsistent"):
+        sharded.add(sigs)                  # a retry must not double-index
+    with pytest.raises(RuntimeError, match="inconsistent"):
+        sharded.query(sigs[:2], top_k=3)
+    with pytest.raises(RuntimeError, match="inconsistent"):
+        sharded.save("/tmp/never-written")
+    # a clean failure before ANY shard wrote leaves the plane usable
+    sharded2 = ShardedSketchStore(
+        cfg, backends=[FailingShard(cfg), InProcessShard(cfg)])
+    with pytest.raises(ConnectionError):
+        sharded2.add(sigs)                 # fails at shard 0, pre-write
+    ids, _ = sharded2.query(sigs[:2], top_k=3)     # not poisoned
+    assert (ids == -1).all()               # empty plane, padded answers
+
+    # a shard that PARTIALLY wrote before raising (e.dirty) poisons the
+    # plane even when it is the first shard touched
+    class DirtyShard(InProcessShard):
+        def add(self, rows):
+            self.store.add(rows[: len(rows) // 2])   # half landed
+            err = ConnectionError("worker died mid-write")
+            err.dirty = True
+            raise err
+
+    sharded3 = ShardedSketchStore(
+        cfg, backends=[DirtyShard(cfg), InProcessShard(cfg)])
+    with pytest.raises(ConnectionError):
+        sharded3.add(sigs)
+    with pytest.raises(RuntimeError, match="inconsistent"):
+        sharded3.add(sigs)
+
+
+# -- plane snapshots ---------------------------------------------------------
+
+@pytest.mark.parametrize("partition", ["round_robin", "hash"])
+def test_sharded_save_load_roundtrip(partition, tmp_path):
+    """Directory snapshot (per-shard npz + manifest) restores the whole
+    plane: answers, gid maps, partitioner — and ingest continues with
+    arrival-order global ids as if the store never went down."""
+    sigs = _corpus(n=140, seed=12)
+    cfg = StoreConfig(k=K, n_bands=NB, rows_per_band=R)
+    sharded = ShardedSketchStore(cfg, 3, partition=partition)
+    sharded.add(sigs)
+    d = str(tmp_path / "plane")
+    sharded.save(d)
+    re = ShardedSketchStore.load(d)
+    assert re.n_shards == 3
+    assert re.partition == partition
+    assert re.n_items == len(sigs)
+    assert np.array_equal(re.shard_sizes(), sharded.shard_sizes())
+    q = _queries(sigs, seed=13)
+    want = sharded.query(q, top_k=5)
+    got = re.query(q, top_k=5)
+    assert np.array_equal(want[0], got[0])
+    assert np.array_equal(want[1], got[1])
+    # ingest continues: same gids and answers as the never-saved plane
+    more = _corpus(n=25, seed=14, dup_pairs=0)
+    assert np.array_equal(re.add(more), sharded.add(more))
+    want = sharded.query(q, top_k=5)
+    got = re.query(q, top_k=5)
+    assert np.array_equal(want[0], got[0])
+    assert np.array_equal(want[1], got[1])
+
+
+def test_sharded_load_backend_count_guard(tmp_path):
+    from repro.store import InProcessShard
+    cfg = StoreConfig(k=K, n_bands=NB, rows_per_band=R)
+    sharded = ShardedSketchStore(cfg, 2)
+    sharded.add(_corpus(n=20, dup_pairs=0))
+    d = str(tmp_path / "plane")
+    sharded.save(d)
+    with pytest.raises(ValueError):
+        ShardedSketchStore.load(d, backends=[InProcessShard(cfg)])
+
+
 # -- merge_topk algebra ------------------------------------------------------
 
 def _part(scores, ids):

@@ -1,0 +1,347 @@
+"""Transport plane: real tcp shard workers vs the in-process plane.
+
+The acceptance contract: a tcp-backed ``ShardedSketchStore`` (worker
+processes on localhost, framed wire protocol) answers **bit-identically**
+to the in-process plane — and to a single ``SketchStore`` — on the same
+items, for S in {1, 2, 4}, including the brute-force-fallback rows.  Plus
+failure semantics: a killed worker surfaces as a client-side exception
+within the fan-out timeout (never a hang), worker-side errors propagate
+with their message, and snapshots round-trip both directions (tcp save ->
+inproc load, inproc save -> worker snapshot boot).
+
+These tests spawn real processes; each spawn re-imports jax, so they are
+grouped to spend as few worker boots as possible.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.store import ShardedSketchStore, SketchStore, StoreConfig
+from repro.transport import (TransportError, WorkerError, connect_sharded,
+                             shutdown_plane, spawn_workers)
+
+K, NB, R = 64, 16, 4
+SHARD_COUNTS = [1, 2, 4]
+
+
+def _corpus(n=120, k=K, seed=0, dup_pairs=3):
+    rng = np.random.default_rng(seed)
+    sigs = rng.integers(0, 1 << 16, (n, k), dtype=np.int32)
+    for t in range(dup_pairs):          # planted exact duplicates
+        sigs[n - 1 - t] = sigs[t]
+    return sigs
+
+
+def _queries(sigs, n_strangers=2, seed=1):
+    """Indexed rows + strangers that hit no bucket anywhere (forcing the
+    global brute-force-fallback leg over the wire)."""
+    rng = np.random.default_rng(seed)
+    strangers = rng.integers(1 << 20, 1 << 24,
+                             (n_strangers, sigs.shape[1]), dtype=np.int32)
+    return np.concatenate([sigs[:10], strangers])
+
+
+def _shutdown(store, handles):
+    assert shutdown_plane(store, handles, join_timeout=15)
+    for h in handles:
+        assert not h.alive, f"worker {h.shard} survived graceful shutdown"
+
+
+@pytest.mark.parametrize("s", SHARD_COUNTS)
+def test_tcp_plane_bit_identical(s, tmp_path):
+    """tcp == inproc == single store: ids, scores, fallback rows, stats —
+    plus a snapshot written over the wire reloads in-process exactly."""
+    sigs = _corpus(seed=s)
+    q = _queries(sigs, seed=s + 1)
+    cfg = StoreConfig(k=K, n_bands=NB, rows_per_band=R)
+    single = SketchStore(cfg)
+    single.add(sigs)
+    inproc = ShardedSketchStore(cfg, s)
+    inproc.add(sigs)
+    handles = spawn_workers(cfg, s)
+    try:
+        tcp = connect_sharded([h.address for h in handles], cfg, timeout=60)
+        gids = tcp.add(sigs)
+        assert np.array_equal(gids, np.arange(len(sigs)))
+        for top_k in (1, 5):
+            want_ids, want_scores = single.query(q, top_k=top_k)
+            in_ids, in_scores = inproc.query(q, top_k=top_k)
+            got_ids, got_scores = tcp.query(q, top_k=top_k)
+            assert np.array_equal(want_ids, in_ids)
+            assert np.array_equal(want_ids, got_ids)
+            assert np.array_equal(want_scores, in_scores)
+            assert np.array_equal(want_scores, got_scores)
+        assert np.array_equal(tcp.shard_sizes(), inproc.shard_sizes())
+        assert tcp.n_spilled == inproc.n_spilled
+        # wall-time split is populated for the artifact row
+        assert set(tcp.last_timings) == \
+            {"broadcast_s", "partial_s", "merge_s"}
+        # snapshot written worker-side, reloaded in-process: same answers
+        snap = str(tmp_path / "plane")
+        tcp.save(snap)
+        re = ShardedSketchStore.load(snap)
+        want = single.query(q, top_k=4)
+        got = re.query(q, top_k=4)
+        assert np.array_equal(want[0], got[0])
+        assert np.array_equal(want[1], got[1])
+        _shutdown(tcp, handles)
+    finally:
+        for h in handles:
+            h.terminate()
+
+
+def test_tcp_packed_path_and_snapshot_boot(tmp_path):
+    """Fused packed ingest/query over the wire, then workers booted FROM an
+    inproc snapshot answer identically (the resharding/boot workflow)."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    sigs = _corpus(seed=9)
+    cfg = StoreConfig(k=K, n_bands=NB, rows_per_band=R)
+    words = np.asarray(ops.pack_codes(jnp.asarray(sigs), 32))
+    qw = np.asarray(ops.pack_codes(jnp.asarray(_queries(sigs, seed=10)), 32))
+    single = SketchStore(cfg)
+    single.add_packed(words)
+    want = single.query_packed(qw, top_k=6)
+
+    inproc = ShardedSketchStore(cfg, 2, partition="hash")
+    inproc.add_packed(words)
+    snap = str(tmp_path / "plane")
+    inproc.save(snap)
+
+    handles = spawn_workers(None, 2, snapshot_dir=snap)
+    try:
+        # forgetting snapshot_dir must be rejected, not answer with
+        # shard-local ids: the coordinator's (empty) gid maps don't match
+        # the workers' stores
+        with pytest.raises(WorkerError, match="gid map"):
+            connect_sharded([h.address for h in handles], cfg, timeout=60)
+        tcp = connect_sharded([h.address for h in handles],
+                              snapshot_dir=snap, timeout=60)
+        assert tcp.n_items == inproc.n_items
+        assert tcp.partition == "hash"
+        got = tcp.query_packed(qw, top_k=6)
+        assert np.array_equal(want[0], got[0])
+        assert np.array_equal(want[1], got[1])
+        # the booted plane keeps ingesting: gids continue in arrival order
+        more = _corpus(n=30, seed=11, dup_pairs=0)
+        w_more = np.asarray(ops.pack_codes(jnp.asarray(more), 32))
+        assert np.array_equal(tcp.add_packed(w_more),
+                              np.arange(len(sigs), len(sigs) + 30))
+        single.add_packed(w_more)
+        inproc.add_packed(w_more)
+        want2 = single.query_packed(qw, top_k=6)
+        got2 = tcp.query_packed(qw, top_k=6)
+        in2 = inproc.query_packed(qw, top_k=6)
+        assert np.array_equal(want2[0], got2[0])
+        assert np.array_equal(want2[1], got2[1])
+        assert np.array_equal(want2[0], in2[0])
+        _shutdown(tcp, handles)
+    finally:
+        for h in handles:
+            h.terminate()
+
+
+def test_killed_worker_raises_within_timeout():
+    """A dead worker is a client-side exception, never a hang — both on the
+    fan-out path and on the blocking request path."""
+    sigs = _corpus(n=60, dup_pairs=0)
+    cfg = StoreConfig(k=K, n_bands=NB, rows_per_band=R)
+    handles = spawn_workers(cfg, 2)
+    try:
+        tcp = connect_sharded([h.address for h in handles], cfg, timeout=5)
+        tcp.add(sigs)
+        tcp.query(sigs[:4], top_k=3)           # plane is healthy first
+        handles[1].proc.kill()                 # SIGKILL: no goodbye frame
+        handles[1].proc.join(10)
+        t0 = time.monotonic()
+        with pytest.raises(TransportError):
+            tcp.query(sigs[:4], top_k=3)
+        assert time.monotonic() - t0 < 30
+        t0 = time.monotonic()
+        with pytest.raises(TransportError):
+            tcp.add(sigs)                      # blocking path fails too
+        assert time.monotonic() - t0 < 30
+    finally:
+        for h in handles:
+            h.terminate()
+
+
+def test_stale_reply_discarded():
+    """A reply left over from an abandoned request (its seq never matches)
+    is skipped — the connection pairs each request with its own reply."""
+    import socket
+    import threading
+
+    from repro.transport.client import ShardConnection
+    from repro.transport.wire import (Message, MsgType, recv_message,
+                                      send_message)
+
+    lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    lsock.bind(("127.0.0.1", 0))
+    lsock.listen(1)
+
+    def serve():
+        conn, _ = lsock.accept()
+        with conn:
+            msg = recv_message(conn)
+            send_message(conn, Message(MsgType.OK, {"n": 99}, seq=0xDEAD))
+            send_message(conn, Message(MsgType.OK, {"n": 7}, seq=msg.seq))
+
+    t = threading.Thread(target=serve, daemon=True)
+    t.start()
+    try:
+        c = ShardConnection(lsock.getsockname(), timeout=10)
+        assert int(c.request(Message(MsgType.STATS, {}))["n"]) == 7
+        c.close()
+        t.join(10)
+    finally:
+        lsock.close()
+
+
+def _fake_worker(handler):
+    """A scripted TCP shard 'worker' for protocol-level failure tests:
+    runs ``handler(conn)`` for one accepted connection on a daemon thread.
+    Returns (listener socket, thread)."""
+    import socket
+    import threading
+
+    lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    lsock.bind(("127.0.0.1", 0))
+    lsock.listen(1)
+
+    def serve():
+        conn, _ = lsock.accept()
+        with conn:
+            handler(conn)
+
+    t = threading.Thread(target=serve, daemon=True)
+    t.start()
+    return lsock, t
+
+
+def test_one_shard_error_does_not_brick_the_group():
+    """An ERROR reply from one shard raises WorkerError — and the fan-out
+    group abandons the round cleanly, so the next query works instead of
+    tripping the one-outstanding-request guard."""
+    from repro.transport.client import (FanoutGroup, RemoteShard,
+                                        ShardConnection)
+    from repro.transport.wire import (Message, MsgType, recv_message,
+                                      send_message)
+
+    def ok_partial(conn, rounds=2):
+        for _ in range(rounds):
+            msg = recv_message(conn)
+            q = msg["qwords"].shape[0]
+            send_message(conn, Message(MsgType.PARTIAL, {
+                "ids": np.full((q, 3), -1, np.int64),
+                "scores": np.full((q, 3), -np.inf, np.float32),
+                "has": np.zeros(q, bool)}, seq=msg.seq))
+
+    def error_then_ok(conn):
+        msg = recv_message(conn)
+        send_message(conn, Message(MsgType.ERROR, {"error": "boom"},
+                                   seq=msg.seq))
+        ok_partial(conn, rounds=1)
+
+    l0, t0 = _fake_worker(error_then_ok)
+    l1, t1 = _fake_worker(lambda c: ok_partial(c, rounds=2))
+    try:
+        conns = [ShardConnection(l0.getsockname(), timeout=10),
+                 ShardConnection(l1.getsockname(), timeout=10)]
+        group = FanoutGroup(conns, timeout=10)
+        shards = [RemoteShard(c, group) for c in conns]
+        hashes = np.zeros((2, NB), np.uint64)
+        qw = np.zeros((2, K), np.uint32)
+        pend = [sh.start_query(hashes, qw, 3, "sig") for sh in shards]
+        with pytest.raises(WorkerError, match="boom"):
+            for p in pend:
+                p.result()
+        # the plane is still queryable: a fresh round completes on both
+        pend = [sh.start_query(hashes, qw, 3, "sig") for sh in shards]
+        for p in pend:
+            part = p.result()
+            assert part.ids.shape == (2, 3)
+        for c in conns:
+            c.close()
+    finally:
+        l0.close()
+        l1.close()
+
+
+def test_midframe_timeout_poisons_connection():
+    """A reply cut mid-frame by a timeout cannot be re-synced by seq
+    pairing — the connection must refuse further use, not misparse."""
+    import time as _time
+
+    from repro.transport.client import ShardConnection
+    from repro.transport.wire import Message, MsgType, message_bytes, \
+        recv_message
+
+    def half_reply(conn):
+        msg = recv_message(conn)
+        frame = message_bytes(Message(MsgType.OK, {"n": 1}, seq=msg.seq))
+        conn.sendall(frame[: len(frame) - 4])      # cut mid-frame
+        _time.sleep(3)                             # past the client timeout
+
+    lsock, _ = _fake_worker(half_reply)
+    try:
+        c = ShardConnection(lsock.getsockname(), timeout=1)
+        with pytest.raises(TransportError):
+            c.request(Message(MsgType.STATS, {}))
+        assert c.broken
+        with pytest.raises(WorkerError, match="unusable"):
+            c.request(Message(MsgType.STATS, {}))
+    finally:
+        lsock.close()
+
+
+def test_worker_survives_client_hangup_mid_reply():
+    """A client that disconnects before reading a (large) reply must not
+    kill the worker: it returns to accept and serves the next client."""
+    import socket
+
+    from repro.transport.wire import Message, MsgType, send_message
+
+    cfg = StoreConfig(k=K, n_bands=NB, rows_per_band=R)
+    handles = spawn_workers(cfg, 1)
+    try:
+        # raw client: request a ~1.2 MB brute partial, vanish immediately
+        rude = socket.create_connection(handles[0].address, timeout=30)
+        send_message(rude, Message(
+            MsgType.BRUTE,
+            {"qwords": np.zeros((2000, K), np.uint32), "top_k": 50}, seq=1))
+        rude.close()
+        # the worker must still be there for a well-behaved coordinator
+        tcp = connect_sharded([handles[0].address], cfg, timeout=60)
+        sigs = _corpus(n=30, dup_pairs=0)
+        tcp.add(sigs)
+        ids, _ = tcp.query(sigs[:3], top_k=2)
+        assert np.array_equal(ids[:, 0], np.arange(3))
+        assert handles[0].alive
+        _shutdown(tcp, handles)
+    finally:
+        for h in handles:
+            h.terminate()
+
+
+def test_worker_error_propagates_with_message():
+    """A worker-side exception comes back as WorkerError carrying the
+    worker's own message, and the worker keeps serving afterwards."""
+    cfg = StoreConfig(k=K, n_bands=NB, rows_per_band=R)
+    handles = spawn_workers(cfg, 1)
+    try:
+        tcp = connect_sharded([h.address for h in handles], cfg, timeout=60)
+        with pytest.raises(WorkerError, match="expected"):
+            tcp.add(np.zeros((2, K + 1), np.int32))     # wrong K
+        sigs = _corpus(n=40, dup_pairs=0)
+        tcp.add(sigs)                          # connection still healthy
+        ids, _ = tcp.query(sigs[:3], top_k=2)
+        assert np.array_equal(ids[:, 0], np.arange(3))
+        _shutdown(tcp, handles)
+    finally:
+        for h in handles:
+            h.terminate()

@@ -1,0 +1,226 @@
+"""Wire protocol: round-trip fuzz + strict rejection of damaged frames.
+
+The framing layer is the trust boundary of the transport plane: every
+byte a worker or coordinator acts on passed through ``decode_frame`` /
+``recv_message``.  Round-trips are fuzzed over message types, field mixes,
+dtypes, and shapes (property-style via the hypothesis stub); the rejection
+tests pin the failure taxonomy — truncated, oversized, corrupted, and
+alien frames each raise their own exception, and a clean peer hangup is
+distinguishable from a damaged stream.
+"""
+
+import socket
+import struct
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.transport import wire
+from repro.transport.wire import Message, MsgType
+
+DTYPES = [np.bool_, np.int8, np.uint8, np.int16, np.uint16, np.int32,
+          np.uint32, np.int64, np.uint64, np.float32, np.float64]
+
+
+def _random_array(rng: np.random.Generator, dtype, shape):
+    if dtype == np.bool_:
+        return rng.integers(0, 2, shape).astype(np.bool_)
+    dt = np.dtype(dtype)
+    if dt.kind == "f":
+        return rng.normal(size=shape).astype(dt)
+    info = np.iinfo(dt)
+    return rng.integers(info.min, int(info.max) + 1, shape,
+                        dtype=dt, endpoint=False)
+
+
+def _assert_messages_equal(a: Message, b: Message):
+    assert a.type == b.type
+    assert a.seq == b.seq          # request/reply pairing survives the wire
+    assert set(a.fields) == set(b.fields)
+    for key, val in a.fields.items():
+        got = b.fields[key]
+        if isinstance(val, np.ndarray):
+            assert got.dtype == val.dtype, key
+            assert got.shape == val.shape, key
+            assert np.array_equal(val, got, equal_nan=True), key
+        else:
+            assert val == got, key
+
+
+# -- round-trip fuzz ---------------------------------------------------------
+
+@settings(max_examples=60)
+@given(st.data())
+def test_roundtrip_fuzz(data):
+    """Any field mix survives encode -> decode, through bytes and sockets."""
+    seed = data.draw(st.integers(0, 2**31 - 1), "seed")
+    rng = np.random.default_rng(seed)
+    mtype = MsgType(data.draw(st.sampled_from([int(t) for t in MsgType]),
+                              "mtype"))
+    fields = {}
+    for fi in range(data.draw(st.integers(0, 5), "n_fields")):
+        kind = data.draw(st.sampled_from(["int", "str", "arr"]), "kind")
+        key = f"f{fi}_{kind}"
+        if kind == "int":
+            fields[key] = data.draw(
+                st.integers(-(2**62), 2**62), "intval")
+        elif kind == "str":
+            n = data.draw(st.integers(0, 40), "slen")
+            fields[key] = "".join(
+                chr(data.draw(st.integers(32, 0x24F), "ch"))
+                for _ in range(n))      # incl. non-ascii codepoints
+        else:
+            dtype = DTYPES[data.draw(st.integers(0, len(DTYPES) - 1), "dt")]
+            ndim = data.draw(st.integers(0, 3), "ndim")
+            shape = tuple(data.draw(st.integers(0, 5), "dim")
+                          for _ in range(ndim))
+            fields[key] = _random_array(rng, dtype, shape)
+    msg = Message(mtype, fields,
+                  seq=data.draw(st.integers(0, 2**32 - 1), "seq"))
+    _assert_messages_equal(msg, wire.decode_frame(wire.message_bytes(msg)))
+    a, b = socket.socketpair()
+    try:
+        wire.send_message(a, msg)
+        _assert_messages_equal(msg, wire.recv_message(b))
+    finally:
+        a.close()
+        b.close()
+
+
+def test_roundtrip_typical_query():
+    """The hot-path QUERY layout, incl. the uint64 -> 2x uint32 planes."""
+    rng = np.random.default_rng(0)
+    hashes = rng.integers(0, 1 << 63, (7, 16)).astype(np.uint64) * \
+        np.uint64(3)                       # exercise the high bit
+    lo, hi = wire.split_u64(hashes)
+    assert lo.dtype == np.uint32 and hi.dtype == np.uint32
+    assert np.array_equal(wire.join_u64(lo, hi), hashes)
+    msg = Message(MsgType.QUERY, {
+        "hash_lo": lo, "hash_hi": hi,
+        "qwords": rng.integers(0, 1 << 32, (7, 8), dtype=np.uint32),
+        "top_k": 10, "mode": "packed"})
+    got = wire.decode_frame(wire.message_bytes(msg))
+    _assert_messages_equal(msg, got)
+    assert np.array_equal(
+        wire.join_u64(got["hash_lo"], got["hash_hi"]), hashes)
+
+
+def test_decoded_arrays_are_views():
+    """Zero-copy contract: decoded arrays alias the frame buffer."""
+    msg = Message(MsgType.PARTIAL,
+                  {"ids": np.arange(12, dtype=np.int64).reshape(3, 4)})
+    frame = wire.message_bytes(msg)
+    got = wire.decode_frame(frame)
+    assert got["ids"].base is not None     # a view, not a fresh allocation
+
+
+# -- rejection ----------------------------------------------------------------
+
+def _frame() -> bytes:
+    return wire.message_bytes(Message(MsgType.PARTIAL, {
+        "ids": np.arange(6, dtype=np.int64).reshape(2, 3),
+        "scores": np.linspace(0, 1, 6, dtype=np.float32).reshape(2, 3),
+        "has": np.asarray([True, False])}))
+
+
+@settings(max_examples=40)
+@given(st.data())
+def test_truncated_frames_rejected(data):
+    """Every proper prefix of a frame is rejected, never misparsed."""
+    frame = _frame()
+    cut = data.draw(st.integers(0, len(frame) - 1), "cut")
+    with pytest.raises(wire.TruncatedFrame):
+        wire.decode_frame(frame[:cut])
+
+
+@settings(max_examples=40)
+@given(st.data())
+def test_corrupted_payload_rejected(data):
+    """Any single flipped payload byte trips the checksum."""
+    frame = bytearray(_frame())
+    pos = data.draw(st.integers(wire.HEADER_SIZE, len(frame) - 1), "pos")
+    frame[pos] ^= data.draw(st.integers(1, 255), "xor")
+    with pytest.raises(wire.ChecksumError):
+        wire.decode_frame(bytes(frame))
+
+
+def test_oversized_frame_rejected_before_allocation():
+    frame = _frame()
+    with pytest.raises(wire.FrameTooLarge):
+        wire.decode_frame(frame, max_payload=8)
+    # the header check alone suffices — no payload needed to reject
+    header = struct.pack("<2sBBIII", wire.MAGIC, wire.VERSION,
+                         int(MsgType.OK), 0, wire.MAX_PAYLOAD + 1, 0)
+    with pytest.raises(wire.FrameTooLarge):
+        wire.decode_header(header)
+
+
+def test_bad_magic_version_and_type_rejected():
+    frame = bytearray(_frame())
+    bad = frame.copy()
+    bad[0:2] = b"XX"
+    with pytest.raises(wire.ProtocolError):
+        wire.decode_frame(bytes(bad))
+    bad = frame.copy()
+    bad[2] = 99                            # version from the future
+    with pytest.raises(wire.ProtocolError):
+        wire.decode_frame(bytes(bad))
+    bad = frame.copy()
+    bad[3] = 200                           # unknown message type
+    with pytest.raises(wire.ProtocolError):
+        wire.decode_frame(bytes(bad))
+
+
+def test_trailing_garbage_rejected():
+    with pytest.raises(wire.ProtocolError):
+        wire.decode_frame(_frame() + b"\x00")
+
+
+def test_unsupported_field_values_rejected_at_encode():
+    with pytest.raises(wire.ProtocolError):
+        wire.message_bytes(Message(MsgType.OK, {"x": 3.5}))
+    with pytest.raises(wire.ProtocolError):
+        wire.message_bytes(Message(MsgType.OK, {"x": [1, 2]}))
+    with pytest.raises(wire.ProtocolError):
+        wire.message_bytes(Message(
+            MsgType.OK, {"x": np.zeros(2, dtype=np.complex64)}))
+
+
+def test_malformed_but_crc_valid_payload_rejected_as_protocol_error():
+    """A CRC-valid frame with absurd content (dims overflowing int64,
+    non-ascii key bytes) must be a WireError, not a raw ValueError — a
+    worker answers ERROR and survives instead of crashing."""
+    # array field whose dims multiply past int64
+    payload = struct.pack("<H", 1) + struct.pack("<B", 1) + b"x" + \
+        struct.pack("<BBB2q", 2, 7, 2, 1 << 33, 1 << 33)
+    frame = struct.pack("<2sBBIII", wire.MAGIC, wire.VERSION,
+                        int(MsgType.OK), 0, len(payload),
+                        __import__("zlib").crc32(payload))
+    with pytest.raises(wire.WireError):
+        wire.decode_frame(frame + payload)
+    # non-ascii field-name bytes
+    payload = struct.pack("<H", 1) + struct.pack("<B", 2) + b"\xff\xfe" + \
+        struct.pack("<Bq", 0, 1)
+    frame = struct.pack("<2sBBIII", wire.MAGIC, wire.VERSION,
+                        int(MsgType.OK), 0, len(payload),
+                        __import__("zlib").crc32(payload))
+    with pytest.raises(wire.WireError):
+        wire.decode_frame(frame + payload)
+
+
+def test_socket_eof_taxonomy():
+    """Clean hangup at a frame boundary vs mid-frame are distinct errors."""
+    a, b = socket.socketpair()
+    a.close()
+    with pytest.raises(wire.ConnectionClosed):
+        wire.recv_message(b)
+    b.close()
+    a, b = socket.socketpair()
+    frame = _frame()
+    a.sendall(frame[: len(frame) // 2])
+    a.close()                              # died mid-frame
+    with pytest.raises(wire.TruncatedFrame):
+        wire.recv_message(b)
+    b.close()
