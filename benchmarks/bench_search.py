@@ -14,8 +14,15 @@ plane over real tcp shard workers (``repro.transport``) and records the
 query wall-time split — submit/serialize (broadcast), per-shard partial
 compute + gather (partial), and reduction (merge) — next to the inproc
 split, so transport overhead is tracked per shard count from day one.
-Rows are returned for the ``BENCH_search.json`` artifact (written by
-``run.py``).
+
+The ``--pipeline-depth`` axis measures end-to-end ingest (sign -> pack ->
+scatter) through ``serve.search.IngestPipeline`` per depth and transport,
+recording the sign/wait/scatter wall-time split — ``wait`` is the device
+sync, which shrinks toward zero when the scatter of batch N covered batch
+N+1's signing (the overlap the pipeline exists for).  Every (transport,
+depth) run is asserted to answer queries **bit-identically** to the serial
+(depth=1) inproc ingest of the same batches.  Rows are returned for the
+``BENCH_search.json`` artifact (written by ``run.py``).
 
 Standalone:  PYTHONPATH=src python -m benchmarks.bench_search --smoke
 """
@@ -81,10 +88,74 @@ def _timing_split(sh, n_queries: int) -> str:
                     for key in ("broadcast_s", "partial_s", "merge_s"))
 
 
+def _bench_ingest_pipeline(em, depths: tuple[int, ...],
+                           transports: tuple[str, ...],
+                           n_docs: int, batch: int) -> None:
+    """End-to-end pipelined ingest (sign -> pack -> scatter) per depth and
+    transport, with the sign/wait/scatter split and a bit-identity assert
+    of every run against serial (depth=1) inproc ingest."""
+    import time as _time
+
+    from repro.serve.search import SearchConfig, SimilaritySearchService
+
+    d, k, nb, r, s = 1 << 14, 128, 32, 4, 2
+    rng = np.random.default_rng(7)
+    nnz = 160
+    docs = np.sort(rng.integers(0, d, (n_docs, nnz), np.int32), axis=1)
+    docs[n_docs - n_docs // 20:] = docs[: n_docs // 20]   # planted dups
+    q = docs[rng.choice(n_docs, min(64, n_docs), replace=False)]
+    batches = [docs[lo: lo + batch] for lo in range(0, n_docs, batch)]
+
+    # signing is shape-specialized: warm every distinct batch shape once so
+    # the timed runs measure steady-state ingest, not XLA compiles (the jit
+    # caches are module-level, so one warm service covers every run)
+    warm = SimilaritySearchService(SearchConfig(
+        d=d, k=k, n_bands=nb, rows_per_band=r))
+    for shape_rep in {bt.shape: bt for bt in batches + [q]}.values():
+        np.asarray(warm._sign(shape_rep, "sparse"))
+
+    def build(transport, depth):
+        svc = SimilaritySearchService(SearchConfig(
+            d=d, k=k, n_bands=nb, rows_per_band=r, n_shards=s,
+            transport=transport))
+        with svc:
+            with svc.pipeline(depth=depth) as pipe:
+                t0 = _time.perf_counter()
+                for bt in batches:
+                    pipe.submit(bt)
+                pipe.flush()
+                wall = _time.perf_counter() - t0
+            ans = svc.query_sparse(q, top_k=10)
+            return wall, dict(pipe.timings), ans
+
+    # serial inproc ingest is ALWAYS the parity baseline (run first even
+    # when not requested as an emitted row)
+    asked = [(tr, dep) for tr in transports for dep in depths]
+    ordered = [("inproc", 1)] + [rd for rd in asked if rd != ("inproc", 1)]
+    ref = None
+    for transport, depth in ordered:
+        wall, tm, ans = build(transport, depth)
+        if ref is None:
+            ref = ans
+        else:             # pipelining must never change an answer
+            assert np.array_equal(ref[0], ans[0]), \
+                f"ingest-pipeline ids diverge ({transport}, depth={depth})"
+            assert np.array_equal(ref[1], ans[1]), \
+                f"ingest-pipeline scores diverge ({transport}, depth={depth})"
+        if (transport, depth) in asked:
+            em(f"search_ingest_{transport}_d{depth}", wall * 1e6,
+               f"items_per_s={n_docs / wall:.0f}|parity=exact|"
+               f"sign_ms={tm['sign_s'] * 1e3:.1f}|"
+               f"wait_ms={tm['wait_s'] * 1e3:.1f}|"
+               f"scatter_ms={tm['scatter_s'] * 1e3:.1f}")
+
+
 def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
         n_bands: int = 32, rows_per_band: int = 4,
         shards: tuple[int, ...] = (2, 4),
-        transports: tuple[str, ...] = ("inproc", "tcp")) -> list[dict]:
+        transports: tuple[str, ...] = ("inproc", "tcp"),
+        pipeline_depths: tuple[int, ...] = (1, 2, 4),
+        ingest_docs: int = 20_000, ingest_batch: int = 512) -> list[dict]:
     rows_out: list[dict] = []
 
     def em(name, us, derived):
@@ -213,6 +284,11 @@ def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
                     for h in handles:
                         h.terminate()
 
+    # pipelined end-to-end ingest (sign -> pack -> scatter) per depth
+    if pipeline_depths:
+        _bench_ingest_pipeline(em, pipeline_depths, transports,
+                               ingest_docs, ingest_batch)
+
     return rows_out
 
 
@@ -230,6 +306,9 @@ def main(argv=None) -> None:
     ap.add_argument("--transport", default="both",
                     choices=["both", "inproc", "tcp"],
                     help="which shard backends the sharded axis measures")
+    ap.add_argument("--pipeline-depth", default="1,2,4",
+                    help="comma-separated ingest pipeline depths "
+                         "(1 = serial baseline; empty disables the axis)")
     ap.add_argument("--n-items", type=int, default=None)
     ap.add_argument("--n-queries", type=int, default=None)
     args = ap.parse_args(argv)
@@ -237,7 +316,8 @@ def main(argv=None) -> None:
         common.set_smoke(True)
     kw = {}
     if args.smoke:
-        kw.update(n_items=2_000, n_queries=16)
+        kw.update(n_items=2_000, n_queries=16,
+                  ingest_docs=1_000, ingest_batch=128)
     if args.n_items is not None:
         kw["n_items"] = args.n_items
     if args.n_queries is not None:
@@ -245,6 +325,8 @@ def main(argv=None) -> None:
     kw["shards"] = tuple(int(s) for s in args.shards.split(",") if s)
     kw["transports"] = ("inproc", "tcp") if args.transport == "both" \
         else (args.transport,)
+    kw["pipeline_depths"] = tuple(
+        int(d) for d in args.pipeline_depth.split(",") if d)
     print("name,us_per_call,derived")
     run(**kw)
 

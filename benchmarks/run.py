@@ -33,7 +33,8 @@ def main() -> None:
     bench_throughput.run()   # §5: throughput + K->2 memory
     bench_dedup.run(n_docs=24 if smoke else 120)   # production dedup pipeline
     search_rows = bench_search.run(   # store vs dict + sharded plane
-        **({"n_items": 2_000, "n_queries": 16} if smoke else {}))
+        **({"n_items": 2_000, "n_queries": 16,
+            "ingest_docs": 1_000, "ingest_batch": 128} if smoke else {}))
     sign_rows = bench_sign.run()   # signing hot path (kernel dispatch)
 
     # smoke numbers are not comparable: never clobber the tracked artifacts

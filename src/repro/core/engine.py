@@ -100,6 +100,27 @@ class SketchEngine:
             return self.signatures_sparse(data, pack_b=b)
         raise ValueError(f"unknown layout {layout!r}")
 
+    def sign(self, data: Array, *, layout: str = "sparse",
+             pack_b: int | None = None) -> Array:
+        """One signing front door: layout x (packed | raw) in one call.
+
+        Returns a **device array without syncing** — JAX dispatch is
+        asynchronous on every backend, so the computation runs in the
+        background until someone materializes the result
+        (``np.asarray``/``block_until_ready``).  That gap is what
+        ``serve.search.IngestPipeline`` overlaps: batch N+1's signing
+        executes while batch N's host-side scatter is still running.  Keep
+        batch shapes uniform — each distinct shape compiles its own
+        executable.
+        """
+        if pack_b is not None:
+            return self.sign_packed(data, pack_b, layout=layout)
+        if layout == "dense":
+            return self.signatures_dense(data)
+        if layout == "sparse":
+            return self.signatures_sparse(data)
+        raise ValueError(f"unknown layout {layout!r}")
+
     @functools.cached_property
     def parameter_bytes(self) -> int:
         """Memory for the hashing parameters — the paper's headline win."""

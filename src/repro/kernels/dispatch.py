@@ -29,6 +29,14 @@ Block sizes left as ``None`` are resolved through the autotuner
 ``pack_b`` fuses the b-bit truncate+pack epilogue into the dense kernels AND
 the sparse window-min kernels (packed words come straight off the kernel /
 the compiled scan); only the gather oracle still packs as a separate step.
+No shape gate is needed on the fused epilogue: off-TPU the resolved impls
+(``ref``/``windows``) have no in-kernel epilogue — ``pack_b`` there is the
+same ``pack_codes`` call the two-step form makes, so the two forms dispatch
+identical work (an early benchmark artifact recording fused ~10% slower at
+B8/D4096/K256 was non-interleaved timing on a shared box; interleaved
+min-of-N shows them equal — see bench_sign.py).  On TPU the epilogue packs
+from VMEM scratch it already holds, which is never worse than a second
+HBM round trip.
 
 ``lsh_probe`` is the serving-side twin of the signing front door: the LSH
 bucket-probe leg of a query batch, run on device over the table's resident

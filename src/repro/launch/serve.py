@@ -55,7 +55,20 @@ def serve_search(args) -> None:
             d=1 << 14, k=256, n_bands=64, rows_per_band=4,
             n_shards=args.shards, partition=args.partition,
             probe_impl=args.probe, transport=args.transport)) as svc:
-        svc.add_sparse(idx)
+        # pipelined fused ingest: batch N+1 signs while batch N scatters
+        # (--pipeline-depth 1 = serial; answers identical at any depth)
+        bs = max(1, min(args.ingest_batch, len(idx)))
+        t0 = time.perf_counter()
+        with svc.pipeline(depth=args.pipeline_depth) as pipe:
+            for lo in range(0, len(idx), bs):
+                pipe.submit(idx[lo: lo + bs])
+        t_ingest = time.perf_counter() - t0
+        tm = pipe.timings
+        print(f"[serve] ingest {svc.size} docs in {t_ingest * 1e3:.1f} ms "
+              f"(depth={args.pipeline_depth}, "
+              f"{svc.size / t_ingest:.0f} docs/s; sign={tm['sign_s'] * 1e3:.0f}ms "
+              f"wait={tm['wait_s'] * 1e3:.0f}ms "
+              f"scatter={tm['scatter_s'] * 1e3:.0f}ms)")
         t0 = time.perf_counter()
         ids, scores = svc.query_sparse(idx[: args.batch], top_k=5)
         dt = time.perf_counter() - t0
@@ -86,6 +99,11 @@ def main() -> None:
                     default="inproc",
                     help="shard backend: in-process loop or spawned tcp "
                          "shard workers (search mode)")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="ingest batches signed-but-unscattered in flight "
+                         "(1 = serial sign->scatter; search mode)")
+    ap.add_argument("--ingest-batch", type=int, default=128,
+                    help="documents per ingest pipeline batch (search mode)")
     args = ap.parse_args()
     if args.mode == "lm":
         serve_lm(args)

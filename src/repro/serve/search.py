@@ -20,11 +20,23 @@ localhost and talks the framed wire protocol (``repro.transport``) — same
 answers bit-for-bit, but the index outgrows one process.  tcp services own
 their workers: call ``close()`` (or use the service as a context manager)
 to shut them down.
+
+Ingest runs the fused sign->pack fast path end-to-end whenever the banding
+is word-aligned (``rows_per_band % (32/b) == 0``; always true at the
+default b = 32): signatures leave the kernel as b-bit packed words
+(``SketchEngine.sign_packed``) and are indexed from the words directly
+(``add_packed``/``query_packed``) — no (B, K) int32 batch ever forms on the
+host, and at b = 32 answers are bit-identical to the raw-signature path.
+``IngestPipeline`` adds double-buffering on top: batch N+1's signing is
+dispatched (JAX async) while batch N scatters into the shards, so device
+and host work overlap instead of strictly alternating.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -83,14 +95,37 @@ class SimilaritySearchService:
                 store_cfg, n_shards=cfg.n_shards, partition=cfg.partition,
                 probe_impl=cfg.probe_impl)
 
+    # -- the fused fast path -----------------------------------------------
+    @property
+    def packed_ingest(self) -> bool:
+        """Whether the fused sign->pack path serves this config (band
+        boundaries fall on word boundaries; always true at b = 32)."""
+        return self.cfg.rows_per_band % (32 // self.cfg.b) == 0
+
+    def _sign(self, data, layout: str):
+        """Dispatch signing for one batch (async — returns a device array,
+        packed words on the fused path, raw signatures otherwise)."""
+        pack_b = self.cfg.b if self.packed_ingest else None
+        return self.engine.sign(jnp.asarray(data), layout=layout,
+                                pack_b=pack_b)
+
+    def _scatter(self, signed: np.ndarray) -> None:
+        if self.packed_ingest:
+            self.store.add_packed(signed)
+        else:
+            self.store.add(signed)
+
     # -- indexing ----------------------------------------------------------
     def add_sparse(self, idx: np.ndarray) -> None:
-        sigs = np.asarray(self.engine.signatures_sparse(jnp.asarray(idx)))
-        self.store.add(sigs)
+        self._scatter(np.asarray(self._sign(idx, "sparse")))
 
     def add_dense(self, v: np.ndarray) -> None:
-        sigs = np.asarray(self.engine.signatures_dense(jnp.asarray(v)))
-        self.store.add(sigs)
+        self._scatter(np.asarray(self._sign(v, "dense")))
+
+    def pipeline(self, *, depth: int = 2,
+                 layout: str = "sparse") -> "IngestPipeline":
+        """A double-buffered ingest session over this service's store."""
+        return IngestPipeline(self, depth=depth, layout=layout)
 
     @property
     def size(self) -> int:
@@ -98,21 +133,24 @@ class SimilaritySearchService:
 
     # -- querying ----------------------------------------------------------
     def query_sparse(self, idx: np.ndarray, top_k: int = 10):
-        sigs = np.asarray(self.engine.signatures_sparse(jnp.asarray(idx)))
-        return self._query(sigs, top_k)
+        return self._query(np.asarray(self._sign(idx, "sparse")), top_k)
 
     def query_dense(self, v: np.ndarray, top_k: int = 10):
-        sigs = np.asarray(self.engine.signatures_dense(jnp.asarray(v)))
-        return self._query(sigs, top_k)
+        return self._query(np.asarray(self._sign(v, "dense")), top_k)
 
-    def _query(self, qsigs: np.ndarray, top_k: int):
+    def _query(self, qsigned: np.ndarray, top_k: int):
         """Returns (ids (Q, top_k) int64 [-1 pad], scores (Q, top_k) f32).
 
         Queries with no bucket hit in any shard fall back to brute force
         over the whole index — independently per query (a query with
         candidates keeps its bucket-restricted ranking)."""
-        assert self.store.size > 0
-        return self.store.query(qsigs, top_k)
+        if self.store.size <= 0:
+            raise ValueError(
+                "query on an empty index: add documents before querying "
+                "(the brute-force fallback has nothing to score)")
+        if self.packed_ingest:
+            return self.store.query_packed(qsigned, top_k)
+        return self.store.query(qsigned, top_k)
 
     # -- lifecycle ---------------------------------------------------------
     def close(self) -> None:
@@ -131,3 +169,84 @@ class SimilaritySearchService:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+
+class IngestPipeline:
+    """Double-buffered ingest: sign batch N+1 while batch N scatters.
+
+    ``submit(batch)`` dispatches JAX signing for the batch (asynchronous —
+    no ``np.asarray`` sync) and enqueues the device array; once ``depth``
+    batches are in flight, the oldest is drained: its words are
+    materialized (waiting only for whatever device work is still
+    outstanding) and scattered into the shards.  While that host-side
+    scatter runs — LSH insert for in-process shards, the ADD fan-out for
+    tcp shards — the younger batches' signing keeps executing in the
+    background, so the signing engine never sits idle between batches.
+
+    ``depth`` is the maximum number of signed-but-unscattered batches in
+    flight: ``depth=1`` is the serial path (sign, wait, scatter —
+    bit-identical answers, no overlap), ``depth=2`` is classic double
+    buffering, higher depths only add device-memory pressure unless
+    scatter time varies a lot between batches.  Scatter order always
+    equals submit order, so for ANY depth the store state — ids, buckets,
+    spills — is bit-identical to serial ingestion of the same batches.
+
+    ``flush()`` (or leaving the context) drains everything still queued.
+    ``timings`` accumulates the wall-time split: ``sign_s`` (dispatch),
+    ``wait_s`` (device sync — small when scatter covered the compute),
+    ``scatter_s`` (store writes), ``wall_s`` (everything, including queue
+    management).
+    """
+
+    def __init__(self, service: SimilaritySearchService, *, depth: int = 2,
+                 layout: str = "sparse"):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1 (got {depth})")
+        if layout not in ("sparse", "dense"):
+            raise ValueError(f"unknown layout {layout!r}")
+        self.service = service
+        self.depth = depth
+        self.layout = layout
+        self._inflight: collections.deque = collections.deque()
+        self.timings = {"sign_s": 0.0, "wait_s": 0.0, "scatter_s": 0.0,
+                        "wall_s": 0.0, "n_batches": 0, "n_items": 0}
+
+    def __len__(self) -> int:
+        return len(self._inflight)
+
+    def submit(self, batch) -> None:
+        """Sign one batch (async) and scatter whatever is due."""
+        t0 = time.perf_counter()
+        signed = self.service._sign(batch, self.layout)
+        t1 = time.perf_counter()
+        self._inflight.append((signed, len(batch)))
+        self.timings["sign_s"] += t1 - t0
+        while len(self._inflight) >= self.depth:
+            self._drain_one()
+        self.timings["wall_s"] += time.perf_counter() - t0
+
+    def _drain_one(self) -> None:
+        signed, n = self._inflight.popleft()
+        t0 = time.perf_counter()
+        host = np.asarray(signed)          # sync: outstanding device work
+        t1 = time.perf_counter()
+        self.service._scatter(host)
+        t2 = time.perf_counter()
+        self.timings["wait_s"] += t1 - t0
+        self.timings["scatter_s"] += t2 - t1
+        self.timings["n_batches"] += 1
+        self.timings["n_items"] += n
+
+    def flush(self) -> None:
+        """Drain every in-flight batch (the pipeline stays usable)."""
+        t0 = time.perf_counter()
+        while self._inflight:
+            self._drain_one()
+        self.timings["wall_s"] += time.perf_counter() - t0
+
+    def __enter__(self) -> "IngestPipeline":
+        return self
+
+    def __exit__(self, exc_type, *exc) -> None:
+        if exc_type is None:               # don't mask the original error
+            self.flush()

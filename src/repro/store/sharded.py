@@ -87,13 +87,16 @@ class ShardBackend(Protocol):
 
     The contract mirrors what the coordinator needs and nothing more:
     writes route a partitioned batch (local ids are assigned worker-side in
-    arrival order, exactly like ``SketchStore``), queries are a
-    submit/gather pair so S shards can compute concurrently, and partials
-    come back in local ids (the coordinator owns the gid maps).
+    arrival order, exactly like ``SketchStore``) and are a submit/gather
+    pair like queries (``start_add``) so S shards index concurrently;
+    queries are a submit/gather pair so S shards can compute concurrently,
+    and partials come back in local ids (the coordinator owns the gid
+    maps).
     """
 
     def add(self, sigs: np.ndarray) -> int: ...
     def add_packed(self, words: np.ndarray) -> int: ...
+    def start_add(self, batch: np.ndarray, *, packed: bool) -> Pending: ...
     def start_query(self, hashes: np.ndarray, qwords: np.ndarray,
                     top_k: int, mode: str) -> Pending: ...
     def start_brute(self, qwords: np.ndarray, top_k: int) -> Pending: ...
@@ -104,7 +107,15 @@ class ShardBackend(Protocol):
 
 class _Lazy:
     """In-process Pending: evaluate at gather time (mirrors the remote
-    submit/gather split so fan-out timing buckets mean the same thing)."""
+    submit/gather split so fan-out timing buckets mean the same thing).
+
+    ``lazy = True`` is the write path's no-work-until-read guarantee: a
+    lazy ADD pending that is never gathered provably never touched its
+    store (a remote pending's work runs worker-side whether or not the
+    reply is read) — ``_scatter`` uses this to keep a clean first failure
+    from poisoning the plane."""
+
+    lazy = True
 
     def __init__(self, fn):
         self._fn = fn
@@ -144,6 +155,12 @@ class InProcessShard:
     def add_packed(self, words: np.ndarray) -> int:
         return self._add(self.store.add_packed, words)
 
+    def start_add(self, batch: np.ndarray, *, packed: bool = False) -> _Lazy:
+        # routes through self.add/add_packed (not the store directly) so
+        # subclass overrides keep intercepting the write path
+        fn = self.add_packed if packed else self.add
+        return _Lazy(lambda: fn(batch))
+
     def start_query(self, hashes: np.ndarray, qwords: np.ndarray,
                     top_k: int, mode: str) -> _Lazy:
         def run():
@@ -158,8 +175,12 @@ class InProcessShard:
             qwords, top_k))
 
     def stats(self) -> dict:
+        impl = self.store.probe_impl
+        if impl == "auto":                   # report what auto resolves to
+            from repro.kernels.dispatch import select_probe_impl
+            impl = select_probe_impl()
         return {"size": self.store.size, "n_spilled": self.store.n_spilled,
-                "n_rebuilds": self.store.n_rebuilds}
+                "n_rebuilds": self.store.n_rebuilds, "probe_impl": impl}
 
     def save(self, path: str) -> None:
         self.store.save(path)
@@ -237,42 +258,73 @@ class ShardedSketchStore:
                 f"plane is inconsistent after a failed add ({self._failed}); "
                 "rebuild it or reload from the last snapshot")
 
-    def _scatter(self, batch: np.ndarray, add_one) -> np.ndarray:
-        """Assign global ids, route batch rows to shards, record the maps.
+    def _scatter(self, batch: np.ndarray, *, packed: bool) -> np.ndarray:
+        """Assign global ids, fan batch slices out to all shards, record
+        the maps.
 
-        A batch is all-or-nothing at the coordinator: if a shard fails
-        after an earlier shard already indexed its slice, or the failing
-        shard itself reports a partial write (``e.dirty`` — worker indexed
-        rows but errored, or an in-process append landed before the insert
-        raised), retrying would re-issue the same gids and duplicate rows —
-        so the plane is marked inconsistent and refuses further writes and
-        reads instead of silently double-indexing.  A clean pre-write
-        failure (validation error, dead worker before any write) leaves
+        Writes fan out like queries: every shard's slice is submitted first
+        (``start_add``), then gathered — remote shards index concurrently
+        over the wire instead of one blocking request per shard, which is
+        what closes the tcp-vs-inproc build gap.
+
+        A batch is all-or-nothing at the coordinator: if any shard indexed
+        its slice while another failed, or a failing shard reports a
+        partial write (``e.dirty``), or the fan-out broke after frames hit
+        the wire (``e.unknown_outcome`` — nobody can prove which workers
+        processed their slice), retrying would re-issue the same gids and
+        duplicate rows — so the plane is marked inconsistent and refuses
+        further writes and reads instead of silently double-indexing.  A
+        failure that provably left every shard unwritten (validation
+        ERROR replies, a submit-phase failure before any frame was sent,
+        an in-process exception with no earlier shard evaluated) leaves
         the plane usable.
         """
         self._check_consistent()
         n = len(batch)
         gids = np.arange(self.n_items, self.n_items + n, dtype=np.int64)
         owner = self._shard_of(gids)
+        # submit phase: remote backends only queue frames here (the first
+        # gather drives the sockets), in-process backends build thunks — a
+        # submit failure abandons the queued round before anything is sent,
+        # so the plane stays usable
+        pend = []
+        for s in range(self.n_shards):
+            sel = np.flatnonzero(owner == s)
+            if len(sel):
+                pend.append((s, sel,
+                             self.shards[s].start_add(batch[sel],
+                                                      packed=packed)))
+        # gather phase: consume EVERY pending (remote slices run worker-side
+        # whether or not their reply is read), then decide poisoning from
+        # the full outcome set.  Lazy in-process pendings after a failure
+        # are skipped — never evaluated, provably never written.
         wrote_any = False
-        try:
-            for s in range(self.n_shards):
-                sel = np.flatnonzero(owner == s)
-                if not len(sel):
-                    continue
-                added = add_one(self.shards[s], batch[sel])
+        sure_clean = True       # every failure provably left stores unwritten
+        first_err: BaseException | None = None
+        for s, sel, p in pend:
+            if first_err is not None and getattr(p, "lazy", False):
+                continue
+            try:
+                added = p.result()
                 wrote_any = True
                 if added != len(sel):
                     raise RuntimeError(
                         f"shard {s} indexed {added} of {len(sel)} rows")
-                need = self._gid_len[s] + len(sel)
-                self._gid_buf[s] = grown(self._gid_buf[s], need)
-                self._gid_buf[s][self._gid_len[s]: need] = gids[sel]
-                self._gid_len[s] = need
-        except BaseException as e:
-            if wrote_any or getattr(e, "dirty", False):
-                self._failed = f"{type(e).__name__} mid-batch"
-            raise
+            except BaseException as e:
+                if getattr(e, "dirty", False) or \
+                        getattr(e, "unknown_outcome", False):
+                    sure_clean = False
+                if first_err is None:
+                    first_err = e
+                continue
+            need = self._gid_len[s] + len(sel)
+            self._gid_buf[s] = grown(self._gid_buf[s], need)
+            self._gid_buf[s][self._gid_len[s]: need] = gids[sel]
+            self._gid_len[s] = need
+        if first_err is not None:
+            if wrote_any or not sure_clean:
+                self._failed = f"{type(first_err).__name__} mid-batch"
+            raise first_err
         self.n_items += n
         return gids
 
@@ -280,13 +332,11 @@ class ShardedSketchStore:
     def add(self, sigs: np.ndarray) -> np.ndarray:
         """Partition + index a (B, K) int32 signature batch; returns the
         global ids (assigned in arrival order, same as one SketchStore)."""
-        return self._scatter(np.asarray(sigs),
-                             lambda sh, rows: sh.add(rows))
+        return self._scatter(np.asarray(sigs), packed=False)
 
     def add_packed(self, words: np.ndarray) -> np.ndarray:
         """``add`` for (B, W) uint32 fused sign->pack words."""
-        return self._scatter(np.asarray(words, np.uint32),
-                             lambda sh, rows: sh.add_packed(rows))
+        return self._scatter(np.asarray(words, np.uint32), packed=True)
 
     # -- reads -------------------------------------------------------------
     def _to_global(self, shard: int, part: TopKPartial) -> TopKPartial:

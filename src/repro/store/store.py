@@ -150,6 +150,7 @@ class SketchStore:
         """Append + index a (B, K) int32 signature batch; returns new ids."""
         self._band_keys("sig", write=True)
         sigs = np.asarray(sigs)
+        self._pregrow(len(sigs))
         if self.cfg.store_signatures:
             ids = self.buffer.append(sigs)
         else:                       # index-only: skip the packed copy
@@ -174,6 +175,7 @@ class SketchStore:
         self._check_packed_banding()
         self._band_keys("packed", write=True)
         words = np.asarray(words, np.uint32)
+        self._pregrow(len(words))
         if self.cfg.store_signatures:
             ids = self.buffer.append_packed(words)
         else:
@@ -194,9 +196,35 @@ class SketchStore:
     # pathological input
     _MAX_BUCKET_WIDTH = 256
 
-    def _slot_cap(self) -> int:
-        target = max(self.cfg.n_slots, 4 * max(self.table.n_items, 1))
+    def _slot_cap(self, n_items: int | None = None) -> int:
+        if n_items is None:
+            n_items = self.table.n_items
+        target = max(self.cfg.n_slots, 4 * max(n_items, 1))
         return 1 << (target - 1).bit_length()
+
+    def _pregrow(self, n_new: int) -> None:
+        """Grow slots geometrically ahead of the projected post-batch load.
+
+        Reactive doubling inserts the batch into a too-small table (probe
+        exhaustion spills everything), then rebuilds — replaying the batch
+        it just inserted, once per doubling.  Growing to the projected size
+        *before* the insert replays only the already-indexed items, once,
+        and the batch lands in a table at sane load.  Final geometry is the
+        same power-of-two ladder the reactive loop climbs, so the exactness
+        story is unchanged (candidate sets never depend on geometry).
+        """
+        if not self.cfg.auto_rebuild or n_new <= 0:
+            return
+        t = self.table
+        projected = t.n_items + n_new
+        # distinct keys per band <= items, so this is the load ceiling
+        need = projected / self.cfg.rebuild_load_factor
+        cap = self._slot_cap(projected)
+        ns = t.n_slots
+        while ns < need and ns < cap:
+            ns *= 2
+        if ns > t.n_slots:
+            self.rebuild(n_slots=min(ns, cap))
 
     def _maybe_rebuild(self) -> None:
         # loop: one large add can overshoot a single doubling by far.  each

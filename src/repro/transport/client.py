@@ -128,6 +128,12 @@ class ShardConnection:
             # worker says the failed op mutated its store (ADD landed
             # partially): the coordinator must not treat a retry as safe
             err.dirty = bool(reply.fields.get("dirty", 0))
+            # an ERROR reply arrives over an intact stream, so unless the
+            # worker said dirty, the failed op provably did NOT mutate its
+            # store — which is why this error carries no ``unknown_outcome``
+            # flag and a clean validation failure never poisons the plane
+            # (the write-path decision in ``ShardedSketchStore._scatter``
+            # keys off dirty/unknown_outcome)
             raise err
         return reply
 
@@ -143,15 +149,29 @@ class ShardConnection:
 
 
 class _Pending:
-    """Handle for one in-flight fan-out request."""
+    """Handle for one in-flight fan-out request.
 
-    def __init__(self, group: "FanoutGroup", conn: ShardConnection):
+    ``decode`` turns the reply message into the caller's value (a partial
+    for QUERY/BRUTE, a row count for ADD).  ``reset_on_error`` is the query
+    path's behavior: a failed take abandons the sibling replies so the next
+    round starts clean.  The write path passes ``False`` — it consumes
+    every pending of the round itself, because the poison decision needs
+    ALL per-shard outcomes, not just the first failure.
+    """
+
+    lazy = False          # remote work runs whether or not result() is read
+
+    def __init__(self, group: "FanoutGroup", conn: ShardConnection, *,
+                 decode=_partial_from, reset_on_error: bool = True):
         self._group = group
         self._conn = conn
+        self._decode = decode
+        self._reset_on_error = reset_on_error
 
-    def result(self) -> TopKPartial:
+    def result(self):
         self._group.flush()
-        return _partial_from(self._group.take(self._conn))
+        return self._decode(self._group.take(
+            self._conn, reset_on_error=self._reset_on_error))
 
 
 class FanoutGroup:
@@ -172,10 +192,14 @@ class FanoutGroup:
         self._in: dict[ShardConnection, bytearray] = {}
         self._want: dict[ShardConnection, int] = {}     # expected reply seq
         self._replies: dict[ShardConnection, Message] = {}
+        self._round_error: BaseException | None = None  # why the round died
 
-    def submit(self, conn: ShardConnection, msg: Message) -> _Pending:
+    def submit(self, conn: ShardConnection, msg: Message, *,
+               decode=_partial_from, reset_on_error: bool = True) -> _Pending:
         if conn in self._out or conn in self._replies:
             raise TransportError("one outstanding fan-out request per shard")
+        if not self._out and not self._replies:
+            self._round_error = None      # a fresh round: forget old failures
         try:
             conn.check_usable()
             msg.seq = conn.next_seq()
@@ -187,15 +211,34 @@ class FanoutGroup:
         except BaseException:
             self.reset()      # abandon siblings already queued this round
             raise
-        return _Pending(self, conn)
+        return _Pending(self, conn, decode=decode,
+                        reset_on_error=reset_on_error)
 
-    def take(self, conn: ShardConnection) -> Message:
+    def take(self, conn: ShardConnection, *,
+             reset_on_error: bool = True) -> Message:
+        if conn not in self._replies:
+            if self._round_error is None:
+                raise TransportError(
+                    f"no reply pending for worker {conn._name} "
+                    "(already taken, or never submitted this round)")
+            # this pending's round already died in flush() (stream break /
+            # timeout): every sibling surfaces the same failure instead of
+            # a bare KeyError — and nobody can tell whether the worker
+            # processed the request before the stream broke
+            err = WorkerError(
+                f"worker {conn._name}: fan-out round failed before its "
+                f"reply was read ({type(self._round_error).__name__}: "
+                f"{self._round_error})")
+            err.unknown_outcome = True
+            raise err from self._round_error
         try:
             return conn._check(self._replies.pop(conn))
         except WorkerError:
-            # the round is abandoned: drop sibling replies so the next
-            # round starts clean instead of tripping the outstanding guard
-            self.reset()
+            if reset_on_error:
+                # the round is abandoned: drop sibling replies so the next
+                # round starts clean instead of tripping the outstanding
+                # guard (the write path instead consumes every reply)
+                self.reset()
             raise
 
     def reset(self) -> None:
@@ -214,7 +257,13 @@ class FanoutGroup:
         poisoned (``ShardConnection.broken``) and raise on further use."""
         try:
             self._flush()
-        except BaseException:
+        except BaseException as e:
+            # after frames hit the wire nobody can prove which workers
+            # processed their request — writes must treat this as a
+            # maybe-wrote failure (``unknown_outcome``), and siblings of the
+            # dead round re-raise it from take()
+            e.unknown_outcome = True
+            self._round_error = e
             self._replies.clear()
             raise
 
@@ -354,6 +403,20 @@ class RemoteShard:
         return int(self.conn.request(Message(
             MsgType.ADD,
             {"words": np.ascontiguousarray(words, np.uint32)}))["n"])
+
+    # -- the write fan-out ---------------------------------------------------
+    def start_add(self, batch: np.ndarray, *, packed: bool = False) -> _Pending:
+        """Submit this shard's ADD slice; all shards index concurrently.
+
+        ``reset_on_error=False``: the coordinator's scatter consumes every
+        pending of the round — the partial-write poison decision needs all
+        per-shard outcomes, not just the first failure.
+        """
+        field = {"words": np.ascontiguousarray(batch, np.uint32)} if packed \
+            else {"rows": np.ascontiguousarray(batch, np.int32)}
+        return self.group.submit(self.conn, Message(MsgType.ADD, field),
+                                 decode=lambda m: int(m["n"]),
+                                 reset_on_error=False)
 
     # -- the query fan-out ---------------------------------------------------
     def start_query(self, hashes: np.ndarray, qwords: np.ndarray,

@@ -78,6 +78,7 @@ def _handle(store: SketchStore, msg: Message) -> tuple[Message, bool]:
         return Message(MsgType.OK, {"size": store.size,
                                     "n_spilled": store.n_spilled,
                                     "n_rebuilds": store.n_rebuilds,
+                                    "probe_impl": store.probe_impl,
                                     "pid": os.getpid()}), True
     if msg.type == MsgType.SNAPSHOT:
         store.save(f["path"])
@@ -125,7 +126,16 @@ def run_worker(ready_conn, cfg: StoreConfig | None, snapshot: str | None,
     Boots a ``SketchStore`` (empty from ``cfg``, or from ``snapshot``),
     binds ``(host, port)`` (port 0 = ephemeral), reports the bound address
     through ``ready_conn``, and serves until SHUTDOWN.
+
+    ``probe_impl="auto"`` is resolved HERE, against this worker's own jax
+    backend — not the coordinator's — so a mixed CPU/accelerator fleet
+    serves one plane with each worker on its best probe path (Pallas on
+    its accelerator hosts, the numpy walk on CPU hosts).  The resolved
+    backend is reported in STATS (``probe_impl``).
     """
+    if probe_impl == "auto":
+        from repro.kernels.dispatch import select_probe_impl
+        probe_impl = select_probe_impl()
     if snapshot is not None:
         store = SketchStore.load(snapshot)
         store.probe_impl = probe_impl

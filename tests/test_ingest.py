@@ -1,0 +1,89 @@
+"""Pipelined ingest == serial ingest, bit for bit, on every plane.
+
+The ingest pipeline only changes WHEN work runs (batch N+1's signing
+overlaps batch N's scatter), never what lands in the store: scatter order
+equals submit order, so ids, buckets, spills — and therefore every query
+answer — are identical to serial ingestion of the same batches, for any
+depth, any shard count, and either transport.
+"""
+
+import numpy as np
+import pytest
+
+from repro.serve.search import (SearchConfig, SimilaritySearchService)
+
+D, K, NB, R = 1 << 12, 64, 16, 4
+BATCH = 16
+
+
+def _docs(n=96, nnz=40, seed=0):
+    rng = np.random.default_rng(seed)
+    idx = np.sort(rng.integers(0, D, (n, nnz), np.int32), axis=1)
+    idx[-5:] = idx[:5]                    # planted duplicates
+    return idx
+
+
+def _serial_reference(docs, top_k=5):
+    """Single-shard inproc serial ingest: the one true answer."""
+    svc = SimilaritySearchService(SearchConfig(
+        d=D, k=K, n_bands=NB, rows_per_band=R))
+    for lo in range(0, len(docs), BATCH):
+        svc.add_sparse(docs[lo: lo + BATCH])
+    return svc.query_sparse(docs[:20], top_k=top_k)
+
+
+@pytest.mark.parametrize("transport", ["inproc", "tcp"])
+@pytest.mark.parametrize("s", [1, 2, 4])
+def test_pipelined_ingest_bit_identical(transport, s):
+    docs = _docs(seed=s)
+    want_ids, want_scores = _serial_reference(docs)
+    with SimilaritySearchService(SearchConfig(
+            d=D, k=K, n_bands=NB, rows_per_band=R, n_shards=s,
+            transport=transport)) as svc:
+        with svc.pipeline(depth=3) as pipe:
+            for lo in range(0, len(docs), BATCH):
+                pipe.submit(docs[lo: lo + BATCH])
+        assert len(pipe) == 0             # context exit flushed everything
+        assert pipe.timings["n_items"] == len(docs)
+        got_ids, got_scores = svc.query_sparse(docs[:20], top_k=5)
+        assert np.array_equal(want_ids, got_ids), (transport, s)
+        assert np.array_equal(want_scores, got_scores), (transport, s)
+
+
+def test_pipeline_depth_one_is_serial_and_deeper_is_identical():
+    docs = _docs(seed=9)
+    answers = []
+    for depth in (1, 2, 5):
+        svc = SimilaritySearchService(SearchConfig(
+            d=D, k=K, n_bands=NB, rows_per_band=R, n_shards=2))
+        pipe = svc.pipeline(depth=depth)
+        for lo in range(0, len(docs), BATCH):
+            pipe.submit(docs[lo: lo + BATCH])
+            # depth bounds the signed-but-unscattered backlog at all times
+            assert len(pipe) < max(depth, 2)
+        pipe.flush()
+        answers.append(svc.query_sparse(docs[:16], top_k=4))
+    for ids, scores in answers[1:]:
+        assert np.array_equal(answers[0][0], ids)
+        assert np.array_equal(answers[0][1], scores)
+
+
+def test_pipeline_rejects_bad_config():
+    svc = SimilaritySearchService(SearchConfig(
+        d=D, k=K, n_bands=NB, rows_per_band=R))
+    with pytest.raises(ValueError, match="depth"):
+        svc.pipeline(depth=0)
+    with pytest.raises(ValueError, match="layout"):
+        svc.pipeline(layout="csr")
+
+
+def test_query_on_empty_index_raises_value_error():
+    """Regression: this was a bare ``assert`` — gone under ``python -O``,
+    leaving an empty-index query to fail somewhere deep in the store."""
+    svc = SimilaritySearchService(SearchConfig(
+        d=D, k=K, n_bands=NB, rows_per_band=R))
+    with pytest.raises(ValueError, match="empty index"):
+        svc.query_sparse(_docs(n=2))
+    svc.add_sparse(_docs(n=8))            # after ingest, queries work
+    ids, _ = svc.query_sparse(_docs(n=8)[:3], top_k=1)
+    assert np.array_equal(ids[:, 0], np.arange(3))

@@ -278,6 +278,37 @@ def test_store_query_equivalent_to_pre_refactor_path():
         assert np.allclose(scores[qi, : len(order)], est[qi, order])
 
 
+def test_store_pregrow_sizes_ahead_of_batch_and_stays_exact():
+    """A one-shot add far past the boot geometry grows the table ONCE,
+    before the insert (projected-load sizing), instead of spilling the
+    whole batch into a too-small table and replaying it per doubling —
+    and candidate generation stays exact either way."""
+    k, nb, r = 64, 16, 4
+    sigs = _corpus_sigs(n=2000, k=k)
+    store = SketchStore(StoreConfig(k=k, n_bands=nb, rows_per_band=r,
+                                    n_slots=32, bucket_width=4))
+    store.add(sigs)
+    t = store.table
+    # grown ahead: the batch landed at sane load, not into 32 slots
+    assert store.n_rebuilds >= 1
+    assert t.load_factor <= store.cfg.rebuild_load_factor
+    assert t.n_slots >= len(sigs) / store.cfg.rebuild_load_factor / 2
+    # probe-exhaustion spills would dominate (thousands) had the batch hit
+    # 32 slots; at pre-grown load only the odd unlucky chain may spill
+    assert t.n_spill_probe <= len(sigs) // 100
+    got = set(map(tuple, store.candidate_pairs()))
+    assert got == candidate_pairs(band_hashes(sigs, nb, r))
+    # pre-grown and incrementally-grown stores answer queries identically
+    staged = SketchStore(StoreConfig(k=k, n_bands=nb, rows_per_band=r,
+                                     n_slots=32, bucket_width=4))
+    for lo in range(0, len(sigs), 100):
+        staged.add(sigs[lo: lo + 100])
+    want = store.query(sigs[:8], top_k=3)
+    have = staged.query(sigs[:8], top_k=3)
+    assert np.array_equal(want[0], have[0])
+    assert np.array_equal(want[1], have[1])
+
+
 def test_store_incremental_add_auto_rebuild_stays_exact():
     k, nb, r = 64, 16, 4
     sigs = _corpus_sigs(n=500, k=k)

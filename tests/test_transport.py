@@ -75,6 +75,11 @@ def test_tcp_plane_bit_identical(s, tmp_path):
             assert np.array_equal(want_scores, got_scores)
         assert np.array_equal(tcp.shard_sizes(), inproc.shard_sizes())
         assert tcp.n_spilled == inproc.n_spilled
+        # workers resolve probe_impl="auto" against THEIR backend at boot
+        # and report the choice in STATS (a mixed CPU/accelerator fleet
+        # serves one plane, each worker on its best probe path)
+        for sh in tcp.shards:
+            assert sh.stats()["probe_impl"] in ("numpy", "jnp", "pallas")
         # wall-time split is populated for the artifact row
         assert set(tcp.last_timings) == \
             {"broadcast_s", "partial_s", "merge_s"}
@@ -165,6 +170,53 @@ def test_killed_worker_raises_within_timeout():
         with pytest.raises(TransportError):
             tcp.add(sigs)                      # blocking path fails too
         assert time.monotonic() - t0 < 30
+    finally:
+        for h in handles:
+            h.terminate()
+
+
+def test_killed_worker_mid_add_poisons_plane():
+    """A worker killed under the ADD fan-out raises within the deadline AND
+    poisons the plane: the surviving shard may have indexed its slice, so a
+    retry would re-issue the same gids and double-index — the plane must
+    refuse further writes and reads instead (mirrors the query-side kill
+    test, which stays read-only and does NOT poison)."""
+    sigs = _corpus(n=60, dup_pairs=0)
+    cfg = StoreConfig(k=K, n_bands=NB, rows_per_band=R)
+    handles = spawn_workers(cfg, 2)
+    try:
+        tcp = connect_sharded([h.address for h in handles], cfg, timeout=5)
+        tcp.add(sigs)                          # plane is healthy first
+        handles[0].proc.kill()                 # SIGKILL: no goodbye frame
+        handles[0].proc.join(10)
+        t0 = time.monotonic()
+        with pytest.raises(TransportError):
+            tcp.add(sigs)                      # fan-out write hits the corpse
+        assert time.monotonic() - t0 < 30
+        with pytest.raises(RuntimeError, match="inconsistent"):
+            tcp.add(sigs)                      # retry must not double-index
+        with pytest.raises(RuntimeError, match="inconsistent"):
+            tcp.query(sigs[:4], top_k=3)
+    finally:
+        for h in handles:
+            h.terminate()
+
+
+def test_failed_query_fanout_does_not_poison_writes():
+    """Queries are read-only: a fan-out that dies mid-QUERY must not mark
+    the plane inconsistent — the surviving plane still refuses nothing
+    (the degraded query itself raises, as always)."""
+    sigs = _corpus(n=40, dup_pairs=0)
+    cfg = StoreConfig(k=K, n_bands=NB, rows_per_band=R)
+    handles = spawn_workers(cfg, 1)
+    try:
+        tcp = connect_sharded([h.address for h in handles], cfg, timeout=5)
+        tcp.add(sigs)
+        handles[0].proc.kill()
+        handles[0].proc.join(10)
+        with pytest.raises(TransportError):
+            tcp.query(sigs[:4], top_k=3)
+        assert tcp._failed is None             # reads never poison
     finally:
         for h in handles:
             h.terminate()
