@@ -35,6 +35,7 @@ from collections import defaultdict
 import numpy as np
 
 from repro.core.lsh import band_hashes
+from repro.obs import metrics as obs_metrics
 from repro.store import ShardedSketchStore, SketchStore, StoreConfig
 
 from .common import emit
@@ -88,6 +89,29 @@ def _timing_split(sh, n_queries: int) -> str:
                     for key in ("broadcast_s", "partial_s", "merge_s"))
 
 
+def _stage_quantiles(before: dict, after: dict,
+                     names: tuple[str, ...]) -> dict:
+    """p50/p90/p99 (in us) per stage histogram, from the registry delta
+    between two snapshots — only the calls made between them count.
+    Stages with no observations in the window are omitted."""
+    delta = obs_metrics.snapshot_delta(before, after)
+    out: dict[str, dict[str, float]] = {}
+    for name in names:
+        h = delta["hists"].get(name)
+        if not h or not h.get("count"):
+            continue
+        out[name] = {
+            f"p{int(q * 100)}_us": round(
+                (obs_metrics.hist_quantile(h, q) or 0.0) * 1e6, 1)
+            for q in (0.5, 0.9, 0.99)}
+    return out
+
+
+def _query_stages(n_shards: int) -> tuple[str, ...]:
+    return (("query.wall", "query.broadcast", "query.partial", "query.merge")
+            + tuple(f"query.shard{i}.partial" for i in range(n_shards)))
+
+
 def _bench_ingest_pipeline(em, depths: tuple[int, ...],
                            transports: tuple[str, ...],
                            n_docs: int, batch: int) -> None:
@@ -119,14 +143,18 @@ def _bench_ingest_pipeline(em, depths: tuple[int, ...],
             d=d, k=k, n_bands=nb, rows_per_band=r, n_shards=s,
             transport=transport))
         with svc:
+            before = obs_metrics.default().snapshot()
             with svc.pipeline(depth=depth) as pipe:
                 t0 = _time.perf_counter()
                 for bt in batches:
                     pipe.submit(bt)
                 pipe.flush()
                 wall = _time.perf_counter() - t0
+            lat = _stage_quantiles(
+                before, obs_metrics.default().snapshot(),
+                ("ingest.sign", "ingest.wait", "ingest.scatter"))
             ans = svc.query_sparse(q, top_k=10)
-            return wall, dict(pipe.timings), ans
+            return wall, dict(pipe.timings), lat, ans
 
     # serial inproc ingest is ALWAYS the parity baseline (run first even
     # when not requested as an emitted row)
@@ -134,7 +162,7 @@ def _bench_ingest_pipeline(em, depths: tuple[int, ...],
     ordered = [("inproc", 1)] + [rd for rd in asked if rd != ("inproc", 1)]
     ref = None
     for transport, depth in ordered:
-        wall, tm, ans = build(transport, depth)
+        wall, tm, lat, ans = build(transport, depth)
         if ref is None:
             ref = ans
         else:             # pipelining must never change an answer
@@ -147,7 +175,8 @@ def _bench_ingest_pipeline(em, depths: tuple[int, ...],
                f"items_per_s={n_docs / wall:.0f}|parity=exact|"
                f"sign_ms={tm['sign_s'] * 1e3:.1f}|"
                f"wait_ms={tm['wait_s'] * 1e3:.1f}|"
-               f"scatter_ms={tm['scatter_s'] * 1e3:.1f}")
+               f"scatter_ms={tm['scatter_s'] * 1e3:.1f}",
+               latency=lat)
 
 
 def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
@@ -158,10 +187,10 @@ def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
         ingest_docs: int = 20_000, ingest_batch: int = 512) -> list[dict]:
     rows_out: list[dict] = []
 
-    def em(name, us, derived):
+    def em(name, us, derived, **fields):
         emit(name, us, derived)
         rows_out.append({"name": name, "us_per_call": round(us, 1),
-                         "derived": derived})
+                         "derived": derived, **fields})
 
     rng = np.random.default_rng(0)
     sigs = rng.integers(0, 1 << 20, (n_items, k), dtype=np.int32)
@@ -227,6 +256,41 @@ def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
     em("search_query_store", t_query * 1e6 / n_queries,
        f"qps={n_queries / t_query:.0f}|n_items={n_items}")
 
+    # observability overhead: the same queries against an identical store
+    # built with the registry DISABLED (shared null handles bound at
+    # construction) — the no-op fast-path claim, measured, not asserted
+    # (wall-clock asserts flake on shared boxes; test_obs.py bounds the
+    # per-op cost instead).  Interleaved min-of-N: run-to-run drift on a
+    # shared box is bigger than the effect, so alternate the two stores
+    # and take each side's minimum (see kernels/dispatch.py on why
+    # non-interleaved timings mislead here)
+    old_reg = obs_metrics.set_default(obs_metrics.NULL)
+    try:
+        store_off = SketchStore(make_cfg())
+        store_off.add(sigs)
+        store_off.query(qsigs, top_k=10)   # warm
+    finally:
+        obs_metrics.set_default(old_reg)
+    import gc
+    t_on_l: list[float] = []
+    t_off_l: list[float] = []
+    gc.disable()
+    try:
+        for _ in range(50):
+            t0 = time.perf_counter()
+            store.query(qsigs, top_k=10)
+            t_on_l.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            store_off.query(qsigs, top_k=10)
+            t_off_l.append(time.perf_counter() - t0)
+    finally:
+        gc.enable()
+    t_on, t_off = min(t_on_l), min(t_off_l)
+    del store_off
+    em("search_obs_overhead", t_on * 1e6 / n_queries,
+       f"disabled_us={t_off * 1e6 / n_queries:.1f}|"
+       f"overhead_pct={(t_on - t_off) / t_off * 100.0:.2f}")
+
     # sharded serving plane: build + candgen+merge throughput per shard count
     # and per transport (inproc loop vs real tcp shard workers on localhost)
     # (per-shard geometry sized for its own n_items/S slice — sizing every
@@ -242,8 +306,11 @@ def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
             sh.add(sigs)
             t_build = time.perf_counter() - t0
             sh.query(qsigs, top_k=10)      # warm per-shard traces
+            before = obs_metrics.default().snapshot()
             t_q, (ids, scores) = _timed_block(
                 lambda: sh.query(qsigs, top_k=10), iters=5)
+            lat = _stage_quantiles(before, obs_metrics.default().snapshot(),
+                                   _query_stages(s))
             # the merge contract: S shards answer exactly like one store
             assert np.array_equal(ids, ref_ids), f"shard-merge ids S={s}"
             assert np.array_equal(scores, ref_scores), \
@@ -253,7 +320,7 @@ def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
                f"|sizes={sh.shard_sizes().tolist()}")
             em(f"search_query_sharded_s{s}", t_q * 1e6 / n_queries,
                f"qps={n_queries / t_q:.0f}|n_shards={s}|merge=exact|"
-               + _timing_split(sh, n_queries))
+               + _timing_split(sh, n_queries), latency=lat)
         if "tcp" in transports:
             from repro.transport import (connect_sharded, shutdown_plane,
                                          spawn_workers)
@@ -265,8 +332,12 @@ def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
                 sh.add(sigs)               # over the wire, ADD per shard
                 t_build = time.perf_counter() - t0
                 sh.query(qsigs, top_k=10)  # warm worker-side traces
+                before = obs_metrics.default().snapshot()
                 t_q, (ids, scores) = _timed_block(
                     lambda: sh.query(qsigs, top_k=10), iters=5)
+                lat = _stage_quantiles(before,
+                                       obs_metrics.default().snapshot(),
+                                       _query_stages(s))
                 # tcp answers must equal the single store bit-for-bit too
                 assert np.array_equal(ids, ref_ids), f"tcp-merge ids S={s}"
                 assert np.array_equal(scores, ref_scores), \
@@ -276,7 +347,7 @@ def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
                    f"|sizes={sh.shard_sizes().tolist()}")
                 em(f"search_query_tcp_s{s}", t_q * 1e6 / n_queries,
                    f"qps={n_queries / t_q:.0f}|n_shards={s}|merge=exact|"
-                   + _timing_split(sh, n_queries))
+                   + _timing_split(sh, n_queries), latency=lat)
             finally:
                 if sh is not None:
                     shutdown_plane(sh, handles)

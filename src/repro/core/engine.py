@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..kernels import dispatch
+from ..obs import metrics as obs_metrics
 from .permutations import make_two_permutations
 
 Array = jax.Array
@@ -61,10 +62,19 @@ class SketchEngine:
                 self.sigma = jax.device_put(self.sigma, self._rep_sharding)
         else:
             self._data_sharding = None
+        # sign-call counters (dispatch counts per resolved kernel impl;
+        # these count what the engine was ASKED, rows included, so
+        # rows/impl ratios read straight off one snapshot)
+        reg = obs_metrics.default()
+        self._c_dense = reg.counter("engine.sign.dense")
+        self._c_sparse = reg.counter("engine.sign.sparse")
+        self._c_rows = reg.counter("engine.sign.rows")
 
     def signatures_dense(self, v: Array, *, pack_b: int | None = None) -> Array:
         """(B, D) binary -> (B, K) int32 signatures ((B, W) uint32 packed
         words when ``pack_b`` is set — the fused sign->pack kernel path)."""
+        self._c_dense.inc()
+        self._c_rows.inc(v.shape[0])
         if self._data_sharding is not None:
             v = jax.device_put(v, self._data_sharding)
         return dispatch.signatures_dense(
@@ -77,6 +87,8 @@ class SketchEngine:
                           pack_b: int | None = None) -> Array:
         """(B, NNZ) padded index lists -> (B, K) int32 signatures ((B, W)
         uint32 packed words when ``pack_b`` is set)."""
+        self._c_sparse.inc()
+        self._c_rows.inc(idx.shape[0])
         if self._data_sharding is not None:
             idx = jax.device_put(idx, self._data_sharding)
         return dispatch.signatures_sparse(

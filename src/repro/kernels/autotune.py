@@ -34,6 +34,8 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+
 CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 
 KINDS = ("dense_int8", "dense_packed", "sparse_pallas", "sparse_windows")
@@ -143,7 +145,9 @@ def recommend(kind: str, b: int, d: int, k: int,
     backend = backend or jax.default_backend()
     hit = cached(kind, b, d, k, backend, nnz)
     if hit is not None:
+        obs_metrics.default().counter("autotune.hit").inc()
         return _clamp(kind, hit, b, d, k)
+    obs_metrics.default().counter("autotune.heuristic").inc()
     return _clamp(kind, _DEFAULTS[kind], b, d, k)
 
 
@@ -191,7 +195,10 @@ def measure(kind: str, b: int, d: int, k: int, *, backend: str | None = None,
     if not force:
         hit = cached(kind, b, d, k, backend, nnz)
         if hit is not None:
+            obs_metrics.default().counter("autotune.hit").inc()
             return hit
+    obs_metrics.default().counter("autotune.sweeps").inc()
+    sweep_t0 = time.perf_counter()
     runner = _make_runner(kind, b, d, k, nnz, seed)
     best: tuple[float, dict[str, int]] | None = None
     seen: set[tuple] = set()     # clamping can collapse candidates; time once
@@ -215,6 +222,8 @@ def measure(kind: str, b: int, d: int, k: int, *, backend: str | None = None,
             continue                       # candidate invalid on this backend
         if best is None or elapsed < best[0]:
             best = (elapsed, blocks)
+    obs_metrics.default().histogram("autotune.sweep").observe(
+        time.perf_counter() - sweep_t0)
     if best is None:
         return recommend(kind, b, d, k, backend, nnz)
     _cache[cache_key(kind, b, d, k, backend, nnz)] = dict(best[1])

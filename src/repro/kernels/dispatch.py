@@ -54,6 +54,7 @@ import numpy as np
 
 from ..core import cminhash
 from ..core.permutations import apply_permutation_dense, apply_permutation_sparse
+from ..obs import metrics as obs_metrics
 from . import autotune, lsh_probe as _lsh_probe, packfmt, ref
 from .cminhash_kernel import cminhash_pallas
 from .cminhash_packed import cminhash_packed_pallas
@@ -123,6 +124,8 @@ def signatures_dense(v: Array, pi: Array, k: int, sigma: Array | None = None,
         raise ValueError(f"impl must be one of {DENSE_IMPLS} (got {impl!r})")
     if impl == "auto":
         impl = select_dense_impl(v.shape[-1], use_kernel=use_kernel)
+    # per-resolved-impl call counts: which kernel actually serves the fleet
+    obs_metrics.default().counter(f"kernel.dense.{impl}").inc()
     if sigma is not None:
         v = apply_permutation_dense(v, sigma)
     b, d = v.shape
@@ -157,6 +160,7 @@ def signatures_sparse(idx: Array, pi: Array, k: int,
         raise ValueError(f"impl must be one of {SPARSE_IMPLS} (got {impl!r})")
     if impl == "auto":
         impl = select_sparse_impl(use_kernel=use_kernel)
+    obs_metrics.default().counter(f"kernel.sparse.{impl}").inc()
     if sigma is not None:
         idx = apply_permutation_sparse(idx, sigma)
     b, nnz = idx.shape
@@ -208,6 +212,7 @@ def lsh_probe(records_dev: Array, hashes: np.ndarray, *, n_slots: int,
         raise ValueError(f"impl must be one of {PROBE_IMPLS} (got {impl!r})")
     if impl == "auto":
         impl = "pallas" if _backend() == "tpu" else "jnp"
+    obs_metrics.default().counter(f"kernel.probe.{impl}").inc()
     if impl == "numpy":
         raise ValueError("impl='numpy' is BandedLSHTable.lookup's own host "
                          "loop; call the table, not the dispatch layer")

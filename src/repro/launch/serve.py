@@ -2,11 +2,20 @@
 
     PYTHONPATH=src python -m repro.launch.serve --mode lm --arch llama3_2_1b
     PYTHONPATH=src python -m repro.launch.serve --mode search --docs 400
+
+Observability (search mode): ``--metrics-dump PATH`` appends one JSONL
+snapshot of the process metrics registry (+ drained trace spans) every
+``--metrics-interval`` seconds while the driver runs, plus a final line at
+shutdown — validate with ``python -m repro.obs.dump --check PATH``.
+``--trace-sample-rate`` sets the root-span sampling probability (1.0 =
+trace every query batch; sampled traces ride the wire to tcp shard workers
+and come back stitched).
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -14,6 +23,9 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.models import build
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.dump import MetricsDumper
 from repro.serve.decode import generate
 
 
@@ -46,12 +58,16 @@ def serve_search(args) -> None:
     from repro.data.shingle import batch_shingles
     from repro.data.synthetic import corpus_with_duplicates
     from repro.serve.search import SearchConfig, SimilaritySearchService
+    obs_trace.default().sample_rate = args.trace_sample_rate
     docs, _ = corpus_with_duplicates(args.docs, vocab=30_000, doc_len=256,
                                      dup_fraction=0.4, seed=0)
     idx = batch_shingles(docs, n=3, d=1 << 14)
+    dumper = (MetricsDumper(args.metrics_dump,
+                            interval_s=args.metrics_interval)
+              if args.metrics_dump else contextlib.nullcontext())
     # tcp: one shard worker process per shard on localhost, reaped by
     # close() — same answers as inproc, bit-for-bit
-    with SimilaritySearchService(SearchConfig(
+    with dumper, SimilaritySearchService(SearchConfig(
             d=1 << 14, k=256, n_bands=64, rows_per_band=4,
             n_shards=args.shards, partition=args.partition,
             probe_impl=args.probe, transport=args.transport)) as svc:
@@ -78,6 +94,26 @@ def serve_search(args) -> None:
               f"transport={args.transport}): "
               f"{args.batch} queries in {dt * 1e3:.1f} ms; top-1 self-hit "
               f"{(ids[:, 0] == np.arange(args.batch)).mean() * 100:.0f}%")
+        # one merged plane snapshot (coordinator + tcp workers): the
+        # per-shard partial-latency split is the skew evidence
+        snap = svc.store.obs_snapshot()
+        shard_p50 = [
+            obs_metrics.hist_quantile(
+                snap["hists"].get(f"query.shard{i}.partial",
+                                  {"count": 0, "buckets": {}}), 0.5)
+            for i in range(args.shards)]
+        print(f"[serve] obs: {len(snap['counters'])} counters, "
+              f"{len(snap['hists'])} hists; shard partial p50(ms) "
+              f"{[None if p is None else round(p * 1e3, 2) for p in shard_p50]}")
+        # stitched-trace summary (skipped when a dumper already drained the
+        # ring — the spans live in the dump file then)
+        tid = obs_trace.default().last_trace_id()
+        spans = obs_trace.default().for_trace(tid) if tid is not None else []
+        if spans:
+            legs = sorted({(s["proc"], s["name"]) for s in spans})
+            print(f"[serve] trace {tid:x}: {len(spans)} spans across "
+                  f"{len({p for p, _ in legs})} proc(s): "
+                  f"{', '.join(f'{p}/{n}' for p, n in legs)}")
 
 
 def main() -> None:
@@ -104,6 +140,15 @@ def main() -> None:
                          "(1 = serial sign->scatter; search mode)")
     ap.add_argument("--ingest-batch", type=int, default=128,
                     help="documents per ingest pipeline batch (search mode)")
+    ap.add_argument("--metrics-dump", metavar="PATH", default=None,
+                    help="append periodic JSONL registry snapshots + trace "
+                         "spans here while serving (search mode); validate "
+                         "with `python -m repro.obs.dump --check PATH`")
+    ap.add_argument("--metrics-interval", type=float, default=1.0,
+                    help="seconds between --metrics-dump lines")
+    ap.add_argument("--trace-sample-rate", type=float, default=1.0,
+                    help="probability a query batch opens a (cross-process) "
+                         "trace; 0 disables tracing (search mode)")
     args = ap.parse_args()
     if args.mode == "lm":
         serve_lm(args)

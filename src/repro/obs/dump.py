@@ -1,0 +1,158 @@
+"""Periodic JSONL metrics/span dumps, and a checker for CI smoke.
+
+``MetricsDumper`` is a daemon thread that appends one JSON object per
+interval to a file::
+
+    {"t": <unix time>, "seq": <n>, "metrics": <registry snapshot>,
+     "spans": [<finished span dicts>...]}
+
+Snapshots are cumulative (each line is the registry's full state at that
+instant); spans are incremental (each line drains the tracer's ring, so a
+span appears on exactly one line).  A final line is always written on
+``close()`` so short-lived runs still leave a complete record.
+
+An optional ``extra`` callable contributes per-line fields — the serve
+driver uses it to fold in worker STATS snapshots so one dump file covers
+the whole plane.
+
+``check_dump`` (also ``python -m repro.obs.dump --check PATH``) validates
+a dump file: every line parses, has the schema above, and — with
+``--require-shard-hists`` — at least one snapshot carries a nonzero
+per-shard partial-latency histogram (the CI metrics-smoke gate).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import threading
+import time
+
+from . import metrics as _metrics
+from . import trace as _trace
+
+
+class MetricsDumper:
+    """Append registry snapshots + drained spans to ``path`` every
+    ``interval_s`` seconds until closed."""
+
+    def __init__(self, path: str, interval_s: float = 1.0,
+                 registry=None, tracer=None, extra=None):
+        self.path = path
+        self.interval_s = max(0.05, float(interval_s))
+        self._registry = registry
+        self._tracer = tracer
+        self._extra = extra
+        self._seq = 0
+        self._stop = threading.Event()
+        self._f = open(path, "a", encoding="utf-8")
+        self._lock = threading.Lock()
+        self._thread = threading.Thread(
+            target=self._run, name="metrics-dump", daemon=True)
+        self._thread.start()
+
+    def _write_line(self) -> None:
+        reg = self._registry or _metrics.default()
+        tr = self._tracer or _trace.default()
+        line = {"t": time.time(), "seq": self._seq,
+                "metrics": reg.snapshot(), "spans": tr.drain()}
+        if self._extra is not None:
+            try:
+                line.update(self._extra() or {})
+            except Exception as e:          # never let a stats fetch kill dumps
+                line["extra_error"] = repr(e)
+        with self._lock:
+            if self._f.closed:
+                return
+            self._f.write(json.dumps(line) + "\n")
+            self._f.flush()
+        self._seq += 1
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            self._write_line()
+
+    def close(self) -> None:
+        """Stop the thread and write one final line."""
+        if self._stop.is_set():
+            return
+        self._stop.set()
+        self._thread.join(timeout=5.0)
+        self._write_line()
+        with self._lock:
+            self._f.close()
+
+    def __enter__(self) -> "MetricsDumper":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def check_dump(path: str, require_shard_hists: bool = False) -> dict:
+    """Validate a dump file; raise ``ValueError`` on malformed content.
+
+    Returns summary stats: line count, span count, and the per-shard
+    partial-latency histogram names seen with nonzero counts.
+    """
+    n_lines = 0
+    n_spans = 0
+    shard_hists: set[str] = set()
+    with open(path, encoding="utf-8") as f:
+        for lineno, raw in enumerate(f, 1):
+            raw = raw.strip()
+            if not raw:
+                continue
+            try:
+                line = json.loads(raw)
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{lineno}: not JSON: {e}") from None
+            for key in ("t", "seq", "metrics", "spans"):
+                if key not in line:
+                    raise ValueError(f"{path}:{lineno}: missing {key!r}")
+            snap = line["metrics"]
+            for key in ("counters", "gauges", "hists"):
+                if key not in snap:
+                    raise ValueError(
+                        f"{path}:{lineno}: snapshot missing {key!r}")
+            for name, h in snap["hists"].items():
+                if not isinstance(h.get("count"), int):
+                    raise ValueError(
+                        f"{path}:{lineno}: hist {name!r} has no int count")
+                if ".shard" in name and ".partial" in name and h["count"] > 0:
+                    shard_hists.add(name)
+            n_spans += len(line["spans"])
+            n_lines += 1
+    if n_lines == 0:
+        raise ValueError(f"{path}: empty dump")
+    if require_shard_hists and len(shard_hists) < 2:
+        raise ValueError(
+            f"{path}: expected nonzero per-shard partial histograms for >=2 "
+            f"shards, saw {sorted(shard_hists)}")
+    return {"lines": n_lines, "spans": n_spans,
+            "shard_hists": sorted(shard_hists)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.dump", description=check_dump.__doc__)
+    ap.add_argument("--check", metavar="PATH", required=True,
+                    help="dump file to validate")
+    ap.add_argument("--require-shard-hists", action="store_true",
+                    help="require nonzero per-shard partial histograms "
+                         "from >=2 shards (CI smoke gate)")
+    args = ap.parse_args(argv)
+    try:
+        out = check_dump(args.check,
+                         require_shard_hists=args.require_shard_hists)
+    except (OSError, ValueError) as e:
+        print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    print(f"OK: {out['lines']} lines, {out['spans']} spans, "
+          f"shard hists: {out['shard_hists']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -42,6 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import SketchConfig, SketchEngine
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.store import ShardedSketchStore, StoreConfig
 
 TRANSPORTS = ("inproc", "tcp")
@@ -94,6 +96,10 @@ class SimilaritySearchService:
             self.store = ShardedSketchStore(
                 store_cfg, n_shards=cfg.n_shards, partition=cfg.partition,
                 probe_impl=cfg.probe_impl)
+        self._tracer = obs_trace.default()
+        reg = obs_metrics.default()
+        self._h_query = reg.histogram("service.query")
+        self._h_sign = reg.histogram("service.sign")
 
     # -- the fused fast path -----------------------------------------------
     @property
@@ -133,10 +139,27 @@ class SimilaritySearchService:
 
     # -- querying ----------------------------------------------------------
     def query_sparse(self, idx: np.ndarray, top_k: int = 10):
-        return self._query(np.asarray(self._sign(idx, "sparse")), top_k)
+        return self._traced_query(idx, "sparse", top_k)
 
     def query_dense(self, v: np.ndarray, top_k: int = 10):
-        return self._query(np.asarray(self._sign(v, "dense")), top_k)
+        return self._traced_query(v, "dense", top_k)
+
+    def _traced_query(self, data, layout: str, top_k: int):
+        """The traced front door: the root span opens here (where the
+        sampling decision is made), the sign leg is its first child, and
+        everything under ``_query`` — fold, broadcast, per-shard partials
+        (worker-side over tcp), merge — nests beneath it, stitching one
+        cross-process trace per sampled query batch."""
+        t_wall = time.perf_counter()
+        with self._tracer.span("query") as root:
+            root.tag("n", len(data)).tag("top_k", top_k)
+            t0 = time.perf_counter()
+            with self._tracer.span("query.sign"):
+                qsigned = np.asarray(self._sign(data, layout))
+            self._h_sign.observe(time.perf_counter() - t0)
+            out = self._query(qsigned, top_k)
+        self._h_query.observe(time.perf_counter() - t_wall)
+        return out
 
     def _query(self, qsigned: np.ndarray, top_k: int):
         """Returns (ids (Q, top_k) int64 [-1 pad], scores (Q, top_k) f32).
@@ -192,11 +215,19 @@ class IngestPipeline:
     spills — is bit-identical to serial ingestion of the same batches.
 
     ``flush()`` (or leaving the context) drains everything still queued.
-    ``timings`` accumulates the wall-time split: ``sign_s`` (dispatch),
-    ``wait_s`` (device sync — small when scatter covered the compute),
-    ``scatter_s`` (store writes), ``wall_s`` (everything, including queue
-    management).
+
+    The wall-time split lives in the process registry as per-batch latency
+    HISTOGRAMS — ``ingest.sign`` (dispatch), ``ingest.wait`` (device sync —
+    small when scatter covered the compute), ``ingest.scatter`` (store
+    writes), ``ingest.wall`` — so tail behavior (one slow scatter among
+    hundreds) is visible, not averaged away.  ``timings`` is a compatibility
+    view over the same observations: the familiar ``{sign_s, wait_s,
+    scatter_s, wall_s, n_batches, n_items}`` dict, scoped to THIS pipeline
+    by registry deltas from its construction (counts are plain ints, so
+    ``timings["n_items"]`` works even with the registry disabled).
     """
+
+    _STAGES = ("sign", "wait", "scatter", "wall")
 
     def __init__(self, service: SimilaritySearchService, *, depth: int = 2,
                  layout: str = "sparse"):
@@ -208,8 +239,21 @@ class IngestPipeline:
         self.depth = depth
         self.layout = layout
         self._inflight: collections.deque = collections.deque()
-        self.timings = {"sign_s": 0.0, "wait_s": 0.0, "scatter_s": 0.0,
-                        "wall_s": 0.0, "n_batches": 0, "n_items": 0}
+        reg = obs_metrics.default()
+        self._h = {s: reg.histogram(f"ingest.{s}") for s in self._STAGES}
+        self._base = {s: self._h[s].sum for s in self._STAGES}
+        self.n_batches = 0
+        self.n_items = 0
+
+    @property
+    def timings(self) -> dict:
+        """The classic accumulated split, derived from the registry
+        histograms (sums since this pipeline was constructed)."""
+        out = {f"{s}_s": self._h[s].sum - self._base[s]
+               for s in self._STAGES}
+        out["n_batches"] = self.n_batches
+        out["n_items"] = self.n_items
+        return out
 
     def __len__(self) -> int:
         return len(self._inflight)
@@ -218,12 +262,11 @@ class IngestPipeline:
         """Sign one batch (async) and scatter whatever is due."""
         t0 = time.perf_counter()
         signed = self.service._sign(batch, self.layout)
-        t1 = time.perf_counter()
+        self._h["sign"].observe(time.perf_counter() - t0)
         self._inflight.append((signed, len(batch)))
-        self.timings["sign_s"] += t1 - t0
         while len(self._inflight) >= self.depth:
             self._drain_one()
-        self.timings["wall_s"] += time.perf_counter() - t0
+        self._h["wall"].observe(time.perf_counter() - t0)
 
     def _drain_one(self) -> None:
         signed, n = self._inflight.popleft()
@@ -231,18 +274,17 @@ class IngestPipeline:
         host = np.asarray(signed)          # sync: outstanding device work
         t1 = time.perf_counter()
         self.service._scatter(host)
-        t2 = time.perf_counter()
-        self.timings["wait_s"] += t1 - t0
-        self.timings["scatter_s"] += t2 - t1
-        self.timings["n_batches"] += 1
-        self.timings["n_items"] += n
+        self._h["wait"].observe(t1 - t0)
+        self._h["scatter"].observe(time.perf_counter() - t1)
+        self.n_batches += 1
+        self.n_items += n
 
     def flush(self) -> None:
         """Drain every in-flight batch (the pipeline stays usable)."""
         t0 = time.perf_counter()
         while self._inflight:
             self._drain_one()
-        self.timings["wall_s"] += time.perf_counter() - t0
+        self._h["wall"].observe(time.perf_counter() - t0)
 
     def __enter__(self) -> "IngestPipeline":
         return self

@@ -47,6 +47,7 @@ remote backends restores just the coordinator state.
 
 from __future__ import annotations
 
+import json
 import os
 import time
 from typing import Protocol
@@ -57,6 +58,8 @@ import numpy as np
 from repro.core.lsh import band_hashes, band_hashes_packed
 from repro.distributed.collectives import merge_topk
 from repro.kernels import ops
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 from ._growth import grown
 from .planner import TopKPartial, finalize_topk
@@ -119,9 +122,14 @@ class _Lazy:
 
     def __init__(self, fn):
         self._fn = fn
+        self.latency_s: float | None = None     # thunk runtime, once gathered
 
     def result(self) -> TopKPartial:
-        return self._fn()
+        t0 = time.perf_counter()
+        try:
+            return self._fn()
+        finally:
+            self.latency_s = time.perf_counter() - t0
 
 
 class InProcessShard:
@@ -227,6 +235,16 @@ class ShardedSketchStore:
         self.last_timings: dict[str, float] = {}
         # set when a partial write left coordinator/worker state divergent
         self._failed: str | None = None
+        # registry handles bound once; per-shard partial-latency histograms
+        # are the skew evidence load-aware rebalancing will consume
+        reg = obs_metrics.default()
+        self._h_broadcast = reg.histogram("query.broadcast")
+        self._h_partial = reg.histogram("query.partial")
+        self._h_merge = reg.histogram("query.merge")
+        self._h_query = reg.histogram("query.wall")
+        self._h_shard = [reg.histogram(f"query.shard{i}.partial")
+                         for i in range(n_shards)]
+        self._tracer = obs_trace.default()
 
     # -- sizing ------------------------------------------------------------
     @property
@@ -239,6 +257,22 @@ class ShardedSketchStore:
 
     def shard_sizes(self) -> np.ndarray:
         return np.asarray([s.stats()["size"] for s in self.shards], np.int64)
+
+    def obs_snapshot(self) -> dict:
+        """One merged registry snapshot for the whole plane: the
+        coordinator's own registry plus every remote worker's (the ``obs``
+        JSON in their STATS replies), reduced with ``merge_snapshots`` —
+        the same exact associative reduction ``merge_topk`` does for
+        scores.  In-process shards already share the coordinator's
+        registry, so their stats carry no ``obs`` and nothing is counted
+        twice."""
+        snaps = [obs_metrics.default().snapshot()]
+        for sh in self.shards:
+            blob = sh.stats().get("obs")
+            if blob:
+                snaps.append(json.loads(blob)
+                             if isinstance(blob, str) else blob)
+        return obs_metrics.merge_snapshots(*snaps)
 
     def _gids(self, shard: int) -> np.ndarray:
         return self._gid_buf[shard][: self._gid_len[shard]]
@@ -351,20 +385,38 @@ class ShardedSketchStore:
         return TopKPartial(ids, part.scores, part.has_candidates)
 
     def _fanout(self, start, tally: dict) -> list[TopKPartial]:
-        """One submit/gather round over all shards, timed into ``tally``."""
+        """One submit/gather round over all shards, timed into ``tally``.
+
+        Per-shard reply latencies land in the ``query.shard{i}.partial``
+        histograms: for remote backends the offset from fan-out start to
+        that shard's reply frame completing, for in-process backends the
+        thunk runtime — either way, how long shard i made the round wait.
+        The broadcast span is ambient while legs are submitted, so remote
+        workers' spans nest under it in the stitched trace.
+        """
         t0 = time.perf_counter()
-        pend = [start(sh) for sh in self.shards]
+        with self._tracer.span("query.broadcast"):
+            pend = [start(sh) for sh in self.shards]
         t1 = time.perf_counter()
-        parts = [self._to_global(s, p.result()) for s, p in enumerate(pend)]
+        with self._tracer.span("query.partial"):
+            parts = [self._to_global(s, p.result())
+                     for s, p in enumerate(pend)]
         t2 = time.perf_counter()
         tally["broadcast_s"] += t1 - t0
         tally["partial_s"] += t2 - t1
+        self._h_broadcast.observe(t1 - t0)
+        self._h_partial.observe(t2 - t1)
+        for s, p in enumerate(pend):
+            lat = getattr(p, "latency_s", None)
+            if lat is not None:
+                self._h_shard[s].observe(lat)
         return parts
 
     def _merged_query(self, hashes: np.ndarray, qwords: np.ndarray,
                       top_k: int, mode: str) -> tuple[np.ndarray, np.ndarray]:
         """The shared scoring core: per-shard candidate partials -> merge ->
         global brute-force leg for rows with no candidates anywhere."""
+        wall_t0 = time.perf_counter()
         tally = {"broadcast_s": 0.0, "partial_s": 0.0, "merge_s": 0.0}
         parts = self._fanout(
             lambda sh: sh.start_query(hashes, qwords, top_k, mode), tally)
@@ -372,20 +424,24 @@ class ShardedSketchStore:
         for p in parts:
             has_any |= p.has_candidates
         t0 = time.perf_counter()
-        scores, ids = merge_topk([p.scores for p in parts],
-                                 [p.ids for p in parts], top_k)
+        with self._tracer.span("query.merge"):
+            scores, ids = merge_topk([p.scores for p in parts],
+                                     [p.ids for p in parts], top_k)
         tally["merge_s"] += time.perf_counter() - t0
         em = np.flatnonzero(~has_any)
         if len(em) and self.n_items:
             brute = self._fanout(
                 lambda sh: sh.start_brute(qwords[em], top_k), tally)
             t0 = time.perf_counter()
-            b_scores, b_ids = merge_topk([p.scores for p in brute],
-                                         [p.ids for p in brute], top_k)
+            with self._tracer.span("query.merge"):
+                b_scores, b_ids = merge_topk([p.scores for p in brute],
+                                             [p.ids for p in brute], top_k)
             scores[em] = b_scores
             ids[em] = b_ids
             tally["merge_s"] += time.perf_counter() - t0
         self.last_timings = tally
+        self._h_merge.observe(tally["merge_s"])
+        self._h_query.observe(time.perf_counter() - wall_t0)
         return finalize_topk(TopKPartial(ids, scores, has_any))
 
     def query(self, qsigs: np.ndarray,
@@ -397,10 +453,16 @@ class ShardedSketchStore:
         backend."""
         self._check_queryable("query()")
         qsigs = np.asarray(qsigs)
-        hashes = band_hashes(qsigs, self.cfg.n_bands, self.cfg.rows_per_band)
-        qwords = np.asarray(ops.pack_codes(jnp.asarray(qsigs, jnp.int32),
-                                           self.cfg.b))
-        return self._merged_query(hashes, qwords, top_k, "sig")
+        # store.query is the root when nobody upstream opened one (a direct
+        # store caller still gets one stitched trace); under the service's
+        # "query" span it just nests
+        with self._tracer.span("store.query"):
+            with self._tracer.span("query.fold"):
+                hashes = band_hashes(qsigs, self.cfg.n_bands,
+                                     self.cfg.rows_per_band)
+                qwords = np.asarray(
+                    ops.pack_codes(jnp.asarray(qsigs, jnp.int32), self.cfg.b))
+            return self._merged_query(hashes, qwords, top_k, "sig")
 
     def query_packed(self, qwords: np.ndarray,
                      top_k: int = 10) -> tuple[np.ndarray, np.ndarray]:
@@ -408,8 +470,10 @@ class ShardedSketchStore:
         self._check_queryable("query_packed()")
         check_packed_banding(self.cfg)
         qwords = np.asarray(qwords, np.uint32)
-        hashes = band_hashes_packed(qwords, self.cfg.n_bands)
-        return self._merged_query(hashes, qwords, top_k, "packed")
+        with self._tracer.span("store.query"):
+            with self._tracer.span("query.fold"):
+                hashes = band_hashes_packed(qwords, self.cfg.n_bands)
+            return self._merged_query(hashes, qwords, top_k, "packed")
 
     def _check_queryable(self, op: str) -> None:
         self._check_consistent()

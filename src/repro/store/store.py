@@ -16,10 +16,12 @@ factor above ``rebuild_load_factor``, or spilled entries above
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
 from repro.core.lsh import band_hashes, band_hashes_packed
+from repro.obs import metrics as obs_metrics
 
 from .packed import PackedConfig, PackedSignatureBuffer
 from .planner import QueryPlanner
@@ -252,9 +254,13 @@ class SketchStore:
     def rebuild(self, n_slots: int | None = None,
                 bucket_width: int | None = None,
                 max_probes: int | None = None) -> None:
+        t0 = time.perf_counter()
         self.table.rebuild(n_slots=n_slots, bucket_width=bucket_width,
                            max_probes=max_probes)
         self.n_rebuilds += 1
+        reg = obs_metrics.default()
+        reg.counter("store.rebuilds").inc()
+        reg.histogram("store.rebuild").observe(time.perf_counter() - t0)
 
     # -- reads -------------------------------------------------------------
     def candidate_rows_hashed(self, hashes: np.ndarray, *, mode: str = "sig",

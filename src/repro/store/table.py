@@ -30,6 +30,7 @@ import numpy as np
 # probe chain + empty-slot sentinel are owned by the probe-kernel module so
 # the host walk and the device impls can never diverge
 from repro.kernels.lsh_probe import SENTINEL_KEY, probe_offset  # noqa: F401
+from repro.obs import metrics as obs_metrics
 
 from ._growth import grown
 
@@ -57,6 +58,17 @@ class BandedLSHTable:
         self.n_slots = n_slots
         self.bucket_width = bucket_width
         self.max_probes = max_probes
+        # registry handles bound once per table; occupancy gauges report
+        # DELTAS (new - last reported) so N tables in one process sum to a
+        # process total — the same additive semantics gauge merges use
+        reg = obs_metrics.default()
+        self._c_spill_probe = reg.counter("table.spill.probe")
+        self._c_spill_overflow = reg.counter("table.spill.overflow")
+        self._h_probe_depth = reg.histogram("table.probe_depth")
+        self._g_used = reg.gauge("table.used_slots")
+        self._g_capacity = reg.gauge("table.capacity")
+        self._rep_used = 0
+        self._rep_capacity = 0
         self._alloc()
         # replay log for rebuild(): every inserted (item, band) hash
         self._hashes = np.zeros((_HASH_BUF_MIN, n_bands), np.uint64)
@@ -76,6 +88,10 @@ class BandedLSHTable:
         self._used_slots = 0        # incremental; avoids used.sum() scans
         self.n_spill_probe = 0      # probe chain exhausted (table too full)
         self.n_spill_overflow = 0   # bucket full (width too small)
+        self._g_capacity.add(nb * ns - self._rep_capacity)
+        self._rep_capacity = nb * ns
+        self._g_used.add(-self._rep_used)      # fresh arrays: nothing used
+        self._rep_used = 0
 
     @property
     def _spill_band(self) -> np.ndarray:
@@ -194,6 +210,7 @@ class BandedLSHTable:
                 if len(over):
                     self._spill(band[over], key[over], eid[over])
                     self.n_spill_overflow += len(over)
+                    self._c_spill_overflow.inc(len(over))
                 keep = ~match
                 band, key, eid = band[keep], key[keep], eid[keep]
                 half, key64, base = half[keep], key64[keep], base[keep]
@@ -201,10 +218,14 @@ class BandedLSHTable:
         if len(band):                      # probe chain exhausted
             self._spill(band, key, eid)
             self.n_spill_probe += len(band)
+            self._c_spill_probe.inc(len(band))
         sent = np.flatnonzero(ent_key == SENTINEL_KEY)
         if len(sent):
             self._spill(ent_band[sent], ent_key[sent], ent_id[sent])
             self.n_spill_probe += len(sent)
+            self._c_spill_probe.inc(len(sent))
+        self._g_used.add(self._used_slots - self._rep_used)
+        self._rep_used = self._used_slots
 
     def _spill(self, band, key, eid) -> None:
         need = self._spill_len + len(eid)
@@ -288,6 +309,12 @@ class BandedLSHTable:
         hit = k64 == key64
         out = np.where(hit[:, None], rec[:, 2:], np.int32(-1))
         active = np.flatnonzero(~hit & (k64 != -1) & (key != SENTINEL_KEY))
+        # probe-depth histogram: depth d = entries that needed d gathers
+        # (the ~1/(1-load) expectation made measurable; bucket values are
+        # small ints, not seconds, but the log buckets resolve 1..max_probes)
+        n_act = len(active)
+        if q * nb - n_act:
+            self._h_probe_depth.observe_n(1.0, q * nb - n_act)
         for t in range(1, self.max_probes):
             if not len(active):
                 break
@@ -296,6 +323,12 @@ class BandedLSHTable:
             hit = k64 == key64[active]
             out[active[hit]] = rec[hit, 2:]
             active = active[~hit & (k64 != -1)]
+            if n_act - len(active):
+                self._h_probe_depth.observe_n(float(t + 1),
+                                              n_act - len(active))
+            n_act = len(active)
+        if n_act:                       # chain exhausted: counted at the cap
+            self._h_probe_depth.observe_n(float(self.max_probes), n_act)
         return out.reshape(q, nb * w)
 
     def spilled_candidates(self, hashes: np.ndarray, *,

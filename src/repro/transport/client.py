@@ -27,6 +27,8 @@ import time
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.store.planner import TopKPartial
 from repro.store.sharded import ShardedSketchStore
 
@@ -69,6 +71,18 @@ class ShardConnection:
         self.max_payload = max_payload
         self._seq = 0
         self.broken: str | None = None     # why this conn is unusable
+        # registry handles are bound once at construction (the disabled
+        # registry hands out shared no-ops, so a disabled plane pays zero
+        # lookup cost per request); per-connection plain tallies feed the
+        # which-shard/which-seq error text
+        reg = obs_metrics.default()
+        self._m_stale = reg.counter("transport.client.stale_replies")
+        self._m_timeout = reg.counter("transport.client.timeouts")
+        self._m_bytes_out = reg.counter("transport.client.bytes_out")
+        self._m_bytes_in = reg.counter("transport.client.bytes_in")
+        self.n_stale = 0                   # stale replies discarded here
+        self.n_timeouts = 0
+        self.last_stale_seq: int | None = None
         try:
             self.sock = socket.create_connection(self.address,
                                                  timeout=timeout)
@@ -93,38 +107,63 @@ class ShardConnection:
             raise WorkerError(
                 f"worker {self._name} connection unusable: {self.broken}")
 
+    def note_stale(self, seq: int) -> None:
+        """Record one discarded stale reply (registry + which-seq tally)."""
+        self.n_stale += 1
+        self.last_stale_seq = seq
+        self._m_stale.inc()
+
+    def _stale_note(self) -> str:
+        if not self.n_stale:
+            return ""
+        return (f"; {self.n_stale} stale repl"
+                f"{'y' if self.n_stale == 1 else 'ies'} discarded on this "
+                f"connection (last stale seq={self.last_stale_seq})")
+
     def request(self, msg: Message) -> Message:
         """Send one frame, read its reply (raises on ERROR replies)."""
         self.check_usable()
         msg.seq = self.next_seq()
         try:
-            wire.send_message(self.sock, msg)
+            wire.send_message(self.sock, msg, meter=self._m_bytes_out.inc)
             while True:
                 reply = wire.recv_message(self.sock,
-                                          max_payload=self.max_payload)
+                                          max_payload=self.max_payload,
+                                          meter=self._m_bytes_in.inc)
                 if reply.seq == msg.seq:
                     break
                 if reply.type == MsgType.ERROR and reply.seq == 0:
                     break      # connection-level worker error: surface it
                 # stale reply from an abandoned fan-out: drop and re-read
+                self.note_stale(reply.seq)
         except socket.timeout as e:
             # the frame may have been cut mid-send or mid-read; seq pairing
             # only recovers frame-aligned streams, so poison the connection
-            self.mark_broken(f"timed out mid-{msg.type.name}")
+            self.n_timeouts += 1
+            self._m_timeout.inc()
+            self.mark_broken(f"timed out mid-{msg.type.name} seq={msg.seq}")
             raise TransportTimeout(
                 f"worker {self._name} timed out after {self.timeout}s "
-                f"({msg.type.name})") from e
+                f"({msg.type.name} seq={msg.seq}{self._stale_note()})") from e
         except (wire.WireError, OSError) as e:
-            self.mark_broken(f"stream failed during {msg.type.name}: "
-                             f"{type(e).__name__}")
+            self.mark_broken(f"stream failed during {msg.type.name} "
+                             f"seq={msg.seq}: {type(e).__name__}")
             raise WorkerError(
-                f"worker {self._name} failed during {msg.type.name}: "
-                f"{type(e).__name__}: {e}") from e
+                f"worker {self._name} failed during {msg.type.name} "
+                f"seq={msg.seq}: {type(e).__name__}: {e}"
+                f"{self._stale_note()}") from e
         return self._check(reply)
 
     def _check(self, reply: Message) -> Message:
+        # a reply may carry the worker's finished trace spans next to the
+        # echoed seq — fold them into this process's tracer so coordinator
+        # and worker legs stitch into one trace
+        blob = reply.fields.get(wire.TRACE_SPANS_FIELD)
+        if blob:
+            obs_trace.default().absorb_json(blob)
         if reply.type == MsgType.ERROR:
-            err = WorkerError(f"worker {self._name}: {reply['error']}")
+            err = WorkerError(f"worker {self._name}: {reply['error']} "
+                              f"(seq={reply.seq}{self._stale_note()})")
             # worker says the failed op mutated its store (ADD landed
             # partially): the coordinator must not treat a retry as safe
             err.dirty = bool(reply.fields.get("dirty", 0))
@@ -173,6 +212,12 @@ class _Pending:
         return self._decode(self._group.take(
             self._conn, reset_on_error=self._reset_on_error))
 
+    @property
+    def latency_s(self) -> float | None:
+        """Seconds from fan-out start to this shard's reply landing — the
+        per-shard skew signal (None until the reply has arrived)."""
+        return self._group._reply_lat.get(self._conn)
+
 
 class FanoutGroup:
     """Nonblocking broadcast/gather over a set of shard connections.
@@ -193,6 +238,13 @@ class FanoutGroup:
         self._want: dict[ShardConnection, int] = {}     # expected reply seq
         self._replies: dict[ShardConnection, Message] = {}
         self._round_error: BaseException | None = None  # why the round died
+        reg = obs_metrics.default()
+        self._m_timeout = reg.counter("transport.client.timeouts")
+        self._m_bytes_out = reg.counter("transport.client.bytes_out")
+        self._m_bytes_in = reg.counter("transport.client.bytes_in")
+        self._h_round = reg.histogram("transport.client.fanout")
+        self._round_t0 = 0.0               # when the current round started
+        self._reply_lat: dict[ShardConnection, float] = {}
 
     def submit(self, conn: ShardConnection, msg: Message, *,
                decode=_partial_from, reset_on_error: bool = True) -> _Pending:
@@ -200,6 +252,7 @@ class FanoutGroup:
             raise TransportError("one outstanding fan-out request per shard")
         if not self._out and not self._replies:
             self._round_error = None      # a fresh round: forget old failures
+            self._reply_lat.clear()
         try:
             conn.check_usable()
             msg.seq = conn.next_seq()
@@ -271,6 +324,7 @@ class FanoutGroup:
         pending = set(self._out)
         if not pending:
             return
+        self._round_t0 = time.perf_counter()
         deadline = time.monotonic() + self.timeout
         sel = selectors.DefaultSelector()
         try:
@@ -280,7 +334,9 @@ class FanoutGroup:
             while pending:
                 budget = deadline - time.monotonic()
                 if budget <= 0:
-                    names = sorted(c._name for c in pending)
+                    self._m_timeout.inc()
+                    names = sorted(f"{c._name} (seq={self._want.get(c)})"
+                                   for c in pending)
                     raise TransportTimeout(
                         f"fan-out timed out after {self.timeout}s waiting on "
                         f"{len(names)} shard(s): {', '.join(names)}")
@@ -304,6 +360,7 @@ class FanoutGroup:
                     if conn in self._replies:
                         sel.unregister(conn.sock)
                         pending.discard(conn)
+            self._h_round.observe(time.perf_counter() - self._round_t0)
         finally:
             sel.close()
             for conn in self.conns:
@@ -339,6 +396,7 @@ class FanoutGroup:
                 sent = conn.sock.send(bufs[0])
             except BlockingIOError:
                 return
+            self._m_bytes_out.inc(sent)
             if sent < bufs[0].nbytes:
                 bufs[0] = bufs[0].cast("B")[sent:]
                 return
@@ -356,6 +414,7 @@ class FanoutGroup:
                 raise WorkerError(
                     f"worker {conn._name} closed the connection mid-query "
                     "(worker process died?)")
+            self._m_bytes_in.inc(len(chunk))
             buf += chunk
             if self._try_complete(conn):
                 return
@@ -372,6 +431,7 @@ class FanoutGroup:
                 return False
             if seq != self._want[conn] and \
                     not (mtype == MsgType.ERROR and seq == 0):
+                conn.note_stale(seq)
                 del buf[:end]      # stale reply from an abandoned fan-out
                 continue
             if len(buf) > end:
@@ -380,6 +440,7 @@ class FanoutGroup:
             # one definition shared with the blocking path
             self._replies[conn] = wire.decode_frame(
                 memoryview(buf)[:end], max_payload=conn.max_payload)
+            self._reply_lat[conn] = time.perf_counter() - self._round_t0
             return True
 
     def close(self) -> None:
@@ -394,15 +455,27 @@ class RemoteShard:
         self.conn = conn
         self.group = group
 
+    @staticmethod
+    def _traced(fields: dict) -> dict:
+        """Attach the ambient trace context (if any) as wire fields, so the
+        worker's spans join the coordinator's trace.  Reading the ambient
+        stack here is what keeps the ``ShardBackend`` protocol unchanged."""
+        ctx = obs_trace.current()
+        if ctx is not None:
+            fields[wire.TRACE_ID_FIELD] = ctx.trace_id
+            fields[wire.TRACE_PARENT_FIELD] = ctx.span_id
+        return fields
+
     # -- writes (blocking request/reply) ------------------------------------
     def add(self, sigs: np.ndarray) -> int:
         return int(self.conn.request(Message(
-            MsgType.ADD, {"rows": np.ascontiguousarray(sigs, np.int32)}))["n"])
+            MsgType.ADD, self._traced(
+                {"rows": np.ascontiguousarray(sigs, np.int32)})))["n"])
 
     def add_packed(self, words: np.ndarray) -> int:
         return int(self.conn.request(Message(
-            MsgType.ADD,
-            {"words": np.ascontiguousarray(words, np.uint32)}))["n"])
+            MsgType.ADD, self._traced(
+                {"words": np.ascontiguousarray(words, np.uint32)})))["n"])
 
     # -- the write fan-out ---------------------------------------------------
     def start_add(self, batch: np.ndarray, *, packed: bool = False) -> _Pending:
@@ -414,7 +487,8 @@ class RemoteShard:
         """
         field = {"words": np.ascontiguousarray(batch, np.uint32)} if packed \
             else {"rows": np.ascontiguousarray(batch, np.int32)}
-        return self.group.submit(self.conn, Message(MsgType.ADD, field),
+        return self.group.submit(self.conn,
+                                 Message(MsgType.ADD, self._traced(field)),
                                  decode=lambda m: int(m["n"]),
                                  reset_on_error=False)
 
@@ -422,15 +496,15 @@ class RemoteShard:
     def start_query(self, hashes: np.ndarray, qwords: np.ndarray,
                     top_k: int, mode: str) -> _Pending:
         lo, hi = wire.split_u64(hashes)
-        return self.group.submit(self.conn, Message(MsgType.QUERY, {
+        return self.group.submit(self.conn, Message(MsgType.QUERY, self._traced({
             "hash_lo": lo, "hash_hi": hi,
             "qwords": np.ascontiguousarray(qwords, np.uint32),
-            "top_k": int(top_k), "mode": mode}))
+            "top_k": int(top_k), "mode": mode})))
 
     def start_brute(self, qwords: np.ndarray, top_k: int) -> _Pending:
-        return self.group.submit(self.conn, Message(MsgType.BRUTE, {
+        return self.group.submit(self.conn, Message(MsgType.BRUTE, self._traced({
             "qwords": np.ascontiguousarray(qwords, np.uint32),
-            "top_k": int(top_k)}))
+            "top_k": int(top_k)})))
 
     # -- control -------------------------------------------------------------
     def stats(self) -> dict:

@@ -24,13 +24,18 @@ reconnect.  Only SHUTDOWN (acked first) exits the process.
 
 from __future__ import annotations
 
+import json
 import multiprocessing
 import os
+import select
 import socket
+import time
 import traceback
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.store.sharded import shard_snapshot_path
 from repro.store.store import SketchStore, StoreConfig
 
@@ -38,7 +43,8 @@ from . import wire
 from .wire import Message, MsgType
 
 
-def _handle(store: SketchStore, msg: Message) -> tuple[Message, bool]:
+def _handle(store: SketchStore, msg: Message,
+            shard: int = -1) -> tuple[Message, bool]:
     """One request -> (reply, keep_serving)."""
     f = msg.fields
     if msg.type == MsgType.ADD:
@@ -75,11 +81,19 @@ def _handle(store: SketchStore, msg: Message) -> tuple[Message, bool]:
                        {"ids": part.ids, "scores": part.scores,
                         "has": part.has_candidates}), True
     if msg.type == MsgType.STATS:
+        # ``obs`` is this worker's full registry snapshot (store/table/
+        # kernel instrumentation plus the worker.* transport metrics) as a
+        # JSON string — the coordinator merges these across shards with
+        # ``obs.metrics.merge_snapshots`` exactly like ``merge_topk``
         return Message(MsgType.OK, {"size": store.size,
                                     "n_spilled": store.n_spilled,
                                     "n_rebuilds": store.n_rebuilds,
                                     "probe_impl": store.probe_impl,
-                                    "pid": os.getpid()}), True
+                                    "pid": os.getpid(),
+                                    "shard": int(shard),
+                                    "obs": json.dumps(
+                                        obs_metrics.default().snapshot())
+                                    }), True
     if msg.type == MsgType.SNAPSHOT:
         store.save(f["path"])
         return Message(MsgType.OK, {}), True
@@ -88,39 +102,76 @@ def _handle(store: SketchStore, msg: Message) -> tuple[Message, bool]:
     raise wire.ProtocolError(f"unexpected message type {msg.type!r}")
 
 
-def _serve_conn(store: SketchStore, conn: socket.socket) -> bool:
+def _serve_conn(store: SketchStore, conn: socket.socket,
+                shard: int = -1) -> bool:
     """Serve one coordinator connection.  Returns False when SHUTDOWN."""
     conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    reg = obs_metrics.default()
+    tracer = obs_trace.default()
+    bytes_in = reg.counter("worker.bytes_in")
+    bytes_out = reg.counter("worker.bytes_out")
+    errors = reg.counter("worker.errors")
+    wire_errors = reg.counter("worker.wire_errors")
+    backlog = reg.counter("worker.backlog")
+    handle_h = {t: reg.histogram(f"worker.handle.{t.name.lower()}")
+                for t in MsgType}
     while True:
         try:
-            msg = wire.recv_message(conn)
+            msg = wire.recv_message(conn, meter=bytes_in.inc)
         except wire.ConnectionClosed:
             return True                          # client went away: re-accept
         except wire.WireError as e:              # stream out of sync: drop it
+            wire_errors.inc()
             try:
                 wire.send_message(conn, Message(
-                    MsgType.ERROR, {"error": f"{type(e).__name__}: {e}"}))
+                    MsgType.ERROR, {"error": f"{type(e).__name__}: {e}"}),
+                    meter=bytes_out.inc)
             except OSError:
                 pass
             return True
+        # a request carrying trace fields joins the coordinator's trace:
+        # the worker's legs nest under the span whose id rode the frame
+        ctx = None
+        if wire.TRACE_ID_FIELD in msg.fields:
+            ctx = obs_trace.TraceCtx(int(msg.fields[wire.TRACE_ID_FIELD]),
+                                     int(msg.fields[wire.TRACE_PARENT_FIELD]))
+        t0 = time.perf_counter()
         try:
-            reply, keep = _handle(store, msg)
+            # with no ctx (and the worker tracer's sample rate of 0) this
+            # returns the shared no-op span — untraced requests pay nothing
+            with tracer.span(f"worker.{msg.type.name.lower()}", parent=ctx):
+                reply, keep = _handle(store, msg, shard)
         except Exception as e:                   # worker-side op failure
+            errors.inc()
             reply, keep = Message(MsgType.ERROR, {
                 "error": f"{type(e).__name__}: {e}",
                 "dirty": int(getattr(e, "add_dirty", False)),
                 "traceback": traceback.format_exc(limit=8)}), True
+        handle_h[msg.type].observe(time.perf_counter() - t0)
+        if ctx is not None:
+            spans = tracer.drain()
+            if spans:               # reply carries this worker's spans home
+                reply.fields[wire.TRACE_SPANS_FIELD] = json.dumps(spans)
         reply.seq = msg.seq                      # pair reply to its request
         try:
-            wire.send_message(conn, reply)
+            wire.send_message(conn, reply, meter=bytes_out.inc)
         except OSError:
             return keep    # client vanished before reading: back to accept
         if not keep:
             return False
+        # queue-depth proxy for a single-threaded worker: another request
+        # already readable the moment we finish one means the coordinator
+        # is ahead of us — each such observation is one backlogged request
+        try:
+            if select.select([conn], [], [], 0)[0]:
+                backlog.inc()
+        except OSError:
+            pass
 
 
 def run_worker(ready_conn, cfg: StoreConfig | None, snapshot: str | None,
-               probe_impl: str, host: str, port: int) -> None:
+               probe_impl: str, host: str, port: int,
+               shard: int = -1) -> None:
     """Worker entry point (spawn target — all arguments picklable).
 
     Boots a ``SketchStore`` (empty from ``cfg``, or from ``snapshot``),
@@ -133,6 +184,12 @@ def run_worker(ready_conn, cfg: StoreConfig | None, snapshot: str | None,
     its accelerator hosts, the numpy walk on CPU hosts).  The resolved
     backend is reported in STATS (``probe_impl``).
     """
+    # the worker gets its own tracer labelled with its shard index, so a
+    # stitched trace says which process each span ran in; sample rate stays
+    # 0 — worker spans only open under a wire-propagated parent, inheriting
+    # the coordinator's sampling decision
+    obs_trace.set_default(obs_trace.Tracer(
+        proc=f"shard{shard}" if shard >= 0 else f"worker-pid{os.getpid()}"))
     if probe_impl == "auto":
         from repro.kernels.dispatch import select_probe_impl
         probe_impl = select_probe_impl()
@@ -153,7 +210,7 @@ def run_worker(ready_conn, cfg: StoreConfig | None, snapshot: str | None,
         while True:
             conn, _ = lsock.accept()
             with conn:
-                if not _serve_conn(store, conn):
+                if not _serve_conn(store, conn, shard):
                     return
     finally:
         lsock.close()
@@ -206,7 +263,7 @@ def spawn_workers(cfg: StoreConfig | None, n_shards: int, *,
             parent, child = ctx.Pipe(duplex=False)
             proc = ctx.Process(
                 target=run_worker,
-                args=(child, cfg, snap, probe_impl, host, 0),
+                args=(child, cfg, snap, probe_impl, host, 0, i),
                 daemon=True, name=f"shard-worker-{i}")
             proc.start()
             child.close()

@@ -55,6 +55,16 @@ HEADER_SIZE = _HEADER.size
 
 MAX_PAYLOAD = 1 << 30                   # 1 GiB hard ceiling per frame
 
+# Trace-context field names (``repro.obs.trace``).  The header is frozen at
+# 16 bytes, so trace ids ride as ordinary payload fields — underscore-
+# prefixed to stay clear of operation fields, ignored by peers that do not
+# know them (decode returns a plain dict; handlers read specific keys).
+# Requests carry the trace id + parent span id; replies carry the worker's
+# finished spans as a JSON string next to the echoed seq.
+TRACE_ID_FIELD = "_tr"          # request: int, the 63-bit trace id
+TRACE_PARENT_FIELD = "_trp"     # request: int, the coordinator's span id
+TRACE_SPANS_FIELD = "_trs"      # reply: str, JSON list of worker span dicts
+
 
 class MsgType(enum.IntEnum):
     ADD = 1          # rows=(B,K) i32 sigs  OR  words=(B,W) u32 packed
@@ -285,21 +295,28 @@ def read_exact(sock, n: int) -> bytearray:
     return buf
 
 
-def recv_message(sock, *, max_payload: int = MAX_PAYLOAD) -> Message:
-    """Blocking read of one frame from a socket."""
+def recv_message(sock, *, max_payload: int = MAX_PAYLOAD,
+                 meter=None) -> Message:
+    """Blocking read of one frame from a socket.  ``meter``, if given, is
+    called with the frame's total byte count (bytes-in accounting)."""
     header = read_exact(sock, HEADER_SIZE)
     mtype, seq, length, crc = decode_header(bytes(header),
                                             max_payload=max_payload)
     payload = read_exact(sock, length) if length else bytearray()
     if zlib.crc32(payload) & 0xFFFFFFFF != crc:
         raise ChecksumError("payload CRC mismatch")
+    if meter is not None:
+        meter(HEADER_SIZE + length)
     return Message(mtype, decode_payload(payload), seq)
 
 
-def send_message(sock, msg: Message) -> None:
-    """Gather-write one frame (no concatenated payload copy)."""
+def send_message(sock, msg: Message, *, meter=None) -> None:
+    """Gather-write one frame (no concatenated payload copy).  ``meter``,
+    if given, is called with the frame's total byte count."""
     bufs = [memoryview(b) if not isinstance(b, memoryview) else b
             for b in encode_message(msg)]
+    if meter is not None:
+        meter(sum(b.nbytes for b in bufs))
     sendmsg = getattr(sock, "sendmsg", None)
     if sendmsg is None:                        # exotic socket: join + sendall
         sock.sendall(b"".join(bytes(b) for b in bufs))
