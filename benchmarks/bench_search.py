@@ -15,6 +15,15 @@ query wall-time split — submit/serialize (broadcast), per-shard partial
 compute + gather (partial), and reduction (merge) — next to the inproc
 split, so transport overhead is tracked per shard count from day one.
 
+The ``search_query_fused`` row times the fused device query pipeline
+(uint32-lane fold -> probe -> packed scoring, ``kernels/query_fused.py``)
+against the legacy host fold on the same store — interleaved min-of-N, with
+novel random queries appended so the brute-force fallback rows are inside
+the parity check.  The sharded/tcp query rows ride the packed serving path
+(``--query-impl``), record the coordinator ``fold_us`` next to the
+broadcast/partial/merge split, and assert bit-identity against the
+single-store HOST oracle at every (transport, S).
+
 The ``--pipeline-depth`` axis measures end-to-end ingest (sign -> pack ->
 scatter) through ``serve.search.IngestPipeline`` per depth and transport,
 recording the sign/wait/scatter wall-time split — ``wait`` is the device
@@ -82,33 +91,39 @@ def _timed_block(fn, iters=15):
 
 
 def _timing_split(sh, n_queries: int) -> str:
-    """`last_timings` -> per-query broadcast/partial/merge derived fields."""
+    """`last_timings` -> per-query fold/broadcast/partial/merge derived
+    fields (fold_s is the coordinator-side band-hash fold; 0.0 on the sig
+    path until the store folded at least one packed batch)."""
     t = sh.last_timings
     return "|".join(f"{key.split('_')[0]}_us="
                     f"{t.get(key, 0.0) * 1e6 / n_queries:.1f}"
-                    for key in ("broadcast_s", "partial_s", "merge_s"))
+                    for key in ("fold_s", "broadcast_s", "partial_s",
+                                "merge_s"))
 
 
 def _stage_quantiles(before: dict, after: dict,
                      names: tuple[str, ...]) -> dict:
     """p50/p90/p99 (in us) per stage histogram, from the registry delta
     between two snapshots — only the calls made between them count.
-    Stages with no observations in the window are omitted."""
+    Stages with no observations in the window are omitted.  ``n`` is the
+    sample count behind the quantiles: a p99 over 5 observations is a max,
+    not a tail — readers need the n to weigh it."""
     delta = obs_metrics.snapshot_delta(before, after)
     out: dict[str, dict[str, float]] = {}
     for name in names:
         h = delta["hists"].get(name)
         if not h or not h.get("count"):
             continue
-        out[name] = {
+        out[name] = {"n": int(h["count"]), **{
             f"p{int(q * 100)}_us": round(
                 (obs_metrics.hist_quantile(h, q) or 0.0) * 1e6, 1)
-            for q in (0.5, 0.9, 0.99)}
+            for q in (0.5, 0.9, 0.99)}}
     return out
 
 
 def _query_stages(n_shards: int) -> tuple[str, ...]:
-    return (("query.wall", "query.broadcast", "query.partial", "query.merge")
+    return (("query.wall", "query.fold", "query.broadcast", "query.partial",
+             "query.merge")
             + tuple(f"query.shard{i}.partial" for i in range(n_shards)))
 
 
@@ -184,7 +199,8 @@ def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
         shards: tuple[int, ...] = (2, 4),
         transports: tuple[str, ...] = ("inproc", "tcp"),
         pipeline_depths: tuple[int, ...] = (1, 2, 4),
-        ingest_docs: int = 20_000, ingest_batch: int = 512) -> list[dict]:
+        ingest_docs: int = 20_000, ingest_batch: int = 512,
+        query_impl: str = "auto") -> list[dict]:
     rows_out: list[dict] = []
 
     def em(name, us, derived, **fields):
@@ -256,6 +272,59 @@ def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
     em("search_query_store", t_query * 1e6 / n_queries,
        f"qps={n_queries / t_query:.0f}|n_items={n_items}")
 
+    # fused device query path vs the legacy host fold, same store.  Queries
+    # are the b=32 packed form (a bitcast of the int32 signatures) at a
+    # serving-sized batch — the host walk's cost is per-query, the device
+    # path's is per-dispatch, so the crossover is batch size (~1k on CPU).
+    # Parity is checked on a superset batch with novel random rows appended
+    # (the brute-force fallback leg), but the TIMED batch excludes them:
+    # brute re-scores the whole corpus on host for both impls and would
+    # otherwise swamp the LSH-path numbers being compared.  Interleaved
+    # min-of-N, same convention as the obs-overhead row below — the two
+    # impls flip on one store so drift hits both equally.
+    from repro.kernels.dispatch import select_query_impl
+    dev_impl = query_impl if query_impl not in ("auto", "host") \
+        else select_query_impl()
+    nq_pk = int(min(n_items, max(4 * n_queries, n_queries)))
+    qsigs_pk = sigs[rng.choice(n_items, nq_pk, replace=False)]
+    qwords = np.ascontiguousarray(qsigs_pk).view(np.uint32)
+    novel = rng.integers(0, 1 << 20, (max(n_queries // 8, 4), k),
+                         dtype=np.int32)
+    qwords_par = np.ascontiguousarray(
+        np.vstack([qsigs_pk, novel])).view(np.uint32)
+    store.query_impl = "host"
+    store.query_packed(qwords, top_k=10)           # warm host trace
+    ref_pk = store.query_packed(qwords, top_k=10)
+    ref_pk_par = store.query_packed(qwords_par, top_k=10)
+    store.query_impl = dev_impl
+    fused_par = store.query_packed(qwords_par, top_k=10)  # warm + parity
+    assert np.array_equal(ref_pk_par[0], fused_par[0]), "fused ids diverge"
+    assert np.array_equal(ref_pk_par[1], fused_par[1]), \
+        "fused scores diverge"
+    import gc
+    t_host_l: list[float] = []
+    t_fused_l: list[float] = []
+    gc.disable()
+    try:
+        for _ in range(10):
+            store.query_impl = "host"
+            t0 = time.perf_counter()
+            store.query_packed(qwords, top_k=10)
+            t_host_l.append(time.perf_counter() - t0)
+            store.query_impl = dev_impl
+            t0 = time.perf_counter()
+            store.query_packed(qwords, top_k=10)
+            t_fused_l.append(time.perf_counter() - t0)
+    finally:
+        gc.enable()
+    t_host_pk, t_fused_pk = min(t_host_l), min(t_fused_l)
+    em("search_query_fused", t_fused_pk * 1e6 / nq_pk,
+       f"qps={nq_pk / t_fused_pk:.0f}|impl={dev_impl}|batch={nq_pk}|"
+       f"host_us={t_host_pk * 1e6 / nq_pk:.1f}|"
+       f"query_fused_speedup={t_host_pk / t_fused_pk:.2f}x|"
+       f"parity=exact_incl_brute")
+    store.query_impl = query_impl          # the run-level knob from here on
+
     # observability overhead: the same queries against an identical store
     # built with the registry DISABLED (shared null handles bound at
     # construction) — the no-op fast-path claim, measured, not asserted
@@ -300,54 +369,68 @@ def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
         cfg_s = StoreConfig.sized_for(
             -(-n_items // s), k=k, n_bands=n_bands,
             rows_per_band=rows_per_band, bucket_width=4)
+        # sharded queries ride the packed serving path (the fused device
+        # pipeline per the run-level --query-impl; the coordinator folds
+        # once and broadcasts hashes).  Parity target is the single store
+        # on the HOST oracle: the timed batch against ref_pk, and an
+        # untimed superset with novel brute-fallback rows against
+        # ref_pk_par — every (transport, S) row re-proves fused == host
+        # bit-for-bit including the fallback leg before it is timed.
         if "inproc" in transports:
-            sh = ShardedSketchStore(cfg_s, n_shards=s)
+            sh = ShardedSketchStore(cfg_s, n_shards=s, query_impl=query_impl)
             t0 = time.perf_counter()
             sh.add(sigs)
             t_build = time.perf_counter() - t0
-            sh.query(qsigs, top_k=10)      # warm per-shard traces
+            par = sh.query_packed(qwords_par, top_k=10)
+            assert np.array_equal(par[0], ref_pk_par[0]) and \
+                np.array_equal(par[1], ref_pk_par[1]), f"shard-brute S={s}"
+            sh.query_packed(qwords, top_k=10)  # warm per-shard traces
             before = obs_metrics.default().snapshot()
             t_q, (ids, scores) = _timed_block(
-                lambda: sh.query(qsigs, top_k=10), iters=5)
+                lambda: sh.query_packed(qwords, top_k=10), iters=5)
             lat = _stage_quantiles(before, obs_metrics.default().snapshot(),
                                    _query_stages(s))
             # the merge contract: S shards answer exactly like one store
-            assert np.array_equal(ids, ref_ids), f"shard-merge ids S={s}"
-            assert np.array_equal(scores, ref_scores), \
+            assert np.array_equal(ids, ref_pk[0]), f"shard-merge ids S={s}"
+            assert np.array_equal(scores, ref_pk[1]), \
                 f"shard-merge scores S={s}"
             em(f"search_build_sharded_s{s}", t_build * 1e6,
                f"items_per_s={n_items / t_build:.0f}"
                f"|sizes={sh.shard_sizes().tolist()}")
-            em(f"search_query_sharded_s{s}", t_q * 1e6 / n_queries,
-               f"qps={n_queries / t_q:.0f}|n_shards={s}|merge=exact|"
-               + _timing_split(sh, n_queries), latency=lat)
+            em(f"search_query_sharded_s{s}", t_q * 1e6 / nq_pk,
+               f"qps={nq_pk / t_q:.0f}|n_shards={s}|merge=exact|"
+               + _timing_split(sh, nq_pk), latency=lat)
         if "tcp" in transports:
             from repro.transport import (connect_sharded, shutdown_plane,
                                          spawn_workers)
-            handles = spawn_workers(cfg_s, s)
+            handles = spawn_workers(cfg_s, s, query_impl=query_impl)
             sh = None
             try:
-                sh = connect_sharded([h.address for h in handles], cfg_s)
+                sh = connect_sharded([h.address for h in handles], cfg_s,
+                                     query_impl=query_impl)
                 t0 = time.perf_counter()
                 sh.add(sigs)               # over the wire, ADD per shard
                 t_build = time.perf_counter() - t0
-                sh.query(qsigs, top_k=10)  # warm worker-side traces
+                par = sh.query_packed(qwords_par, top_k=10)
+                assert np.array_equal(par[0], ref_pk_par[0]) and \
+                    np.array_equal(par[1], ref_pk_par[1]), f"tcp-brute S={s}"
+                sh.query_packed(qwords, top_k=10)  # warm worker traces
                 before = obs_metrics.default().snapshot()
                 t_q, (ids, scores) = _timed_block(
-                    lambda: sh.query(qsigs, top_k=10), iters=5)
+                    lambda: sh.query_packed(qwords, top_k=10), iters=5)
                 lat = _stage_quantiles(before,
                                        obs_metrics.default().snapshot(),
                                        _query_stages(s))
                 # tcp answers must equal the single store bit-for-bit too
-                assert np.array_equal(ids, ref_ids), f"tcp-merge ids S={s}"
-                assert np.array_equal(scores, ref_scores), \
+                assert np.array_equal(ids, ref_pk[0]), f"tcp-merge ids S={s}"
+                assert np.array_equal(scores, ref_pk[1]), \
                     f"tcp-merge scores S={s}"
                 em(f"search_build_tcp_s{s}", t_build * 1e6,
                    f"items_per_s={n_items / t_build:.0f}"
                    f"|sizes={sh.shard_sizes().tolist()}")
-                em(f"search_query_tcp_s{s}", t_q * 1e6 / n_queries,
-                   f"qps={n_queries / t_q:.0f}|n_shards={s}|merge=exact|"
-                   + _timing_split(sh, n_queries), latency=lat)
+                em(f"search_query_tcp_s{s}", t_q * 1e6 / nq_pk,
+                   f"qps={nq_pk / t_q:.0f}|n_shards={s}|merge=exact|"
+                   + _timing_split(sh, nq_pk), latency=lat)
             finally:
                 if sh is not None:
                     shutdown_plane(sh, handles)
@@ -380,6 +463,11 @@ def main(argv=None) -> None:
     ap.add_argument("--pipeline-depth", default="1,2,4",
                     help="comma-separated ingest pipeline depths "
                          "(1 = serial baseline; empty disables the axis)")
+    ap.add_argument("--query-impl", default="auto",
+                    choices=["auto", "jnp", "pallas", "host"],
+                    help="query backend for the sharded/tcp rows (host = "
+                         "legacy fold + planner walk; every row is parity-"
+                         "checked against host either way)")
     ap.add_argument("--n-items", type=int, default=None)
     ap.add_argument("--n-queries", type=int, default=None)
     args = ap.parse_args(argv)
@@ -398,6 +486,7 @@ def main(argv=None) -> None:
         else (args.transport,)
     kw["pipeline_depths"] = tuple(
         int(d) for d in args.pipeline_depth.split(",") if d)
+    kw["query_impl"] = args.query_impl
     print("name,us_per_call,derived")
     run(**kw)
 

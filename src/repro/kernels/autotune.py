@@ -7,6 +7,12 @@ next power of two so one measurement serves a whole shape class.  Kinds:
 * ``dense_packed`` -> {block_b, block_d}   (kernels.cminhash_packed)
 * ``sparse_pallas``-> {block_b, block_j}   (kernels.cminhash_sparse, Pallas)
 * ``sparse_windows``-> {block_j}           (kernels.cminhash_sparse, jnp)
+* ``query_fold``   -> {block_q}            (kernels.query_fused, Pallas fold;
+                                            keyed B=queries, D=n_bands,
+                                            K=rows_per_band)
+* ``probe_pallas`` -> {block_e}            (kernels.lsh_probe, Pallas probe;
+                                            keyed B=meta entries, D=n_slots,
+                                            K=record width)
 
 Cache semantics (documented contract, see kernels/README.md):
 
@@ -14,9 +20,19 @@ Cache semantics (documented contract, see kernels/README.md):
   exists, else a shape-clamped heuristic default.  This is what the engine
   and dispatch layer call on every signing request — cheap and deterministic.
 * ``measure()`` times every valid candidate on synthetic data of the request
-  shape (median of ``iters`` after ``warmup``), stores the winner in the
+  shape (interleaved min-of-``iters`` rounds — shared-box noise hits all
+  candidates equally, see kernels/dispatch.py), stores the winner in the
   in-process cache, and appends it to the JSON file at
   ``$REPRO_AUTOTUNE_CACHE`` (if set) so later processes start warm.
+* Default sweeps (``candidates=None``) always include the clamped heuristic
+  default and re-duel the would-be winner against it head-to-head before
+  caching: a winner that cannot beat the default in the duel is REJECTED
+  (``autotune.guard_rejects`` counter) and the default is cached instead.
+  This guards against caching a noise artifact that would then make every
+  later ``recommend()`` slower than not tuning at all (seen in practice:
+  a cached ``block_j=128`` 1.6x slower than the un-tuned default).
+  Explicit ``candidates=`` sweeps are trusted verbatim — no default
+  injection, no guard — so callers can force a specific winner.
 * The JSON file is loaded lazily once per path and merged under the
   in-process entries; ``clear_cache()`` forgets both (the file is untouched).
 
@@ -38,13 +54,16 @@ from repro.obs import metrics as obs_metrics
 
 CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 
-KINDS = ("dense_int8", "dense_packed", "sparse_pallas", "sparse_windows")
+KINDS = ("dense_int8", "dense_packed", "sparse_pallas", "sparse_windows",
+         "query_fold", "probe_pallas")
 
 _DEFAULTS: dict[str, dict[str, int]] = {
     "dense_int8": {"block_b": 8, "block_d": 256},
     "dense_packed": {"block_b": 8, "block_d": 256},
     "sparse_pallas": {"block_b": 8, "block_j": 32},
     "sparse_windows": {"block_j": 64},
+    "query_fold": {"block_q": 128},
+    "probe_pallas": {"block_e": 128},
 }
 
 _CANDIDATES: dict[str, tuple[dict[str, int], ...]] = {
@@ -56,6 +75,8 @@ _CANDIDATES: dict[str, tuple[dict[str, int], ...]] = {
                            for bb in (4, 8, 16) for bj in (16, 32, 64)),
     "sparse_windows": tuple({"block_j": bj}
                             for bj in (16, 32, 64, 128, 256)),
+    "query_fold": tuple({"block_q": bq} for bq in (32, 64, 128, 256, 512)),
+    "probe_pallas": tuple({"block_e": be} for be in (32, 64, 128, 256, 512)),
 }
 
 _cache: dict[str, dict[str, int]] = {}
@@ -135,6 +156,12 @@ def _clamp(kind: str, blocks: dict[str, int], b: int, d: int,
         out["block_d"] = max(32, min(out["block_d"], _pow2(max(d, 32))))
     if "block_j" in out:
         out["block_j"] = max(1, out["block_j"])
+    if "block_q" in out:
+        # fold tiles the query batch (keyed as B)
+        out["block_q"] = max(1, min(out["block_q"], _pow2(b)))
+    if "block_e" in out:
+        # probe tiles the flat (Q * n_bands) meta entries (keyed as B)
+        out["block_e"] = max(1, min(out["block_e"], _pow2(b)))
     return out
 
 
@@ -160,6 +187,27 @@ def _make_runner(kind: str, b: int, d: int, k: int, nnz: int,
     from . import dispatch
 
     rng = np.random.default_rng(seed)
+    interpret = jax.default_backend() != "tpu"
+
+    if kind == "query_fold":
+        # b=queries, d=n_bands, k=rows_per_band (uint32 words per band)
+        from . import query_fused
+        lo = jnp.asarray(rng.integers(0, 2**32, (b, d, max(k, 1)),
+                                      dtype=np.uint32))
+        hi = jnp.zeros_like(lo)
+        return lambda blocks: (lambda: query_fused.fold_planes_pallas(
+            hi, lo, interpret=interpret, **blocks))
+    if kind == "probe_pallas":
+        # b=meta entries, d=n_slots, k=record width W
+        from . import lsh_probe
+        n_slots = max(1, d)
+        records = jnp.full((n_slots, 2 + max(k, 1)), -1, jnp.int32)
+        hashes = rng.integers(0, 2**63, (max(b, 1), 1), dtype=np.uint64)
+        meta = jnp.asarray(lsh_probe.probe_operands(hashes, n_slots))
+        return lambda blocks: (lambda: lsh_probe.lsh_probe_pallas(
+            records, meta, n_slots=n_slots, max_probes=8,
+            interpret=interpret, **blocks))
+
     _, pi = make_two_permutations(jax.random.PRNGKey(seed), d)
     impl = {"dense_int8": "int8", "dense_packed": "packed",
             "sparse_pallas": "pallas", "sparse_windows": "windows"}[kind]
@@ -180,6 +228,52 @@ def _valid(kind: str, blocks: dict[str, int], b: int, d: int, k: int) -> bool:
     return not ("block_d" in blocks and blocks["block_d"] % 32)
 
 
+def _sweep(runner: Callable[[dict[str, int]], Any],
+           cands: list[dict[str, int]], warmup: int,
+           iters: int) -> tuple[float, dict[str, int]] | None:
+    """Time candidates INTERLEAVED (round-robin min-of-``iters``): on a
+    shared box, drift and noise bursts then hit every candidate equally
+    instead of penalizing whichever ran during the burst — the same
+    convention bench_sign.py uses (see kernels/dispatch.py).  A candidate
+    that raises during warmup is dropped (invalid on this backend); one that
+    raises mid-round keeps its best earlier time.  Returns the fastest
+    ``(seconds, blocks)`` or None when nothing ran."""
+    import math
+
+    live: list[tuple[dict[str, int], Any, list[float]]] = []
+    for blocks in cands:
+        fn = runner(blocks)
+        try:
+            for _ in range(max(warmup, 1)):
+                jax.block_until_ready(fn())
+        except Exception:
+            continue                       # candidate invalid on this backend
+        live.append((blocks, fn, [math.inf]))
+    for _ in range(max(iters, 1)):
+        for blocks, fn, t in live:
+            try:
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                t[0] = min(t[0], time.perf_counter() - t0)
+            except Exception:
+                pass
+    live = [(blocks, fn, t) for blocks, fn, t in live if t[0] < math.inf]
+    if not live:
+        return None
+    blocks, _, t = min(live, key=lambda e: e[2][0])
+    return (t[0], blocks)
+
+
+def _duel(runner: Callable[[dict[str, int]], Any],
+          winner: dict[str, int], default: dict[str, int], warmup: int,
+          iters: int) -> bool:
+    """Head-to-head re-measurement of the sweep winner against the heuristic
+    default.  True iff the winner is strictly faster — i.e. the sweep result
+    survives confirmation and deserves the cache slot."""
+    best = _sweep(runner, [winner, default], warmup, iters)
+    return best is not None and best[1] == winner
+
+
 def measure(kind: str, b: int, d: int, k: int, *, backend: str | None = None,
             nnz: int = 0, warmup: int = 1, iters: int = 3,
             candidates: tuple[dict[str, int], ...] | None = None,
@@ -188,6 +282,13 @@ def measure(kind: str, b: int, d: int, k: int, *, backend: str | None = None,
     cache the winner — but return a cached winner immediately when one exists
     (``force=True`` re-sweeps), so engines with ``autotune_measure`` pay for
     the sweep once per shape class, not once per batch.
+
+    Default sweeps (``candidates=None``) include the clamped heuristic
+    default in the field and re-duel the winner against it before caching;
+    a winner that loses the duel is rejected (``autotune.guard_rejects``)
+    and the default is cached instead — a cached "winner" must never make
+    ``recommend()`` slower than not tuning at all.  Explicit ``candidates=``
+    bypass both the injection and the guard (the caller pins the field).
 
     ``nnz`` sizes the synthetic sparse inputs (and enters the sparse cache
     key); 0 means a 5% density default."""
@@ -200,28 +301,26 @@ def measure(kind: str, b: int, d: int, k: int, *, backend: str | None = None,
     obs_metrics.default().counter("autotune.sweeps").inc()
     sweep_t0 = time.perf_counter()
     runner = _make_runner(kind, b, d, k, nnz, seed)
-    best: tuple[float, dict[str, int]] | None = None
+    guard = candidates is None
+    default = _clamp(kind, _DEFAULTS[kind], b, d, k)
+    field: list[dict[str, int]] = []
     seen: set[tuple] = set()     # clamping can collapse candidates; time once
-    for cand in (candidates or _CANDIDATES[kind]):
+    pool = _CANDIDATES[kind] + (default,) if guard else candidates
+    for cand in pool:
         blocks = _clamp(kind, cand, b, d, k)
         key = tuple(sorted(blocks.items()))
         if key in seen or not _valid(kind, blocks, b, d, k):
             continue
         seen.add(key)
-        fn = runner(blocks)
-        try:
-            for _ in range(warmup):
-                jax.block_until_ready(fn())
-            times = []
-            for _ in range(iters):
-                t0 = time.perf_counter()
-                jax.block_until_ready(fn())
-                times.append(time.perf_counter() - t0)
-            elapsed = sorted(times)[len(times) // 2]
-        except Exception:
-            continue                       # candidate invalid on this backend
-        if best is None or elapsed < best[0]:
-            best = (elapsed, blocks)
+        field.append(blocks)
+    best = _sweep(runner, field, warmup, iters)
+    if best is not None:
+        blocks = best[1]
+        if guard and blocks != default and not _duel(
+                runner, blocks, default, warmup, max(iters, 3)):
+            obs_metrics.default().counter("autotune.guard_rejects").inc()
+            blocks = default
+        best = (best[0], blocks)
     obs_metrics.default().histogram("autotune.sweep").observe(
         time.perf_counter() - sweep_t0)
     if best is None:

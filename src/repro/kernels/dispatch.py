@@ -43,6 +43,15 @@ bucket-probe leg of a query batch, run on device over the table's resident
 fused records (``kernels.lsh_probe``: Pallas kernel + compiled-jnp twin).
 ``impl="auto"`` picks the Pallas kernel on TPU and defers to the numpy host
 loop otherwise (the CPU-tuned early-terminating walk in store/table.py).
+
+``query_fused`` is the device-resident query pipeline: uint32-lane band-hash
+fold (``kernels.query_fused``, two planes, bit-identical to the host uint64
+fold) -> probe meta -> ``lsh_probe`` -> packed-code top-k scoring, one
+dispatch entry with no host round trip between stages.  ``impl="auto"``
+picks the Pallas legs on TPU and the compiled-jnp twins elsewhere; the
+legacy host fold + planner walk stays available as the reference oracle
+(``impl="host"`` is the *store's* decision — this front door serves device
+impls only, mirroring ``lsh_probe``).
 """
 
 from __future__ import annotations
@@ -56,6 +65,7 @@ from ..core import cminhash
 from ..core.permutations import apply_permutation_dense, apply_permutation_sparse
 from ..obs import metrics as obs_metrics
 from . import autotune, lsh_probe as _lsh_probe, packfmt, ref
+from . import query_fused as _query_fused
 from .cminhash_kernel import cminhash_pallas
 from .cminhash_packed import cminhash_packed_pallas
 from .cminhash_sparse import cminhash_sparse_pallas, cminhash_sparse_windows
@@ -69,6 +79,7 @@ PACKED_MIN_D = 16384
 DENSE_IMPLS = ("auto", "int8", "packed", "ref")
 SPARSE_IMPLS = ("auto", "pallas", "windows", "gather")
 PROBE_IMPLS = ("auto", "numpy", "jnp", "pallas")
+QUERY_IMPLS = ("auto", "jnp", "pallas", "host")
 
 
 def _backend() -> str:
@@ -228,3 +239,121 @@ def lsh_probe(records_dev: Array, hashes: np.ndarray, *, n_slots: int,
                                           block_e=block_e,
                                           interpret=_interpret())
     return np.asarray(out).reshape(q, nb * w)
+
+
+# -- fused device-resident query path -----------------------------------------
+
+def select_query_impl(backend: str | None = None) -> str:
+    """Resolve impl="auto" for a fused query request: the Pallas legs on a
+    real accelerator, the compiled-jnp twins elsewhere.  Never "host" — the
+    store decides when the legacy host fold + planner walk must run (non-pow2
+    slot counts, no stored signatures, empty buffer)."""
+    backend = backend or _backend()
+    return "pallas" if backend == "tpu" else "jnp"
+
+
+def _fold_planes(rows_hi: Array, rows_lo: Array, *, impl: str,
+                 block_q: int | None,
+                 autotune_measure: bool) -> tuple[Array, Array]:
+    if impl == "pallas":
+        q, nb, r = rows_lo.shape
+        blocks = _resolve_blocks("query_fold", q, nb, r,
+                                 {"block_q": block_q}, autotune_measure)
+        return _query_fused.fold_planes_pallas(rows_hi, rows_lo,
+                                               interpret=_interpret(),
+                                               **blocks)
+    return _query_fused.fold_planes_jnp(rows_hi, rows_lo)
+
+
+def fold_hashes(qwords: Array, *, n_bands: int, impl: str = "auto",
+                block_q: int | None = None,
+                autotune_measure: bool = False) -> np.ndarray:
+    """(Q, W) packed uint32 query words -> (Q, n_bands) uint64 band hashes
+    via the device uint32-lane fold.  Bit-identical to
+    ``core.lsh.band_hashes_packed`` — this is the coordinator's fold leg when
+    hashes must come back to host anyway (broadcast to shards)."""
+    if impl not in QUERY_IMPLS:
+        raise ValueError(f"impl must be one of {QUERY_IMPLS} (got {impl!r})")
+    if impl == "auto":
+        impl = select_query_impl()
+    if impl == "host":
+        raise ValueError("impl='host' is core.lsh.band_hashes_packed; call "
+                         "it directly, not the dispatch layer")
+    obs_metrics.default().counter(f"kernel.fold.{impl}").inc()
+    rows_hi, rows_lo = _query_fused.words_to_planes(jnp.asarray(qwords),
+                                                    n_bands)
+    hi, lo = _fold_planes(rows_hi, rows_lo, impl=impl, block_q=block_q,
+                          autotune_measure=autotune_measure)
+    return _query_fused.planes_to_hashes(np.asarray(hi), np.asarray(lo))
+
+
+def query_fused(records_dev: Array, words_dev: Array, qwords: Array, *,
+                n_bands: int, n_slots: int, max_probes: int, k: int, b: int,
+                top_k: int, impl: str = "auto",
+                hashes: np.ndarray | None = None,
+                spill_lookup=None, block_q: int | None = None,
+                block_e: int | None = None, autotune_measure: bool = False,
+                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Fused fold -> probe -> score over resident store state: (Q, W) packed
+    query words -> ``(ids, scores, has_candidates)`` partial-top-k triple,
+    bit-identical to the host-fold planner partial.
+
+    * ``records_dev`` — the table's uploaded fused records
+      (``BandedLSHTable.device_records``).
+    * ``words_dev``   — the buffer's uploaded packed signature words
+      (``PackedSignatureBuffer.device_words``), scored against on device.
+    * ``hashes=None`` (single-store / shard-local fold): the uint32-lane
+      fold runs on device and probe meta is built there too — requires
+      power-of-two ``n_slots`` (callers gate; the store falls back to host).
+    * ``hashes=`` host uint64 band hashes (shard workers: the coordinator
+      folds ONCE and broadcasts): the fold is skipped and the probe meta
+      takes the host uint64 leg (any ``n_slots``).
+    * ``spill_lookup`` — optional ``hashes -> (Q, M) int64 rows`` host
+      callable for the table's rare spilled keys; invoked with the (possibly
+      reconstructed) host hashes and concatenated before scoring.
+
+    Returns host arrays: ids (Q, top_k) int64 (-1 padded), scores (Q, top_k)
+    float32 (NEG_INF padded), has_candidates (Q,) bool.
+    """
+    if impl not in QUERY_IMPLS:
+        raise ValueError(f"impl must be one of {QUERY_IMPLS} (got {impl!r})")
+    if impl == "auto":
+        impl = select_query_impl()
+    if impl == "host":
+        raise ValueError("impl='host' is the store's legacy fold + planner "
+                         "walk; call the store, not the dispatch layer")
+    obs_metrics.default().counter(f"kernel.query_fused.{impl}").inc()
+    qwords = jnp.asarray(qwords)
+    q = qwords.shape[0]
+    w = records_dev.shape[1] - 2
+
+    if hashes is None:
+        rows_hi, rows_lo = _query_fused.words_to_planes(qwords, n_bands)
+        hi, lo = _fold_planes(rows_hi, rows_lo, impl=impl, block_q=block_q,
+                              autotune_measure=autotune_measure)
+        meta = _query_fused.meta_from_planes(hi, lo, n_slots=n_slots)
+        if spill_lookup is not None:   # rare host leg needs uint64 hashes
+            hashes = _query_fused.planes_to_hashes(np.asarray(hi),
+                                                   np.asarray(lo))
+    else:
+        meta = jnp.asarray(_lsh_probe.probe_operands(hashes, n_slots))
+
+    if impl == "pallas":
+        blocks = _resolve_blocks("probe_pallas", meta.shape[0], n_slots, w,
+                                 {"block_e": block_e}, autotune_measure)
+        cand = _lsh_probe.lsh_probe_pallas(records_dev, meta, n_slots=n_slots,
+                                           max_probes=max_probes,
+                                           interpret=_interpret(), **blocks)
+    else:
+        cand = _lsh_probe.lsh_probe_jnp(records_dev, meta, n_slots=n_slots,
+                                        max_probes=max_probes)
+    cand = cand.reshape(q, n_bands * w)
+    if spill_lookup is not None:
+        spill = np.asarray(spill_lookup(hashes))
+        if spill.size:
+            cand = jnp.concatenate(
+                [cand, jnp.asarray(spill.astype(np.int32))], axis=1)
+    ids, scores, has = _query_fused.score_topk(cand, words_dev, qwords,
+                                               k=k, b=b, top_k=top_k)
+    return (np.asarray(ids).astype(np.int64), np.asarray(scores),
+            np.asarray(has))

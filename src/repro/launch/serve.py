@@ -70,7 +70,8 @@ def serve_search(args) -> None:
     with dumper, SimilaritySearchService(SearchConfig(
             d=1 << 14, k=256, n_bands=64, rows_per_band=4,
             n_shards=args.shards, partition=args.partition,
-            probe_impl=args.probe, transport=args.transport)) as svc:
+            probe_impl=args.probe, query_impl=args.query_impl,
+            transport=args.transport)) as svc:
         # pipelined fused ingest: batch N+1 signs while batch N scatters
         # (--pipeline-depth 1 = serial; answers identical at any depth)
         bs = max(1, min(args.ingest_batch, len(idx)))
@@ -91,7 +92,7 @@ def serve_search(args) -> None:
         sizes = svc.store.shard_sizes().tolist()
         print(f"[serve] search over {svc.size} docs "
               f"({args.shards} shard(s) {sizes}, probe={args.probe}, "
-              f"transport={args.transport}): "
+              f"query={args.query_impl}, transport={args.transport}): "
               f"{args.batch} queries in {dt * 1e3:.1f} ms; top-1 self-hit "
               f"{(ids[:, 0] == np.arange(args.batch)).mean() * 100:.0f}%")
         # one merged plane snapshot (coordinator + tcp workers): the
@@ -131,6 +132,11 @@ def main() -> None:
                     default="round_robin")
     ap.add_argument("--probe", choices=["auto", "numpy", "jnp", "pallas"],
                     default="auto", help="LSH bucket-probe backend")
+    ap.add_argument("--query-impl",
+                    choices=["auto", "jnp", "pallas", "host"],
+                    default="auto",
+                    help="fused device query pipeline backend (host = "
+                         "legacy fold + planner walk, the reference oracle)")
     ap.add_argument("--transport", choices=["inproc", "tcp"],
                     default="inproc",
                     help="shard backend: in-process loop or spawned tcp "

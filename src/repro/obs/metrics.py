@@ -184,6 +184,19 @@ class Histogram:
 
 
 def _quantile_from_counts(counts, total: int, q: float) -> float:
+    """Quantile with WITHIN-bucket interpolation.
+
+    Bucket-edge-only reporting made p50==p90==p99 whenever one log bucket
+    held most of the mass (every small-N latency stage) — three identical
+    numbers that look like a measurement but carry one bucket's worth of
+    information.  Instead, locate the bucket holding rank ``q * total`` and
+    place the quantile at the fractional rank within it: geometrically for
+    log buckets (constant relative width), linearly for the underflow bucket
+    (starts at 0), and at the lower edge for the unbounded overflow bucket.
+    Still bucket-limited (~19% relative), but distinct quantiles now move
+    apart whenever their ranks differ; pair with the sample count (callers
+    report ``n``) so small-N percentiles read as what they are.
+    """
     if total <= 0:
         return 0.0
     if not 0.0 <= q <= 1.0:
@@ -195,9 +208,15 @@ def _quantile_from_counts(counts, total: int, q: float) -> float:
     else:
         items = [(i, c) for i, c in enumerate(counts) if c]
     for i, c in items:
+        if seen + c >= want:
+            f = min(max((want - seen) / c, 0.0), 1.0)
+            lo, hi = bucket_bounds(i)
+            if i >= N_BUCKETS - 1:
+                return lo                     # overflow: unbounded above
+            if lo <= 0.0:
+                return hi * f                 # underflow: linear from 0
+            return lo * (hi / lo) ** f        # log bucket: geometric
         seen += c
-        if seen >= want:
-            return _bucket_mid(i)
     return _bucket_mid(items[-1][0]) if items else 0.0
 
 
@@ -388,7 +407,8 @@ def snapshot_delta(before: dict, after: dict) -> dict:
 
 
 def hist_quantile(h: dict, q: float) -> float:
-    """pXX from a snapshot histogram (bucket-resolution, ~19% rel. err)."""
+    """pXX from a snapshot histogram (within-bucket interpolated; still
+    bucket-limited to ~19% rel. err — report ``h["count"]`` alongside)."""
     return _quantile_from_counts(h.get("buckets", {}), h.get("count", 0), q)
 
 

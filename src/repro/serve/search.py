@@ -62,6 +62,7 @@ class SearchConfig:
     n_shards: int = 1           # index partitions (1 = single-store path)
     partition: str = "round_robin"   # or "hash" (see store/sharded.py)
     probe_impl: str = "auto"    # LSH probe backend: numpy | jnp | pallas
+    query_impl: str = "auto"    # fused query backend: jnp | pallas | host
     transport: str = "inproc"   # shard backend: inproc | tcp (worker procs)
 
 
@@ -83,11 +84,12 @@ class SimilaritySearchService:
         if cfg.transport == "tcp":
             from repro.transport import connect_sharded, spawn_workers
             self._workers = spawn_workers(store_cfg, cfg.n_shards,
-                                          probe_impl=cfg.probe_impl)
+                                          probe_impl=cfg.probe_impl,
+                                          query_impl=cfg.query_impl)
             try:
                 self.store = connect_sharded(
                     [h.address for h in self._workers], store_cfg,
-                    partition=cfg.partition)
+                    partition=cfg.partition, query_impl=cfg.query_impl)
             except BaseException:
                 for h in self._workers:    # no orphan worker processes
                     h.terminate()
@@ -95,7 +97,7 @@ class SimilaritySearchService:
         else:
             self.store = ShardedSketchStore(
                 store_cfg, n_shards=cfg.n_shards, partition=cfg.partition,
-                probe_impl=cfg.probe_impl)
+                probe_impl=cfg.probe_impl, query_impl=cfg.query_impl)
         self._tracer = obs_trace.default()
         reg = obs_metrics.default()
         self._h_query = reg.histogram("service.query")
@@ -155,7 +157,12 @@ class SimilaritySearchService:
             root.tag("n", len(data)).tag("top_k", top_k)
             t0 = time.perf_counter()
             with self._tracer.span("query.sign"):
-                qsigned = np.asarray(self._sign(data, layout))
+                qsigned = self._sign(data, layout)
+                if not (self.packed_ingest and self.cfg.query_impl != "host"):
+                    # legacy paths want the host batch here; the fused path
+                    # keeps it device-resident into the store's fold and
+                    # syncs only for the shard broadcast
+                    qsigned = np.asarray(qsigned)
             self._h_sign.observe(time.perf_counter() - t0)
             out = self._query(qsigned, top_k)
         self._h_query.observe(time.perf_counter() - t_wall)

@@ -61,6 +61,10 @@ class PackedSignatureBuffer:
         cap = max(_MIN_CAPACITY, cfg.capacity)
         self._words = np.zeros((cfg.n_words, cap), np.uint32)
         self._size = 0
+        # mutation counter gating the resident device copy (device_words);
+        # same pattern as BandedLSHTable.device_records
+        self._version = 0
+        self._device: tuple[int, jnp.ndarray] | None = None
 
     # -- sizing ------------------------------------------------------------
     @property
@@ -91,6 +95,7 @@ class PackedSignatureBuffer:
         self._words[:, self._size: self._size + b] = packed.T
         ids = np.arange(self._size, self._size + b, dtype=np.int64)
         self._size += b
+        self._version += 1
         return ids
 
     def append_packed(self, words) -> np.ndarray:
@@ -108,6 +113,7 @@ class PackedSignatureBuffer:
         self._words[:, self._size: self._size + b] = words.T
         ids = np.arange(self._size, self._size + b, dtype=np.int64)
         self._size += b
+        self._version += 1
         return ids
 
     # -- reads -------------------------------------------------------------
@@ -119,6 +125,14 @@ class PackedSignatureBuffer:
     def all_packed(self) -> np.ndarray:
         """(size, W) packed rows for every stored item."""
         return np.ascontiguousarray(self._words[:, : self._size].T)
+
+    def device_words(self) -> jnp.ndarray:
+        """(size, W) packed rows resident on device, re-uploaded only after
+        a mutation (the fused query path scores every query batch against
+        this one cached copy instead of gathering + staging per call)."""
+        if self._device is None or self._device[0] != self._version:
+            self._device = (self._version, jnp.asarray(self.all_packed()))
+        return self._device[1]
 
     def codes(self, ids) -> jnp.ndarray:
         """(C,) ids -> (C, K) int32 unpacked b-bit codes."""
@@ -136,6 +150,7 @@ class PackedSignatureBuffer:
         buf._grow_to(n)
         buf._words[:, :n] = rows.T
         buf._size = n
+        buf._version += 1
         return buf
 
     def save(self, path: str) -> None:

@@ -67,6 +67,16 @@ class TopKPartial:
     scores: np.ndarray            # (Q, top_k) float32, NEG_INF padded
     has_candidates: np.ndarray    # (Q,) bool
 
+    @classmethod
+    def from_device(cls, ids, scores, has) -> "TopKPartial":
+        """Partial from the fused device query path's host-transferred
+        triple (``kernels.dispatch.query_fused``) — same layout contract as
+        ``partial_topk_packed``, normalized to the planner's dtypes and made
+        writable (``topk_packed``'s brute-fallback leg assigns into rows)."""
+        return cls(np.array(ids, np.int64),
+                   np.array(scores, np.float32),
+                   np.array(has, bool))
+
 
 def finalize_topk(part: TopKPartial) -> tuple[np.ndarray, np.ndarray]:
     """Partial -> the public (ids [-1 pad], scores [0.0 pad]) contract."""

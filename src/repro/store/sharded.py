@@ -137,13 +137,18 @@ class InProcessShard:
 
     def __init__(self, cfg: StoreConfig | None = None, *,
                  probe_impl: str | None = None,
+                 query_impl: str | None = None,
                  store: SketchStore | None = None):
         if store is None:
             if cfg is None:
                 raise ValueError("InProcessShard needs cfg or store")
-            store = SketchStore(cfg, probe_impl=probe_impl or "auto")
-        elif probe_impl is not None:     # never clobber a configured store
-            store.probe_impl = probe_impl
+            store = SketchStore(cfg, probe_impl=probe_impl or "auto",
+                                query_impl=query_impl or "auto")
+        else:                            # never clobber a configured store
+            if probe_impl is not None:
+                store.probe_impl = probe_impl
+            if query_impl is not None:
+                store.query_impl = query_impl
         self.store = store
 
     def _add(self, fn, batch) -> int:
@@ -171,24 +176,27 @@ class InProcessShard:
 
     def start_query(self, hashes: np.ndarray, qwords: np.ndarray,
                     top_k: int, mode: str) -> _Lazy:
-        def run():
-            cands = self.store.candidate_rows_hashed(hashes, mode=mode,
-                                                     spill_cap=top_k)
-            return self.store.planner.partial_topk_packed(qwords, cands,
-                                                          top_k)
-        return _Lazy(run)
+        # the store routes to the fused device pipeline or the legacy host
+        # walk per its query_impl knob — bit-identical either way
+        return _Lazy(lambda: self.store.partial_topk_packed_hashed(
+            hashes, qwords, top_k, mode=mode))
 
     def start_brute(self, qwords: np.ndarray, top_k: int) -> _Lazy:
         return _Lazy(lambda: self.store.planner.brute_partial_packed(
             qwords, top_k))
 
     def stats(self) -> dict:
+        from repro.kernels.dispatch import select_probe_impl, \
+            select_query_impl
         impl = self.store.probe_impl
         if impl == "auto":                   # report what auto resolves to
-            from repro.kernels.dispatch import select_probe_impl
             impl = select_probe_impl()
+        qimpl = self.store.query_impl
+        if qimpl == "auto":
+            qimpl = select_query_impl()
         return {"size": self.store.size, "n_spilled": self.store.n_spilled,
-                "n_rebuilds": self.store.n_rebuilds, "probe_impl": impl}
+                "n_rebuilds": self.store.n_rebuilds, "probe_impl": impl,
+                "query_impl": qimpl}
 
     def save(self, path: str) -> None:
         self.store.save(path)
@@ -210,7 +218,7 @@ class ShardedSketchStore:
 
     def __init__(self, cfg: StoreConfig, n_shards: int = 1, *,
                  partition: str = "round_robin", probe_impl: str = "auto",
-                 backends: list | None = None):
+                 query_impl: str = "auto", backends: list | None = None):
         if backends is not None:
             if not backends:
                 raise ValueError("backends must be non-empty")
@@ -223,8 +231,12 @@ class ShardedSketchStore:
         self.cfg = cfg
         self.n_shards = n_shards
         self.partition = partition
+        # fused-query knob: shards apply it to their probe+score legs; the
+        # coordinator applies it to its one broadcast fold (remote backends
+        # got their own copy at spawn time — see transport.server)
+        self.query_impl = query_impl
         self.shards = backends if backends is not None else [
-            InProcessShard(cfg, probe_impl=probe_impl)
+            InProcessShard(cfg, probe_impl=probe_impl, query_impl=query_impl)
             for _ in range(n_shards)]
         # local->global id map per shard (amortized-doubling append buffer)
         self._gid_buf = [np.zeros(8, np.int64) for _ in range(n_shards)]
@@ -238,6 +250,7 @@ class ShardedSketchStore:
         # registry handles bound once; per-shard partial-latency histograms
         # are the skew evidence load-aware rebalancing will consume
         reg = obs_metrics.default()
+        self._h_fold = reg.histogram("query.fold")
         self._h_broadcast = reg.histogram("query.broadcast")
         self._h_partial = reg.histogram("query.partial")
         self._h_merge = reg.histogram("query.merge")
@@ -413,11 +426,16 @@ class ShardedSketchStore:
         return parts
 
     def _merged_query(self, hashes: np.ndarray, qwords: np.ndarray,
-                      top_k: int, mode: str) -> tuple[np.ndarray, np.ndarray]:
+                      top_k: int, mode: str, fold_s: float = 0.0,
+                      ) -> tuple[np.ndarray, np.ndarray]:
         """The shared scoring core: per-shard candidate partials -> merge ->
-        global brute-force leg for rows with no candidates anywhere."""
+        global brute-force leg for rows with no candidates anywhere.
+        ``fold_s`` is the caller's already-spent band-hash fold time, folded
+        into the timing split so every query stage is accounted for."""
         wall_t0 = time.perf_counter()
-        tally = {"broadcast_s": 0.0, "partial_s": 0.0, "merge_s": 0.0}
+        tally = {"fold_s": fold_s, "broadcast_s": 0.0, "partial_s": 0.0,
+                 "merge_s": 0.0}
+        self._h_fold.observe(fold_s)
         parts = self._fanout(
             lambda sh: sh.start_query(hashes, qwords, top_k, mode), tally)
         has_any = np.zeros(len(qwords), bool)
@@ -457,23 +475,46 @@ class ShardedSketchStore:
         # store caller still gets one stitched trace); under the service's
         # "query" span it just nests
         with self._tracer.span("store.query"):
+            t0 = time.perf_counter()
             with self._tracer.span("query.fold"):
                 hashes = band_hashes(qsigs, self.cfg.n_bands,
                                      self.cfg.rows_per_band)
                 qwords = np.asarray(
                     ops.pack_codes(jnp.asarray(qsigs, jnp.int32), self.cfg.b))
-            return self._merged_query(hashes, qwords, top_k, "sig")
+            return self._merged_query(hashes, qwords, top_k, "sig",
+                                      fold_s=time.perf_counter() - t0)
 
     def query_packed(self, qwords: np.ndarray,
                      top_k: int = 10) -> tuple[np.ndarray, np.ndarray]:
-        """``query`` for already-packed (Q, W) uint32 query words."""
+        """``query`` for already-packed (Q, W) uint32 query words.
+
+        The coordinator folds band hashes ONCE for the whole plane; per the
+        ``query_impl`` knob that fold runs through the device uint32-lane
+        kernel (``dispatch.fold_hashes``, bit-identical) or the host uint64
+        loop.  A device-resident query batch (the fused serving path) is
+        folded as-is — the one host sync is the broadcast copy the wire
+        needs anyway."""
         self._check_queryable("query_packed()")
         check_packed_banding(self.cfg)
-        qwords = np.asarray(qwords, np.uint32)
         with self._tracer.span("store.query"):
+            t0 = time.perf_counter()
             with self._tracer.span("query.fold"):
-                hashes = band_hashes_packed(qwords, self.cfg.n_bands)
-            return self._merged_query(hashes, qwords, top_k, "packed")
+                hashes = self._fold_packed(qwords)
+            fold_s = time.perf_counter() - t0
+            qwords = np.asarray(qwords, np.uint32)
+            return self._merged_query(hashes, qwords, top_k, "packed",
+                                      fold_s=fold_s)
+
+    def _fold_packed(self, qwords) -> np.ndarray:
+        impl = self.query_impl
+        if impl == "auto":
+            from repro.kernels.dispatch import select_query_impl
+            impl = select_query_impl()
+        if impl != "host":
+            from repro.kernels.dispatch import fold_hashes
+            return fold_hashes(qwords, n_bands=self.cfg.n_bands, impl=impl)
+        return band_hashes_packed(np.asarray(qwords, np.uint32),
+                                  self.cfg.n_bands)
 
     def _check_queryable(self, op: str) -> None:
         self._check_consistent()
@@ -523,7 +564,8 @@ class ShardedSketchStore:
 
     @classmethod
     def load(cls, dirpath: str, *, backends: list | None = None,
-             probe_impl: str = "auto") -> "ShardedSketchStore":
+             probe_impl: str = "auto",
+             query_impl: str = "auto") -> "ShardedSketchStore":
         """Restore a plane snapshot.
 
         Default: every shard is loaded into an ``InProcessShard``.  With
@@ -541,12 +583,14 @@ class ShardedSketchStore:
         if backends is None:
             backends = [
                 InProcessShard(store=SketchStore.load(
-                    shard_snapshot_path(dirpath, i)), probe_impl=probe_impl)
+                    shard_snapshot_path(dirpath, i)), probe_impl=probe_impl,
+                    query_impl=query_impl)
                 for i in range(n_shards)]
         elif len(backends) != n_shards:
             raise ValueError(f"snapshot has {n_shards} shards, got "
                              f"{len(backends)} backends")
-        store = cls(cfg, n_shards, partition=partition, backends=backends)
+        store = cls(cfg, n_shards, partition=partition, backends=backends,
+                    query_impl=query_impl)
         for i, g in enumerate(gids):
             store._gid_buf[i] = grown(store._gid_buf[i], len(g))
             store._gid_buf[i][: len(g)] = g

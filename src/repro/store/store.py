@@ -103,12 +103,22 @@ def check_packed_banding(cfg: StoreConfig) -> None:
 
 
 class SketchStore:
-    def __init__(self, cfg: StoreConfig, *, probe_impl: str = "auto"):
+    def __init__(self, cfg: StoreConfig, *, probe_impl: str = "auto",
+                 query_impl: str = "auto"):
+        from repro.kernels import dispatch
+        if query_impl not in dispatch.QUERY_IMPLS:
+            raise ValueError(f"query_impl must be one of "
+                             f"{dispatch.QUERY_IMPLS} (got {query_impl!r})")
         self.cfg = cfg
         # probe backend for candidate generation (runtime knob, not
         # snapshotted): "auto" -> numpy host loop on CPU, device kernel on
         # TPU; see kernels/lsh_probe.py
         self.probe_impl = probe_impl
+        # fused-query backend (runtime knob, not snapshotted): "auto" ->
+        # device pipeline (Pallas on TPU, compiled jnp elsewhere), "host" ->
+        # the legacy host fold + planner walk (the reference oracle); see
+        # kernels/query_fused.py and _resolve_query_impl for the gates
+        self.query_impl = query_impl
         self.buffer = PackedSignatureBuffer(PackedConfig(
             k=cfg.k, b=cfg.b,
             capacity=cfg.capacity if cfg.store_signatures else 1))
@@ -320,18 +330,90 @@ class SketchStore:
         return self.candidate_rows_hashed(hashes, mode="packed",
                                           spill_cap=spill_cap)
 
-    def query_packed(self, qwords: np.ndarray,
+    # -- fused device query path -------------------------------------------
+    def _resolve_query_impl(self) -> str:
+        """Resolve the fused-query knob against store state.  The device
+        pipeline needs: power-of-two ``n_slots`` (its slot modulo is a lane
+        mask), stored signatures to score against, and a non-empty buffer
+        (the score kernel gathers rows).  Anything else -> "host", the
+        legacy fold + planner walk."""
+        impl = self.query_impl
+        if impl == "auto":
+            from repro.kernels.dispatch import select_query_impl
+            impl = select_query_impl()
+        if impl == "host":
+            return "host"
+        ns = self.table.n_slots
+        if (ns & (ns - 1)) or not self.cfg.store_signatures \
+                or not self.buffer.size:
+            return "host"
+        return impl
+
+    def _fused_partial(self, qwords, top_k: int, *, impl: str,
+                       hashes: np.ndarray | None):
+        """Run the fused device pipeline over resident store state and wrap
+        the result as a planner partial.  ``hashes=None`` folds on device
+        (single-store / shard-local); shard workers pass the coordinator's
+        broadcast hashes and skip the fold.  The table's rare spilled keys
+        stay a host leg, invoked only when the spill is non-empty."""
+        from repro.kernels import dispatch
+        from .planner import TopKPartial
+        spill = None
+        if self.table.n_spilled:
+            spill = lambda h: self.table.spilled_candidates(h, cap=top_k)
+        ids, scores, has = dispatch.query_fused(
+            self.table.device_records(), self.buffer.device_words(), qwords,
+            n_bands=self.cfg.n_bands, n_slots=self.table.n_slots,
+            max_probes=self.table.max_probes, k=self.cfg.k, b=self.cfg.b,
+            top_k=top_k, impl=impl, hashes=hashes, spill_lookup=spill)
+        return TopKPartial.from_device(ids, scores, has)
+
+    def partial_topk_packed_hashed(self, hashes: np.ndarray, qwords, top_k: int,
+                                   *, mode: str = "packed"):
+        """Per-shard candidate partial from pre-folded band hashes: device
+        probe + score when the query knob resolves to a device backend, the
+        legacy host walk otherwise.  The single rewiring point both shard
+        worker kinds call (``InProcessShard`` and the tcp worker)."""
+        impl = self._resolve_query_impl()
+        if impl == "host":
+            qwords = np.asarray(qwords, np.uint32)
+            return self.planner.partial_topk_packed(
+                qwords, self.candidate_rows_hashed(hashes, mode=mode,
+                                                   spill_cap=top_k), top_k)
+        self._band_keys(mode, write=False)
+        return self._fused_partial(qwords, top_k, impl=impl, hashes=hashes)
+
+    def query_packed(self, qwords,
                      top_k: int = 10) -> tuple[np.ndarray, np.ndarray]:
         """``query`` for already-packed (Q, W) uint32 query words — the
         serving twin of ``add_packed``; at b = 32 results are identical to
-        ``query`` on the raw signatures."""
+        ``query`` on the raw signatures.
+
+        When the query knob resolves to a device backend the whole pipeline
+        (uint32-lane fold -> probe -> score) runs fused on device
+        (``kernels.dispatch.query_fused``, bit-identical to the host path);
+        the brute-force fallback for rows with no candidates anywhere stays
+        a host leg either way (it is global in the sharded plane)."""
         if not self.cfg.store_signatures:
             raise RuntimeError("query_packed() needs stored signatures; this "
                                "store was built with store_signatures=False")
-        qwords = np.asarray(qwords, np.uint32)
-        return self.planner.topk_packed(
-            qwords, self.candidate_rows_packed(qwords, spill_cap=top_k),
-            top_k)
+        impl = self._resolve_query_impl()
+        if impl == "host":
+            qwords = np.asarray(qwords, np.uint32)
+            return self.planner.topk_packed(
+                qwords, self.candidate_rows_packed(qwords, spill_cap=top_k),
+                top_k)
+        from .planner import finalize_topk
+        self._check_packed_banding()
+        self._band_keys("packed", write=False)
+        part = self._fused_partial(qwords, top_k, impl=impl, hashes=None)
+        em = np.flatnonzero(~part.has_candidates)
+        if len(em):
+            qnp = np.asarray(qwords, np.uint32)
+            brute = self.planner.brute_partial_packed(qnp[em], top_k)
+            part.ids[em] = brute.ids
+            part.scores[em] = brute.scores
+        return finalize_topk(part)
 
     def candidate_pairs(self) -> np.ndarray:
         """(P, 2) int64 unique (i, j), i < j, sharing >= 1 band bucket."""

@@ -548,7 +548,7 @@ def shutdown_plane(store, handles, *, join_timeout: float = 10.0) -> bool:
 
 
 def connect_sharded(addresses, cfg=None, *, snapshot_dir: str | None = None,
-                    partition: str = "round_robin",
+                    partition: str = "round_robin", query_impl: str = "auto",
                     timeout: float = 30.0) -> ShardedSketchStore:
     """Build a tcp-backed ``ShardedSketchStore`` over worker ``addresses``.
 
@@ -556,6 +556,10 @@ def connect_sharded(addresses, cfg=None, *, snapshot_dir: str | None = None,
     boot: pass the ``ShardedSketchStore.save`` directory the workers were
     spawned from — coordinator state (cfg, partition, gid maps) is restored
     from its manifest and must describe ``len(addresses)`` shards.
+
+    ``query_impl`` steers only the COORDINATOR's one broadcast band-hash
+    fold; each worker's probe/score legs follow the knob it was spawned
+    with (``spawn_workers(query_impl=...)``).
     """
     conns: list[ShardConnection] = []
     try:
@@ -564,12 +568,14 @@ def connect_sharded(addresses, cfg=None, *, snapshot_dir: str | None = None,
         group = FanoutGroup(conns, timeout=timeout)
         backends = [RemoteShard(c, group) for c in conns]
         if snapshot_dir is not None:
-            store = ShardedSketchStore.load(snapshot_dir, backends=backends)
+            store = ShardedSketchStore.load(snapshot_dir, backends=backends,
+                                            query_impl=query_impl)
         elif cfg is None:
             raise ValueError("connect_sharded needs cfg or snapshot_dir")
         else:
             store = ShardedSketchStore(cfg, len(backends),
                                        partition=partition,
+                                       query_impl=query_impl,
                                        backends=backends)
         # the coordinator's gid maps and the workers' stores must describe
         # the same items — a coordinator connected without its snapshot (or

@@ -66,11 +66,11 @@ def _handle(store: SketchStore, msg: Message,
         return Message(MsgType.OK, {"n": n}), True
     if msg.type == MsgType.QUERY:
         hashes = wire.join_u64(f["hash_lo"], f["hash_hi"])
-        top_k = int(f["top_k"])
-        cands = store.candidate_rows_hashed(hashes, mode=f["mode"],
-                                            spill_cap=top_k)
-        part = store.planner.partial_topk_packed(
-            np.asarray(f["qwords"], np.uint32), cands, top_k)
+        # the store routes to the fused device pipeline or the legacy host
+        # walk per its query_impl knob — bit-identical either way
+        part = store.partial_topk_packed_hashed(
+            hashes, np.asarray(f["qwords"], np.uint32), int(f["top_k"]),
+            mode=f["mode"])
         return Message(MsgType.PARTIAL,
                        {"ids": part.ids, "scores": part.scores,
                         "has": part.has_candidates}), True
@@ -89,6 +89,7 @@ def _handle(store: SketchStore, msg: Message,
                                     "n_spilled": store.n_spilled,
                                     "n_rebuilds": store.n_rebuilds,
                                     "probe_impl": store.probe_impl,
+                                    "query_impl": store.query_impl,
                                     "pid": os.getpid(),
                                     "shard": int(shard),
                                     "obs": json.dumps(
@@ -171,18 +172,19 @@ def _serve_conn(store: SketchStore, conn: socket.socket,
 
 def run_worker(ready_conn, cfg: StoreConfig | None, snapshot: str | None,
                probe_impl: str, host: str, port: int,
-               shard: int = -1) -> None:
+               shard: int = -1, query_impl: str = "auto") -> None:
     """Worker entry point (spawn target — all arguments picklable).
 
     Boots a ``SketchStore`` (empty from ``cfg``, or from ``snapshot``),
     binds ``(host, port)`` (port 0 = ephemeral), reports the bound address
     through ``ready_conn``, and serves until SHUTDOWN.
 
-    ``probe_impl="auto"`` is resolved HERE, against this worker's own jax
-    backend — not the coordinator's — so a mixed CPU/accelerator fleet
-    serves one plane with each worker on its best probe path (Pallas on
-    its accelerator hosts, the numpy walk on CPU hosts).  The resolved
-    backend is reported in STATS (``probe_impl``).
+    ``probe_impl="auto"`` and ``query_impl="auto"`` are resolved HERE,
+    against this worker's own jax backend — not the coordinator's — so a
+    mixed CPU/accelerator fleet serves one plane with each worker on its
+    best path (Pallas on its accelerator hosts, compiled-jnp / the numpy
+    walk on CPU hosts).  The resolved backends are reported in STATS
+    (``probe_impl`` / ``query_impl``).
     """
     # the worker gets its own tracer labelled with its shard index, so a
     # stitched trace says which process each span ran in; sample rate stays
@@ -193,13 +195,18 @@ def run_worker(ready_conn, cfg: StoreConfig | None, snapshot: str | None,
     if probe_impl == "auto":
         from repro.kernels.dispatch import select_probe_impl
         probe_impl = select_probe_impl()
+    if query_impl == "auto":
+        from repro.kernels.dispatch import select_query_impl
+        query_impl = select_query_impl()
     if snapshot is not None:
         store = SketchStore.load(snapshot)
         store.probe_impl = probe_impl
+        store.query_impl = query_impl
     else:
         if cfg is None:
             raise ValueError("worker needs a StoreConfig or a snapshot")
-        store = SketchStore(cfg, probe_impl=probe_impl)
+        store = SketchStore(cfg, probe_impl=probe_impl,
+                            query_impl=query_impl)
     lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
     try:
         lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -245,7 +252,7 @@ class WorkerHandle:
 
 def spawn_workers(cfg: StoreConfig | None, n_shards: int, *,
                   snapshot_dir: str | None = None, probe_impl: str = "auto",
-                  host: str = "127.0.0.1",
+                  query_impl: str = "auto", host: str = "127.0.0.1",
                   start_timeout: float = 120.0) -> list[WorkerHandle]:
     """Spawn ``n_shards`` shard workers on localhost; returns their handles.
 
@@ -263,7 +270,7 @@ def spawn_workers(cfg: StoreConfig | None, n_shards: int, *,
             parent, child = ctx.Pipe(duplex=False)
             proc = ctx.Process(
                 target=run_worker,
-                args=(child, cfg, snap, probe_impl, host, 0, i),
+                args=(child, cfg, snap, probe_impl, host, 0, i, query_impl),
                 daemon=True, name=f"shard-worker-{i}")
             proc.start()
             child.close()

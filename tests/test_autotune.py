@@ -54,6 +54,67 @@ def test_measure_caches_winner():
     assert forced == {"block_j": 2}
 
 
+def test_measure_guard_rejects_slow_winner(monkeypatch):
+    """A default-sweep winner that cannot beat the heuristic default in the
+    confirmation duel must NOT be cached — the default is, and the rejection
+    is counted (regression: a cached noise artifact made every later
+    recommend() slower than not tuning at all)."""
+    from repro.obs import metrics as obs_metrics
+
+    default = {"block_j": 64}
+    sweeps = []
+
+    def fake_sweep(runner, cands, warmup, iters):
+        sweeps.append([dict(c) for c in cands])
+        if len(sweeps) == 1:       # full sweep: a non-default "winner"
+            return (1e-9, next(c for c in cands if c != default))
+        return (1e-9, default)     # duel: the default is actually faster
+
+    monkeypatch.setattr(autotune, "_sweep", fake_sweep)
+    reg = obs_metrics.default()
+    before = reg.counter("autotune.guard_rejects").value
+    best = autotune.measure("sparse_windows", 64, 256, 32,
+                            warmup=0, iters=1)
+    assert best == default
+    assert autotune.cached("sparse_windows", 64, 256, 32) == default
+    assert reg.counter("autotune.guard_rejects").value == before + 1
+    assert len(sweeps) == 2 and sorted(
+        map(str, sweeps[1])) == sorted(map(str, [sweeps[0][0], default]))
+    # the default rides in the sweep field even though _CANDIDATES lacks it
+    assert default in sweeps[0]
+
+
+def test_measure_guard_confirms_fast_winner(monkeypatch):
+    """A winner that survives the duel is cached as-is, no rejection."""
+    from repro.obs import metrics as obs_metrics
+
+    winner = {"block_j": 16}
+
+    def fake_sweep(runner, cands, warmup, iters):
+        return (1e-9, winner)
+
+    monkeypatch.setattr(autotune, "_sweep", fake_sweep)
+    reg = obs_metrics.default()
+    before = reg.counter("autotune.guard_rejects").value
+    assert autotune.measure("sparse_windows", 64, 512, 32,
+                            warmup=0, iters=1) == winner
+    assert autotune.cached("sparse_windows", 64, 512, 32) == winner
+    assert reg.counter("autotune.guard_rejects").value == before
+
+
+def test_measure_explicit_candidates_bypass_guard(monkeypatch):
+    """Explicit candidates= pins the field: no default injection, no duel —
+    the caller's winner is trusted verbatim even if slower than default."""
+    def boom(*a, **k):
+        raise AssertionError("guard duel must not run for explicit sweeps")
+
+    monkeypatch.setattr(autotune, "_duel", boom)
+    best = autotune.measure("sparse_windows", 64, 1024, 32,
+                            candidates=({"block_j": 2},), warmup=0, iters=1)
+    assert best == {"block_j": 2}
+    assert autotune.cached("sparse_windows", 64, 1024, 32) == {"block_j": 2}
+
+
 def test_cache_persists_to_json(tmp_path, monkeypatch):
     path = tmp_path / "tune.json"
     monkeypatch.setenv(autotune.CACHE_ENV, str(path))

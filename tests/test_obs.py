@@ -77,6 +77,28 @@ def test_merge_counters_gauges_and_quantiles():
     assert obs_metrics.hist_sum(h) == pytest.approx(0.107, rel=1e-6)
 
 
+def test_quantiles_interpolate_within_one_bucket():
+    """Regression: when one log bucket holds all the mass, p50/p90/p99 used
+    to collapse to the same bucket edge — three identical numbers carrying
+    one bucket of information.  Interpolation places them at their
+    fractional ranks, so they spread monotonically inside the bucket and
+    stay within its edges."""
+    h = obs_metrics.Histogram("h")
+    h.observe_n(0.0015, 100)                 # single-bucket mass
+    p50, p90, p99 = (h.quantile(q) for q in (0.5, 0.9, 0.99))
+    assert p50 < p90 < p99                   # distinct, monotone
+    for p in (p50, p90, p99):                # within ~one bucket of truth
+        assert p == pytest.approx(0.0015, rel=0.3)
+    # snapshot-form quantiles agree with the live object
+    snap = h.to_snapshot()
+    assert obs_metrics.hist_quantile(snap, 0.9) == pytest.approx(p90)
+    # underflow bucket interpolates linearly from 0; q=0 sits at its floor
+    lo = obs_metrics.Histogram("lo")
+    lo.observe_n(0.0, 10)
+    assert 0.0 <= lo.quantile(0.5) <= lo.quantile(0.99)
+    assert h.quantile(0.0) <= p50
+
+
 def test_snapshot_delta_scopes_a_window():
     reg = obs_metrics.Registry()
     reg.counter("c").inc(5)

@@ -1,0 +1,239 @@
+"""Fused device query path: uint32-lane fold parity vs the host uint64 fold,
+probe-meta parity, device top-k scoring parity, and end-to-end store/sharded
+bit-identity against the legacy host-fold reference oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lsh import band_hashes, band_hashes_packed
+from repro.kernels import dispatch, ops, query_fused as qf
+from repro.kernels.lsh_probe import probe_operands
+from repro.store.store import SketchStore, StoreConfig
+from repro.store.sharded import ShardedSketchStore
+
+
+def _fold_words(words, n_bands, *, pallas, block_q=128):
+    hi, lo = qf.words_to_planes(jnp.asarray(words), n_bands)
+    if pallas:
+        fh, fl = qf.fold_planes_pallas(hi, lo, block_q=block_q,
+                                       interpret=True)
+    else:
+        fh, fl = qf.fold_planes_jnp(hi, lo)
+    return qf.planes_to_hashes(np.asarray(fh), np.asarray(fl))
+
+
+# -- fold parity (the uint32-lane emulation) ---------------------------------
+
+@pytest.mark.parametrize("pallas", [False, True])
+def test_fold_parity_words_geometry_sweep(pallas):
+    """Property-style sweep: random packed words over many band geometries
+    must fold bit-identically to the host uint64 polynomial fold."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        nb = int(rng.integers(1, 33))
+        wpb = int(rng.integers(1, 9))          # words per band
+        b = int(rng.integers(1, 9))
+        words = rng.integers(0, 2**32, (b, nb * wpb), dtype=np.uint32)
+        ref = band_hashes_packed(words, nb)
+        got = _fold_words(words, nb, pallas=pallas,
+                          block_q=int(rng.choice([1, 2, 4, 128])))
+        assert (got == ref).all(), (nb, wpb, b)
+
+
+@pytest.mark.parametrize("pallas", [False, True])
+def test_fold_parity_signatures_negative_and_odd_rows(pallas):
+    """Raw int32 signatures: negative codes sign-extend into the hi plane,
+    and rows_per_band need not divide into words (the non-divisible
+    corner packed banding rejects but the sig path serves)."""
+    rng = np.random.default_rng(1)
+    for nb, r in [(8, 3), (5, 7), (1, 13), (16, 1)]:
+        sig = rng.integers(-2**31, 2**31, (6, nb * r), dtype=np.int32)
+        ref = band_hashes(sig, nb, r)
+        hi, lo = qf.sig_to_planes(jnp.asarray(sig), nb, r)
+        if pallas:
+            fh, fl = qf.fold_planes_pallas(hi, lo, block_q=4, interpret=True)
+        else:
+            fh, fl = qf.fold_planes_jnp(hi, lo)
+        got = qf.planes_to_hashes(np.asarray(fh), np.asarray(fl))
+        assert (got == ref).all(), (nb, r)
+
+
+def test_fold_parity_edge_values():
+    """All-zeros, all-ones, and single-bit rows hit the carry corners."""
+    for words in (np.zeros((2, 8), np.uint32),
+                  np.full((2, 8), 0xFFFFFFFF, np.uint32),
+                  np.eye(8, dtype=np.uint32)):
+        ref = band_hashes_packed(words, 4)
+        assert (_fold_words(words, 4, pallas=False) == ref).all()
+        assert (_fold_words(words, 4, pallas=True) == ref).all()
+
+
+def test_words_to_planes_rejects_misaligned():
+    with pytest.raises(ValueError):
+        qf.words_to_planes(jnp.zeros((2, 7), jnp.uint32), 4)
+
+
+# -- probe meta --------------------------------------------------------------
+
+def test_meta_matches_host_probe_operands():
+    rng = np.random.default_rng(2)
+    words = rng.integers(0, 2**32, (9, 24), dtype=np.uint32)
+    hi, lo = qf.words_to_planes(jnp.asarray(words), 8)
+    fh, fl = qf.fold_planes_jnp(hi, lo)
+    hashes = qf.planes_to_hashes(np.asarray(fh), np.asarray(fl))
+    for n_slots in (64, 2048):
+        ref = probe_operands(hashes, n_slots)
+        got = np.asarray(qf.meta_from_planes(fh, fl, n_slots=n_slots))
+        assert (got == ref).all(), n_slots
+
+
+def test_meta_rejects_non_pow2_slots():
+    hi = jnp.zeros((2, 4), jnp.uint32)
+    with pytest.raises(ValueError):
+        qf.meta_from_planes(hi, hi, n_slots=100)
+
+
+# -- device top-k scoring ----------------------------------------------------
+
+@pytest.mark.parametrize("b", [8, 32])
+def test_score_topk_matches_planner_partial(b):
+    """Random -1-padded candidate rows (dups, empties, all-pad rows) must
+    score and rank bit-identically to the planner's host partial."""
+    from repro.store.packed import PackedConfig, PackedSignatureBuffer
+    from repro.store.planner import QueryPlanner
+
+    rng = np.random.default_rng(3)
+    k, n, q, top_k = 64, 120, 11, 5
+    sigs = rng.integers(0, 40, (n, k), dtype=np.int32)
+    buf = PackedSignatureBuffer(PackedConfig(k=k, b=b))
+    buf.append(sigs)
+    planner = QueryPlanner(buf)
+    qsigs = rng.integers(0, 40, (q, k), dtype=np.int32)
+    qwords = np.asarray(ops.pack_codes(jnp.asarray(qsigs), b))
+    cand = rng.integers(-1, n, (q, 17), dtype=np.int64)
+    cand[3] = -1                                   # no-candidate row
+    cand[4, 1:] = cand[4, 0]                       # heavy duplicates
+    ref = planner.partial_topk_packed(qwords, cand, top_k)
+    ids, scores, has = qf.score_topk(
+        jnp.asarray(cand.astype(np.int32)), buf.device_words(),
+        jnp.asarray(qwords), k=k, b=b, top_k=top_k)
+    assert (np.asarray(ids).astype(np.int64) == ref.ids).all()
+    assert (np.asarray(scores) == ref.scores).all()
+    assert (np.asarray(has) == ref.has_candidates).all()
+
+
+# -- dispatch front door -----------------------------------------------------
+
+def test_dispatch_rejects_host_and_unknown():
+    rec = jnp.full((8, 4), -1, jnp.int32)
+    w = jnp.zeros((1, 4), jnp.uint32)
+    for bad in ("host", "nope"):
+        with pytest.raises(ValueError):
+            dispatch.query_fused(rec, w, w, n_bands=2, n_slots=4,
+                                 max_probes=4, k=4, b=32, top_k=2, impl=bad)
+    with pytest.raises(ValueError):
+        dispatch.fold_hashes(w, n_bands=2, impl="host")
+
+
+def test_fold_hashes_matches_host():
+    rng = np.random.default_rng(4)
+    words = rng.integers(0, 2**32, (5, 32), dtype=np.uint32)
+    ref = band_hashes_packed(words, 8)
+    assert (dispatch.fold_hashes(words, n_bands=8, impl="jnp") == ref).all()
+    assert (dispatch.fold_hashes(words, n_bands=8,
+                                 impl="pallas") == ref).all()
+
+
+# -- end-to-end store parity -------------------------------------------------
+
+def _parallel_stores(b, impls, *, n_slots=64, n=250, seed=5):
+    rng = np.random.default_rng(seed)
+    # auto_rebuild off so bucket overflow stays spilled and the fused
+    # path's host spill leg is actually exercised
+    cfg = StoreConfig(k=64, n_bands=16, rows_per_band=4, b=b,
+                      n_slots=n_slots, bucket_width=2, capacity=64,
+                      auto_rebuild=False)
+    sigs = rng.integers(0, 50, (n, 64), dtype=np.int32)
+    words = np.asarray(ops.pack_codes(jnp.asarray(sigs), b))
+    stores = []
+    for impl in impls:
+        s = SketchStore(cfg, query_impl=impl)
+        s.add_packed(words)
+        stores.append(s)
+    # stored rows (candidates), perturbed rows, novel rows (brute fallback)
+    q = np.vstack([words[:16], words[16:28] ^ np.uint32(1),
+                   rng.integers(0, 2**32, (6, words.shape[1]),
+                                dtype=np.uint32)])
+    return stores, q
+
+
+@pytest.mark.parametrize("b", [8, 32])
+def test_store_query_packed_fused_bit_identical(b):
+    (host, j, p), q = _parallel_stores(b, ("host", "jnp", "pallas"))
+    assert host.table.n_spilled > 0          # the spill host leg is exercised
+    hi, hs = host.query_packed(q, top_k=5)
+    for s in (j, p):
+        fi, fs = s.query_packed(q, top_k=5)
+        assert (hi == fi).all() and (hs == fs).all(), s.query_impl
+
+
+def test_store_partial_hashed_fused_bit_identical():
+    (host, fused), q = _parallel_stores(32, ("host", "jnp"))
+    hashes = band_hashes_packed(q, 16)
+    a = host.partial_topk_packed_hashed(hashes, q, 5)
+    b_ = fused.partial_topk_packed_hashed(hashes, q, 5)
+    assert (a.ids == b_.ids).all() and (a.scores == b_.scores).all()
+    assert (a.has_candidates == b_.has_candidates).all()
+
+
+def test_resolve_gates_fall_back_to_host():
+    cfg = StoreConfig(k=64, n_bands=16, rows_per_band=4, n_slots=64,
+                      bucket_width=4)
+    s = SketchStore(cfg, query_impl="jnp")
+    assert s._resolve_query_impl() == "host"       # empty buffer
+    s.add_packed(np.zeros((3, 64), np.uint32))
+    assert s._resolve_query_impl() == "jnp"
+    s.query_impl = "host"
+    assert s._resolve_query_impl() == "host"
+    with pytest.raises(ValueError):
+        SketchStore(cfg, query_impl="nope")
+
+
+def test_sharded_fused_bit_identical():
+    rng = np.random.default_rng(6)
+    cfg = StoreConfig(k=64, n_bands=16, rows_per_band=4, n_slots=64,
+                      bucket_width=4)
+    words = rng.integers(0, 2**32, (240, 64), dtype=np.uint32)
+    q = np.vstack([words[:12],
+                   rng.integers(0, 2**32, (4, 64), dtype=np.uint32)])
+    host = ShardedSketchStore(cfg, 2, query_impl="host")
+    fused = ShardedSketchStore(cfg, 2, query_impl="jnp")
+    host.add_packed(words)
+    fused.add_packed(words)
+    hi, hs = host.query_packed(q, top_k=4)
+    fi, fs = fused.query_packed(q, top_k=4)
+    assert (hi == fi).all() and (hs == fs).all()
+    assert fused.last_timings["fold_s"] > 0.0
+    for sh in fused.shards:
+        assert sh.stats()["query_impl"] == "jnp"
+
+
+def test_device_words_cache_tracks_mutations():
+    from repro.store.packed import PackedConfig, PackedSignatureBuffer
+    buf = PackedSignatureBuffer(PackedConfig(k=8, b=32))
+    buf.append(np.arange(16, dtype=np.int32).reshape(2, 8))
+    d1 = buf.device_words()
+    assert buf.device_words() is d1              # no re-upload, no mutation
+    buf.append(np.arange(8, dtype=np.int32).reshape(1, 8))
+    d2 = buf.device_words()
+    assert d2 is not d1 and d2.shape[0] == 3
+    assert (np.asarray(d2) == buf.all_packed()).all()
+
+
+def test_autotune_knows_query_kinds():
+    from repro.kernels import autotune
+    r = autotune.recommend("query_fold", 8, 16, 2, backend="cpu")
+    assert set(r) == {"block_q"} and r["block_q"] <= 8
+    r = autotune.recommend("probe_pallas", 256, 64, 8, backend="cpu")
+    assert set(r) == {"block_e"}

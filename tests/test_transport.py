@@ -80,9 +80,10 @@ def test_tcp_plane_bit_identical(s, tmp_path):
         # serves one plane, each worker on its best probe path)
         for sh in tcp.shards:
             assert sh.stats()["probe_impl"] in ("numpy", "jnp", "pallas")
+            assert sh.stats()["query_impl"] in ("jnp", "pallas", "host")
         # wall-time split is populated for the artifact row
         assert set(tcp.last_timings) == \
-            {"broadcast_s", "partial_s", "merge_s"}
+            {"fold_s", "broadcast_s", "partial_s", "merge_s"}
         # snapshot written worker-side, reloaded in-process: same answers
         snap = str(tmp_path / "plane")
         tcp.save(snap)
