@@ -24,6 +24,16 @@ the parity check.  The sharded/tcp query rows ride the packed serving path
 broadcast/partial/merge split, and assert bit-identity against the
 single-store HOST oracle at every (transport, S).
 
+The ``--stream-rates`` axis is open-loop serving: Poisson arrivals at a
+fixed offered qps submitted one query at a time through
+``serve.stream.StreamingQueryService`` (admission coalescing + pipelined
+sign/probe/score), reporting served throughput and client-side end-to-end
+p50/p99 per (transport, S, arrival rate) — plus an injected-slow-shard pair
+(one worker sleeping on a fraction of its reads) run hedged vs unhedged at
+equal offered load, the tail-latency evidence for ``HedgePolicy``.  Every
+streamed answer is asserted bit-identical to a pre-formed reference batch,
+brute-fallback rows included.
+
 The ``--pipeline-depth`` axis measures end-to-end ingest (sign -> pack ->
 scatter) through ``serve.search.IngestPipeline`` per depth and transport,
 recording the sign/wait/scatter wall-time split — ``wait`` is the device
@@ -48,6 +58,12 @@ from repro.obs import metrics as obs_metrics
 from repro.store import ShardedSketchStore, SketchStore, StoreConfig
 
 from .common import emit
+
+# reps for latency-bearing timed blocks: the p50/p90/p99 columns come from
+# the registry histogram deltas over these calls, and a p99 over 5 samples
+# is a max, not a tail — 50 back-to-back reps make the quantiles (and the
+# honest "n" next to them) meaningful
+LAT_ITERS = 50
 
 
 # -- baseline: the pre-refactor dict path ------------------------------------
@@ -194,13 +210,202 @@ def _bench_ingest_pipeline(em, depths: tuple[int, ...],
                latency=lat)
 
 
+def _bench_stream_open_loop(em, *, transports: tuple[str, ...],
+                            shards: tuple[int, ...],
+                            arrival_rates: tuple[float, ...],
+                            n_docs: int, n_stream: int,
+                            max_batch: int = 64, max_delay_ms: float = 2.0,
+                            depth: int = 2, slow_prob: float = 0.02,
+                            slow_sleep_ms: float = 600.0,
+                            hedge_delay_ms: float | None = None) -> None:
+    """Open-loop streaming axis: Poisson arrivals at fixed offered qps
+    through ``StreamingQueryService``, reporting served throughput and
+    client-side end-to-end p50/p99 per (transport, S, arrival rate) — the
+    latency an outside caller would see, admission wait included.  Every
+    streamed answer is asserted bit-identical to one reference batch on
+    the same plane (novel rows in the stream keep the brute-fallback leg
+    inside the parity check).  The final rows inject one slow shard into a
+    tcp S=max plane and run the same open loop hedged vs unhedged at equal
+    offered load — the tail-cutting evidence for ``HedgePolicy``.
+    """
+    from repro.serve.search import SearchConfig, SimilaritySearchService
+    from repro.store.store import StoreConfig
+
+    d, k, nb, r = 1 << 14, 128, 32, 4
+    nnz = 160
+    rng = np.random.default_rng(11)
+    docs = np.sort(rng.integers(0, d, (n_docs, nnz), np.int32), axis=1)
+    qrows = docs[rng.integers(0, n_docs, n_stream)].copy()
+    # a few novel rows keep the brute-fallback leg inside the parity check
+    # WITHOUT making it the service bottleneck: each novel row drags its
+    # whole batch through a full-corpus brute round, so the density must
+    # stay low enough that most batches are candidate-only
+    novel = np.sort(rng.integers(0, d, (max(min(n_stream // 128, 8), 2),
+                                        nnz), np.int32), axis=1)
+    qrows[rng.choice(n_stream, len(novel), replace=False)] = novel
+
+    def build_plane(transport, s, slow=None, hedge=False):
+        cfg = SearchConfig(d=d, k=k, n_bands=nb, rows_per_band=r,
+                           n_shards=s, transport=transport, hedge=hedge,
+                           hedge_delay_ms=hedge_delay_ms if hedge else None)
+        if slow is not None:
+            # injected-slow planes spawn their workers directly so the
+            # slow_shards knob reaches run_worker; the service then wraps
+            # the pre-built store (its own ctor has no slowness knob —
+            # this is a bench scenario, not an operator feature)
+            from repro.transport import (HedgePolicy, connect_sharded,
+                                         spawn_workers)
+            store_cfg = StoreConfig(k=cfg.k, n_bands=cfg.n_bands,
+                                    rows_per_band=cfg.rows_per_band,
+                                    b=cfg.b, n_slots=cfg.n_slots,
+                                    bucket_width=cfg.bucket_width)
+            workers = spawn_workers(store_cfg, s, slow_shards=slow)
+            try:
+                # hedge_delay_ms=None -> the production skew-derived delay
+                # (2x the p90 of the PEER shards' reply skew); smoke pins
+                # a fixed delay instead — too few rounds to derive one
+                policy = None
+                if hedge:
+                    policy = HedgePolicy() if hedge_delay_ms is None \
+                        else HedgePolicy(delay_s=hedge_delay_ms / 1e3)
+                store = connect_sharded(
+                    [h.address for h in workers], store_cfg, hedge=policy)
+            except BaseException:
+                for h in workers:
+                    h.terminate()
+                raise
+            return SimilaritySearchService(cfg, store=store, workers=workers)
+        return SimilaritySearchService(cfg)
+
+    def run_plane(svc, rows=qrows):
+        """Ingest + shape warmup + the per-plane parity reference."""
+        for lo in range(0, n_docs, 512):
+            svc.add_sparse(docs[lo: lo + 512])
+        # the query path is shape-specialized: warm every pow2 admission
+        # bucket plus the reference batch shape so the open loop measures
+        # steady-state serving, not XLA compiles
+        b = 1
+        while b <= max_batch:
+            svc.query_sparse(rows[:b], top_k=10)
+            b *= 2
+        # the brute-fallback leg specializes on its (pow2-padded) fallback
+        # row count: warm every padded count the stream can produce with
+        # all-novel batches, or the first batch to hit a fresh count eats a
+        # multi-second worker-side compile mid-open-loop
+        j = 1
+        while j <= min(1 << (len(novel) - 1).bit_length(), max_batch):
+            svc.query_sparse(novel[np.arange(j) % len(novel)], top_k=10)
+            j *= 2
+        return svc.query_sparse(rows, top_k=10)
+
+    def open_loop(svc, ref, rate, seed, rows=qrows):
+        gaps = np.random.default_rng(seed).exponential(1.0 / rate, n_stream)
+        arrivals = np.cumsum(gaps)
+        with svc.stream(max_batch=max_batch, max_delay_ms=max_delay_ms,
+                        depth=depth) as st:
+            t0 = time.perf_counter()
+            tickets = []
+            for i in range(n_stream):
+                lag = t0 + arrivals[i] - time.perf_counter()
+                if lag > 0:
+                    time.sleep(lag)
+                tickets.append(st.submit_sparse(rows[i], top_k=10))
+            t_submit = time.perf_counter() - t0
+            for t in tickets:
+                t.result(timeout=120)
+        wall = max(t.t_done for t in tickets) - t0
+        for i, t in enumerate(tickets):     # streamed == one big batch
+            ids, scores = t.result()
+            assert np.array_equal(ids, ref[0][i]), f"stream ids q{i}"
+            assert np.array_equal(scores, ref[1][i]), f"stream scores q{i}"
+        lat = np.sort([t.latency_s for t in tickets])
+        return {"offered_qps": n_stream / t_submit,
+                "qps": n_stream / wall,
+                "p50_ms": lat[int(0.50 * (n_stream - 1))] * 1e3,
+                "p99_ms": lat[int(0.99 * (n_stream - 1))] * 1e3,
+                "mean_us": float(np.mean(lat)) * 1e6,
+                "batches": st.n_batches}
+
+    def emit_row(name, m, extra=""):
+        em(name, m["mean_us"],
+           f"qps={m['qps']:.0f}|offered_qps={m['offered_qps']:.0f}|"
+           f"p50_ms={m['p50_ms']:.2f}|p99_ms={m['p99_ms']:.2f}|"
+           f"batches={m['batches']}|depth={depth}|"
+           f"max_batch={max_batch}|max_delay_ms={max_delay_ms}|"
+           f"parity=exact_incl_brute{extra}",
+           latency={"stream.e2e": {"n": n_stream,
+                                   "p50_us": round(m["p50_ms"] * 1e3, 1),
+                                   "p99_us": round(m["p99_ms"] * 1e3, 1)}})
+
+    for transport in transports:
+        for s in shards:
+            with build_plane(transport, s) as svc:
+                ref = run_plane(svc)
+                for rate in arrival_rates:
+                    m = open_loop(svc, ref, rate, seed=int(rate))
+                    emit_row(f"search_stream_{transport}_s{s}_r{int(rate)}",
+                             m, "|hedge=off")
+
+    if "tcp" not in transports or not shards:
+        return
+    # the slow-shard pair: same plane shape, same offered load, one shard
+    # sleeping slow_sleep_ms on slow_prob of its reads — only the hedge
+    # knob differs between the two rows.  slow_prob sizing is a two-sided
+    # constraint on the p99 index (~1% of rounds).  Unhedged side: stalled
+    # rounds (~slow_prob of them, plus queueing echoes) must well exceed 1%
+    # so the unhedged p99 pins at the stall time.  Hedged side: every round
+    # issued while a stall drains its lane fires a (correct) hedge, and
+    # each hedge gives the TWIN lane its own slow_prob draw — so rounds
+    # where both legs stall happen at roughly hedge_count * slow_prob, a
+    # number that scales ~quadratically with slow_prob and must stay below
+    # the p99 index or the hedged row pins at the stall time too.  0.02
+    # leaves ~2x margin on both sides at the row sizes used here; 0.04
+    # (measured) puts the double-stall count right AT the index.
+    s = max(shards)
+    slow = {s - 1: (slow_prob, slow_sleep_ms / 1e3)}
+    # the slow plane's service rate is a fraction of the healthy plane's
+    # (slow_prob of its rounds stall slow_sleep_ms): offer a rate both rows
+    # can serve WITHOUT queue growth, or the percentiles measure backlog
+    # depth instead of tail behavior and the hedge comparison is meaningless
+    # (/6 also leaves CPU headroom for the hedges' duplicate reads — on an
+    # oversubscribed box they'd otherwise contend with the primary reads).
+    # slow_sleep_ms must tower over the host's own scheduling-noise tail
+    # (hundreds of ms on an oversubscribed CI box): the hedge can only cut
+    # the injected stall, so a stall under the noise floor is invisible in
+    # a p99 comparison no matter how well the hedge works
+    slow_rate = min(arrival_rates) / 6
+    # indexed-only rows for this pair: a novel row drags a full-corpus
+    # brute round — un-hedgeable compute that lands in BOTH rows' p99 and
+    # drowns the shard-skew signal the hedge exists to cut
+    slow_rows = docs[np.random.default_rng(5).integers(0, n_docs, n_stream)]
+    p99 = {}
+    for hedged in (False, True):
+        with build_plane("tcp", s, slow=slow, hedge=hedged) as svc:
+            ref = run_plane(svc, rows=slow_rows)
+            m = open_loop(svc, ref, slow_rate, seed=97, rows=slow_rows)
+            tag = "hedged" if hedged else "unhedged"
+            g = svc.store.shards[0].group
+            emit_row(f"search_stream_tcp_s{s}_slow_{tag}", m,
+                     f"|hedge={'on' if hedged else 'off'}|"
+                     f"slow_shard={s - 1}|slow_prob={slow_prob}|"
+                     f"slow_ms={slow_sleep_ms}|"
+                     f"hedges={g.n_hedges}|hedge_wins={g.n_hedge_wins}")
+            p99[tag] = m["p99_ms"]
+    em("search_stream_hedge_p99_cut", 0.0,
+       f"unhedged_p99_ms={p99['unhedged']:.2f}|"
+       f"hedged_p99_ms={p99['hedged']:.2f}|"
+       f"cut={p99['unhedged'] / max(p99['hedged'], 1e-9):.1f}x")
+
+
 def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
         n_bands: int = 32, rows_per_band: int = 4,
         shards: tuple[int, ...] = (2, 4),
         transports: tuple[str, ...] = ("inproc", "tcp"),
         pipeline_depths: tuple[int, ...] = (1, 2, 4),
         ingest_docs: int = 20_000, ingest_batch: int = 512,
-        query_impl: str = "auto") -> list[dict]:
+        query_impl: str = "auto",
+        arrival_rates: tuple[float, ...] | None = (150.0, 1000.0),
+        stream_queries: int | None = None) -> list[dict]:
     rows_out: list[dict] = []
 
     def em(name, us, derived, **fields):
@@ -387,7 +592,7 @@ def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
             sh.query_packed(qwords, top_k=10)  # warm per-shard traces
             before = obs_metrics.default().snapshot()
             t_q, (ids, scores) = _timed_block(
-                lambda: sh.query_packed(qwords, top_k=10), iters=5)
+                lambda: sh.query_packed(qwords, top_k=10), iters=LAT_ITERS)
             lat = _stage_quantiles(before, obs_metrics.default().snapshot(),
                                    _query_stages(s))
             # the merge contract: S shards answer exactly like one store
@@ -417,7 +622,8 @@ def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
                 sh.query_packed(qwords, top_k=10)  # warm worker traces
                 before = obs_metrics.default().snapshot()
                 t_q, (ids, scores) = _timed_block(
-                    lambda: sh.query_packed(qwords, top_k=10), iters=5)
+                    lambda: sh.query_packed(qwords, top_k=10),
+                    iters=LAT_ITERS)
                 lat = _stage_quantiles(before,
                                        obs_metrics.default().snapshot(),
                                        _query_stages(s))
@@ -442,6 +648,27 @@ def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
     if pipeline_depths:
         _bench_ingest_pipeline(em, pipeline_depths, transports,
                                ingest_docs, ingest_batch)
+
+    # open-loop streaming axis (+ the injected-slow-shard hedge pair)
+    if arrival_rates:
+        from .common import smoke
+        if smoke():
+            # CI scale: one low rate, a short stream, and a shorter slow
+            # sleep so the step stays inside its hard timeout
+            # slow_prob is raised from the full run's 0.02: with ~100
+            # stream rounds, 0.02 leaves the unhedged row stall-free (no
+            # tail to cut) about one smoke run in seven
+            _bench_stream_open_loop(
+                em, transports=transports, shards=shards,
+                arrival_rates=(min(arrival_rates),),
+                n_docs=ingest_docs, n_stream=stream_queries or 96,
+                max_batch=16, slow_prob=0.05, slow_sleep_ms=80.0,
+                hedge_delay_ms=25.0)
+        else:
+            _bench_stream_open_loop(
+                em, transports=transports, shards=shards,
+                arrival_rates=arrival_rates,
+                n_docs=ingest_docs, n_stream=stream_queries or 1024)
 
     return rows_out
 
@@ -470,6 +697,11 @@ def main(argv=None) -> None:
                          "checked against host either way)")
     ap.add_argument("--n-items", type=int, default=None)
     ap.add_argument("--n-queries", type=int, default=None)
+    ap.add_argument("--stream-rates", default=None,
+                    help="comma-separated offered qps for the open-loop "
+                         "streaming axis (empty string disables it)")
+    ap.add_argument("--stream-queries", type=int, default=None,
+                    help="queries per open-loop streaming run")
     args = ap.parse_args(argv)
     if args.smoke:
         common.set_smoke(True)
@@ -487,6 +719,11 @@ def main(argv=None) -> None:
     kw["pipeline_depths"] = tuple(
         int(d) for d in args.pipeline_depth.split(",") if d)
     kw["query_impl"] = args.query_impl
+    if args.stream_rates is not None:
+        kw["arrival_rates"] = tuple(
+            float(r) for r in args.stream_rates.split(",") if r)
+    if args.stream_queries is not None:
+        kw["stream_queries"] = args.stream_queries
     print("name,us_per_call,derived")
     run(**kw)
 

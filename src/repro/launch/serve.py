@@ -71,7 +71,10 @@ def serve_search(args) -> None:
             d=1 << 14, k=256, n_bands=64, rows_per_band=4,
             n_shards=args.shards, partition=args.partition,
             probe_impl=args.probe, query_impl=args.query_impl,
-            transport=args.transport)) as svc:
+            transport=args.transport,
+            query_timeout_s=args.query_timeout,
+            hedge=args.hedge,
+            hedge_delay_ms=args.hedge_delay_ms)) as svc:
         # pipelined fused ingest: batch N+1 signs while batch N scatters
         # (--pipeline-depth 1 = serial; answers identical at any depth)
         bs = max(1, min(args.ingest_batch, len(idx)))
@@ -95,6 +98,35 @@ def serve_search(args) -> None:
               f"query={args.query_impl}, transport={args.transport}): "
               f"{args.batch} queries in {dt * 1e3:.1f} ms; top-1 self-hit "
               f"{(ids[:, 0] == np.arange(args.batch)).mean() * 100:.0f}%")
+        if args.stream:
+            # open-loop streaming demo: Poisson arrivals at --stream-qps
+            # through the admission queue; the percentiles are client-side
+            # end-to-end (admission wait + batch wall), the honest number
+            # an outside caller would see
+            rng = np.random.default_rng(1)
+            n_q = args.stream_queries
+            qrows = idx[rng.integers(0, len(idx), n_q)]
+            gaps = rng.exponential(1.0 / args.stream_qps, n_q)
+            with svc.stream(max_batch=args.max_batch,
+                            max_delay_ms=args.max_delay_ms,
+                            depth=args.stream_depth) as stream:
+                t0 = time.perf_counter()
+                tickets = []
+                for i in range(n_q):
+                    target = t0 + gaps[: i + 1].sum()
+                    while time.perf_counter() < target:
+                        time.sleep(min(target - time.perf_counter(), 1e-3))
+                    tickets.append(stream.submit_sparse(qrows[i], top_k=5))
+                for t in tickets:
+                    t.result(timeout=svc.cfg.query_timeout_s + 30)
+                wall = time.perf_counter() - t0
+            lat = np.sort([t.latency_s for t in tickets])
+            print(f"[serve] stream: {n_q} queries at {args.stream_qps:.0f} "
+                  f"qps offered -> {n_q / wall:.0f} qps served "
+                  f"({stream.n_batches} batches, depth={args.stream_depth}, "
+                  f"hedge={'on' if args.hedge else 'off'}); e2e p50 "
+                  f"{lat[int(0.50 * (n_q - 1))] * 1e3:.2f} ms, p99 "
+                  f"{lat[int(0.99 * (n_q - 1))] * 1e3:.2f} ms")
         # one merged plane snapshot (coordinator + tcp workers): the
         # per-shard partial-latency split is the skew evidence
         snap = svc.store.obs_snapshot()
@@ -146,6 +178,31 @@ def main() -> None:
                          "(1 = serial sign->scatter; search mode)")
     ap.add_argument("--ingest-batch", type=int, default=128,
                     help="documents per ingest pipeline batch (search mode)")
+    ap.add_argument("--query-timeout", type=float, default=30.0,
+                    dest="query_timeout",
+                    help="query fan-out deadline in seconds (tcp transport; "
+                         "TransportTimeout errors name this knob)")
+    ap.add_argument("--hedge", action="store_true",
+                    help="hedge slow shard reads on a second connection "
+                         "(tcp transport; never changes results)")
+    ap.add_argument("--hedge-delay-ms", type=float, default=None,
+                    help="fixed hedge delay in ms (default: derived from "
+                         "observed per-shard reply latencies; 0 hedges "
+                         "immediately)")
+    ap.add_argument("--stream", action="store_true",
+                    help="run the open-loop streaming demo after ingest "
+                         "(search mode)")
+    ap.add_argument("--stream-qps", type=float, default=500.0,
+                    help="offered Poisson arrival rate for --stream")
+    ap.add_argument("--stream-queries", type=int, default=512,
+                    help="queries to stream for --stream")
+    ap.add_argument("--max-batch", type=int, default=256,
+                    help="admission queue flush size (--stream)")
+    ap.add_argument("--max-delay-ms", type=float, default=2.0,
+                    help="admission queue flush deadline in ms (--stream)")
+    ap.add_argument("--stream-depth", type=int, default=2,
+                    help="streaming pipeline depth: batches in flight "
+                         "(1 = serial; --stream)")
     ap.add_argument("--metrics-dump", metavar="PATH", default=None,
                     help="append periodic JSONL registry snapshots + trace "
                          "spans here while serving (search mode); validate "

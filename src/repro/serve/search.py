@@ -64,10 +64,17 @@ class SearchConfig:
     probe_impl: str = "auto"    # LSH probe backend: numpy | jnp | pallas
     query_impl: str = "auto"    # fused query backend: jnp | pallas | host
     transport: str = "inproc"   # shard backend: inproc | tcp (worker procs)
+    query_timeout_s: float = 30.0    # fan-out deadline (tcp transport)
+    hedge: bool = False         # hedged shard reads (tcp transport)
+    hedge_delay_ms: float | None = None  # fixed hedge delay; None = derived
 
 
 class SimilaritySearchService:
-    def __init__(self, cfg: SearchConfig, mesh=None):
+    def __init__(self, cfg: SearchConfig, mesh=None, *,
+                 store=None, workers=None):
+        """``store``/``workers`` inject a pre-built shard plane (benchmarks
+        and tests spawn planes with injected-slow workers); by default the
+        service builds its own per ``cfg.transport``."""
         if cfg.n_bands * cfg.rows_per_band != cfg.k:
             raise ValueError("n_bands * rows_per_band must equal k")
         if cfg.transport not in TRANSPORTS:
@@ -80,16 +87,26 @@ class SimilaritySearchService:
                                 rows_per_band=cfg.rows_per_band, b=cfg.b,
                                 n_slots=cfg.n_slots,
                                 bucket_width=cfg.bucket_width)
-        self._workers: list = []
-        if cfg.transport == "tcp":
-            from repro.transport import connect_sharded, spawn_workers
+        self._workers: list = list(workers) if workers else []
+        if store is not None:
+            self.store = store
+        elif cfg.transport == "tcp":
+            from repro.transport import (HedgePolicy, connect_sharded,
+                                         spawn_workers)
             self._workers = spawn_workers(store_cfg, cfg.n_shards,
                                           probe_impl=cfg.probe_impl,
                                           query_impl=cfg.query_impl)
+            hedge = None
+            if cfg.hedge:
+                # hedge_delay_ms=0.0 is a valid fixed delay (hedge at
+                # once), so the None check must be explicit
+                hedge = HedgePolicy() if cfg.hedge_delay_ms is None \
+                    else HedgePolicy(delay_s=cfg.hedge_delay_ms / 1e3)
             try:
                 self.store = connect_sharded(
                     [h.address for h in self._workers], store_cfg,
-                    partition=cfg.partition, query_impl=cfg.query_impl)
+                    partition=cfg.partition, query_impl=cfg.query_impl,
+                    timeout=cfg.query_timeout_s, hedge=hedge)
             except BaseException:
                 for h in self._workers:    # no orphan worker processes
                     h.terminate()
@@ -134,6 +151,13 @@ class SimilaritySearchService:
                  layout: str = "sparse") -> "IngestPipeline":
         """A double-buffered ingest session over this service's store."""
         return IngestPipeline(self, depth=depth, layout=layout)
+
+    def stream(self, **kw):
+        """A streaming front end over this service: individual queries in,
+        coalesced batches through the pipelined query path (see
+        ``serve.stream.StreamingQueryService`` for the knobs)."""
+        from repro.serve.stream import StreamConfig, StreamingQueryService
+        return StreamingQueryService(self, StreamConfig(**kw))
 
     @property
     def size(self) -> int:

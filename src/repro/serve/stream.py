@@ -1,0 +1,282 @@
+"""Streaming query front end: individual queries in, device batches out.
+
+``SimilaritySearchService`` answers pre-formed query batches; a serving
+front end sees one query at a time.  ``StreamingQueryService`` bridges the
+two with an admission queue: callers submit single queries and get a
+``QueryTicket`` back immediately, a coalescer thread gathers compatible
+queries into device-sized batches, and a batch flushes when it reaches
+``max_batch`` OR its oldest query has waited ``max_delay_ms`` — whichever
+comes first.  Batches then run through the same depth-parameterized overlap
+``IngestPipeline`` uses for ingest: batch N+1's device sign/fold dispatches
+(JAX async) while batch N's shard fan-out, scoring, and merge are in
+flight, so the signing engine and the shard plane work concurrently
+instead of strictly alternating.
+
+Exactness: coalescing composes a batch out of independent per-row work —
+sign, fold, probe, score, and merge are all row-independent, and a row's
+brute-force-fallback decision depends only on its own candidates — so the
+answer for a query is bit-identical whether it rides a coalesced batch,
+any pipeline depth, or a batch of one.  Mixed per-query ``top_k`` stays
+exact the same way: the batch asks the store for the max, and a prefix of
+a longer ranking IS the shorter ranking (same scores, same deterministic
+tie-breaks).
+
+Batch compatibility is by (layout, row shape, dtype): a sparse plane with
+fixed nnz coalesces everything into one key.  An incompatible arrival
+flushes the queue in front of it (FIFO order is never reordered, so no
+ticket can be starved by later arrivals).  ``pad_pow2`` pads a partial
+flush up to the next power of two **by repeating the batch's first row** —
+padding with real data keeps pad rows on the exact same code path (zeros
+could have no candidates and drag the whole batch through the brute
+fallback) while per-row independence keeps the real rows' answers
+untouched; the padding's only job is to keep the set of distinct batch
+shapes small so JAX recompiles O(log max_batch) times, not O(max_batch).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+from repro.obs import metrics as obs_metrics
+
+FLUSH_REASONS = ("full", "deadline", "shape", "close")
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    max_batch: int = 256        # flush when this many compatible queries
+    max_delay_ms: float = 2.0   # ... or when the oldest waited this long
+    depth: int = 2              # in-flight batches (1 = serial, 2 = overlap)
+    pad_pow2: bool = True       # pad partial batches to pow2 (see module doc)
+    top_k: int = 10             # default per-query top_k
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1 (got {self.max_batch})")
+        if self.max_delay_ms < 0:
+            raise ValueError(
+                f"max_delay_ms must be >= 0 (got {self.max_delay_ms})")
+        if self.depth < 1:
+            raise ValueError(f"depth must be >= 1 (got {self.depth})")
+
+
+class QueryTicket:
+    """One submitted query: resolves to ``(ids, scores)`` when its batch
+    completes.  ``latency_s`` is admission-to-answer wall time."""
+
+    def __init__(self, row: np.ndarray, layout: str, top_k: int):
+        self.row = row
+        self.layout = layout
+        self.top_k = top_k
+        # admission-compatibility key: batches only coalesce rows the
+        # signing kernel can stack into one array
+        self.key = (layout, row.shape, row.dtype.str)
+        self.t_submit = time.perf_counter()
+        self.t_done: float | None = None
+        self._ev = threading.Event()
+        self._ids: np.ndarray | None = None
+        self._scores: np.ndarray | None = None
+        self._err: BaseException | None = None
+
+    def _resolve(self, ids: np.ndarray, scores: np.ndarray) -> None:
+        self._ids, self._scores = ids, scores
+        self.t_done = time.perf_counter()
+        self._ev.set()
+
+    def _reject(self, err: BaseException) -> None:
+        self._err = err
+        self.t_done = time.perf_counter()
+        self._ev.set()
+
+    @property
+    def done(self) -> bool:
+        return self._ev.is_set()
+
+    @property
+    def latency_s(self) -> float | None:
+        return None if self.t_done is None else self.t_done - self.t_submit
+
+    def result(self, timeout: float | None = None):
+        """Block for this query's ``(ids, scores)`` (each ``(top_k,)``).
+
+        Re-raises the batch's failure if its dispatch or drain died."""
+        if not self._ev.wait(timeout):
+            raise TimeoutError("query still in flight")
+        if self._err is not None:
+            raise self._err
+        return self._ids, self._scores
+
+
+class StreamingQueryService:
+    """Admission queue + pipelined batch execution over one service.
+
+    One coalescer thread owns the whole flow (admission order == dispatch
+    order == drain order, so FIFO fairness and exactness need no further
+    locking): it collects a compatible FIFO prefix of the queue, dispatches
+    its signing asynchronously, and only materializes + fans out the oldest
+    in-flight batch once ``depth`` batches are in flight — or as soon as
+    the queue goes quiet, so an idle pipeline never sits on results.
+
+    Close flushes: every admitted query is answered before ``close``
+    returns (a query submitted after close is rejected immediately).
+    """
+
+    def __init__(self, service, cfg: StreamConfig | None = None):
+        self.service = service
+        self.cfg = cfg or StreamConfig()
+        self._q: collections.deque[QueryTicket] = collections.deque()
+        self._cond = threading.Condition()
+        self._closed = False
+        self._inflight: collections.deque = collections.deque()
+        reg = obs_metrics.default()
+        self._h_batch = reg.histogram("stream.batch")
+        self._h_qwait = reg.histogram("stream.queue_wait")
+        self._h_e2e = reg.histogram("stream.e2e")
+        self._c_queries = reg.counter("stream.queries")
+        self._c_flush = {r: reg.counter(f"stream.flush.{r}")
+                         for r in FLUSH_REASONS}
+        self.n_batches = 0
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="stream-query")
+        self._thread.start()
+
+    # -- submission ----------------------------------------------------------
+    def submit_sparse(self, idx, top_k: int | None = None) -> QueryTicket:
+        """Admit one sparse query (1-D array of active indices)."""
+        return self._submit(np.asarray(idx), "sparse", top_k)
+
+    def submit_dense(self, v, top_k: int | None = None) -> QueryTicket:
+        """Admit one dense query (1-D vector of length d)."""
+        return self._submit(np.asarray(v), "dense", top_k)
+
+    def _submit(self, row: np.ndarray, layout: str,
+                top_k: int | None) -> QueryTicket:
+        if row.ndim != 1:
+            raise ValueError(
+                f"submit takes ONE query (1-D row, got shape {row.shape}); "
+                "batches are what the admission queue builds")
+        t = QueryTicket(row, layout, int(top_k or self.cfg.top_k))
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("streaming service is closed")
+            self._q.append(t)
+            self._cond.notify()
+        return t
+
+    # -- the coalescer thread ------------------------------------------------
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                while not self._q and not self._closed and not self._inflight:
+                    self._cond.wait()
+                if not self._q and not self._inflight and self._closed:
+                    return
+                batch = reason = None
+                deadline_pending = False
+                if self._q:
+                    batch, reason = self._collect_locked()
+                    deadline_pending = batch is None
+            if batch is not None:
+                self._dispatch(batch, reason)
+            with self._cond:
+                has_work = bool(self._q)
+            if self._inflight and (len(self._inflight) >= self.cfg.depth
+                                   or not has_work or deadline_pending):
+                self._drain_one()
+
+    def _collect_locked(self):
+        """With the lock held and a non-empty queue: block until the head
+        batch is ready and pop it, or return ``(None, None)`` when the
+        deadline is still running and there are in-flight batches whose
+        drain can overlap the wait."""
+        cfg = self.cfg
+        deadline = self._q[0].t_submit + cfg.max_delay_ms / 1e3
+        while True:
+            key0 = self._q[0].key
+            n = 1
+            while n < len(self._q) and n < cfg.max_batch \
+                    and self._q[n].key == key0:
+                n += 1
+            if n >= cfg.max_batch:
+                reason = "full"
+            elif n < len(self._q):
+                reason = "shape"     # incompatible follower: flush the prefix
+            elif self._closed:
+                reason = "close"
+            elif time.perf_counter() >= deadline:
+                reason = "deadline"
+            elif self._inflight:
+                return None, None    # drain instead of idling out the wait
+            else:
+                self._cond.wait(
+                    timeout=max(deadline - time.perf_counter(), 0.0))
+                continue
+            return [self._q.popleft() for _ in range(n)], reason
+
+    def _pad_to(self, n: int) -> int:
+        if not self.cfg.pad_pow2:
+            return n
+        return min(1 << (n - 1).bit_length(), self.cfg.max_batch)
+
+    def _dispatch(self, tickets: list[QueryTicket], reason: str) -> None:
+        rows = np.stack([t.row for t in tickets])
+        n_pad = self._pad_to(len(tickets)) - len(tickets)
+        if n_pad:
+            rows = np.concatenate(
+                [rows, np.broadcast_to(rows[:1],
+                                       (n_pad,) + rows.shape[1:])])
+        try:
+            signed = self.service._sign(rows, tickets[0].layout)  # async
+        except Exception as e:
+            for t in tickets:
+                t._reject(e)
+            return
+        self._c_flush[reason].inc()
+        self._h_batch.observe(len(tickets))
+        now = time.perf_counter()
+        for t in tickets:
+            self._h_qwait.observe(now - t.t_submit)
+        self._inflight.append((signed, tickets))
+
+    def _drain_one(self) -> None:
+        signed, tickets = self._inflight.popleft()
+        svc = self.service
+        try:
+            if not (svc.packed_ingest and svc.cfg.query_impl != "host"):
+                # legacy paths take the host batch; the fused path keeps
+                # the signed words device-resident into the store's fold
+                # (mirrors _traced_query)
+                signed = np.asarray(signed)
+            top_k = max(t.top_k for t in tickets)
+            ids, scores = svc._query(signed, top_k)
+            ids, scores = np.asarray(ids), np.asarray(scores)
+        except Exception as e:
+            # one batch's failure answers its own tickets and nothing else;
+            # the coalescer keeps serving
+            for t in tickets:
+                t._reject(e)
+            return
+        for i, t in enumerate(tickets):
+            t._resolve(ids[i, :t.top_k].copy(), scores[i, :t.top_k].copy())
+            self._h_e2e.observe(t.t_done - t.t_submit)
+        self._c_queries.inc(len(tickets))
+        self.n_batches += 1
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self) -> None:
+        """Flush every admitted query and stop the coalescer (idempotent)."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        self._thread.join()
+
+    def __enter__(self) -> "StreamingQueryService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

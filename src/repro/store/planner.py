@@ -145,13 +145,26 @@ class QueryPlanner:
                              top_k: int) -> TopKPartial:
         """Brute-force partial: every stored item scored for every row
         (mask=None: no (Q, N) bool allocation).  ``has_candidates`` is False
-        throughout — this leg never votes on the fallback decision."""
+        throughout — this leg never votes on the fallback decision.
+
+        The query rows are padded to the next power of two (repeating row 0)
+        before scoring: the scoring kernel specializes on the row count, and
+        the fallback count is whatever subset of a batch had no candidates —
+        without padding every new count pays a fresh trace/compile against
+        the full-index column shape (seconds of tail latency, per worker).
+        Scoring is row-independent, so the pad rows' results are sliced off
+        without touching the real rows."""
         q = qwords.shape[0]
         ids = np.full((q, top_k), -1, np.int64)
         scores = np.full((q, top_k), NEG_INF, np.float32)
         if self.buffer.size and q:
             union_ids = np.arange(self.buffer.size, dtype=np.int64)
-            ids, scores = self._rank(qwords, union_ids, None, top_k)
+            n_pad = (1 << (q - 1).bit_length()) - q
+            qp = qwords if not n_pad else np.concatenate(
+                [qwords, np.broadcast_to(qwords[:1],
+                                         (n_pad,) + qwords.shape[1:])])
+            ids_p, scores_p = self._rank(qp, union_ids, None, top_k)
+            ids, scores = ids_p[:q], scores_p[:q]
         return TopKPartial(ids, scores, np.zeros(q, bool))
 
     def _rank(self, qwords: np.ndarray, union_ids: np.ndarray,

@@ -77,6 +77,15 @@ def shard_snapshot_path(dirpath: str, shard: int) -> str:
     return os.path.join(dirpath, f"shard_{shard}.npz")
 
 
+def shard_partial_hist_name(shard: int) -> str:
+    """Registry name of shard ``i``'s reply-latency histogram — the
+    per-shard skew signal.  The transport's hedge delay derives from the
+    same observation stream (``FanoutGroup`` keeps a private per-connection
+    copy so co-resident planes can't pollute each other's signal); bench
+    and ops tooling read the registry histograms by this name."""
+    return f"query.shard{shard}.partial"
+
+
 # -- the backend seam ---------------------------------------------------------
 
 class Pending(Protocol):
@@ -255,7 +264,7 @@ class ShardedSketchStore:
         self._h_partial = reg.histogram("query.partial")
         self._h_merge = reg.histogram("query.merge")
         self._h_query = reg.histogram("query.wall")
-        self._h_shard = [reg.histogram(f"query.shard{i}.partial")
+        self._h_shard = [reg.histogram(shard_partial_hist_name(i))
                          for i in range(n_shards)]
         self._tracer = obs_trace.default()
 

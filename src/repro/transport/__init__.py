@@ -19,11 +19,12 @@ the in-process backend and the merge is associative, tcp-backed answers are
 bit-identical to the in-process plane on the same items.
 """
 
-from .client import (RemoteShard, ShardConnection, TransportError,
-                     TransportTimeout, WorkerError, connect_sharded,
-                     shutdown_plane)
+from .client import (FanoutGroup, HedgePolicy, RemoteShard, ShardConnection,
+                     TransportError, TransportTimeout, WorkerError,
+                     connect_sharded, shutdown_plane)
 from .server import WorkerHandle, spawn_workers
 
-__all__ = ["RemoteShard", "ShardConnection", "TransportError",
-           "TransportTimeout", "WorkerError", "connect_sharded",
-           "shutdown_plane", "WorkerHandle", "spawn_workers"]
+__all__ = ["FanoutGroup", "HedgePolicy", "RemoteShard", "ShardConnection",
+           "TransportError", "TransportTimeout", "WorkerError",
+           "connect_sharded", "shutdown_plane", "WorkerHandle",
+           "spawn_workers"]

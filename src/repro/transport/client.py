@@ -17,10 +17,34 @@ mid-flight (connection reset / EOF / ERROR frame) surfaces as
 in-process shards and tcp workers; ``connect_sharded`` builds the store for
 a worker address list, optionally restoring coordinator state (gid maps,
 partition) from a ``ShardedSketchStore.save`` snapshot directory.
+
+Hedging (``HedgePolicy``): with one slow shard, the fan-out wall clock is
+that shard's latency — its p99 becomes the query p99.  When a policy is
+set, the group holds a second connection per shard and, if a shard's reply
+hasn't landed by a skew-derived hedge delay, re-issues the *same* read
+request on the twin connection; the first good reply wins and the loser is
+settled by the existing machinery (a late duplicate reply is discarded by
+seq pairing; a leg cut mid-frame is poisoned).  Only idempotent reads
+(QUERY/BRUTE) are ever hedged — writes keep exactly-once semantics.  The
+hedge delay for a shard derives from its PEERS' reply-skew histograms
+(how much later than each round's fastest reply everyone else lands), and
+the timer arms when the round's first reply arrives: skew — not absolute
+latency — is what hedging can actually fix, it is immune to
+coordinator-side pauses that delay a whole round together, and excluding
+the shard's own history keeps a stalling shard (whose
+queued-behind-the-stall rounds inflate its own percentiles) from vetoing
+its own hedges.  A lane whose request was abandoned — the twin when its
+hedge lost, the PRIMARY when a hedge won its slot — still has that request
+in flight on its socket and is reconnected in place before its next use:
+without this, one stalled read blacks out the primary lane for the whole
+stall and every round issued meanwhile must win a fresh hedge race to
+survive.  Hedging cannot change results: both legs ask the same worker the
+same deterministic question, so whichever reply wins is bit-identical.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import selectors
 import socket
 import time
@@ -54,6 +78,30 @@ def _partial_from(msg: Message) -> TopKPartial:
                        np.asarray(msg["has"], bool))
 
 
+@dataclasses.dataclass(frozen=True)
+class HedgePolicy:
+    """When and how to re-issue a slow shard's read on its twin connection.
+
+    With ``delay_s`` unset, the hedge delay for a shard is
+    ``multiplier * q(quantile)`` of its PEER connections' observed reply
+    SKEW — lateness relative to each round's fastest reply — clamped to
+    ``[min_delay_s, max_delay_s]``, with the timer armed when the current
+    round's first reply lands.  No hedge fires until ``min_samples`` peer
+    skews have been observed (an unwarmed plane has no signal to derive a
+    delay from), and single-shard groups never hedge adaptively (no peers,
+    no skew).  ``delay_s`` (seconds) short-circuits all of that: a fixed
+    delay from round start, active from the first request (``0.0`` is
+    valid and hedges immediately — a stress setting).
+    """
+
+    delay_s: float | None = None
+    quantile: float = 0.9
+    multiplier: float = 2.0
+    min_delay_s: float = 0.0005
+    max_delay_s: float = 1.0
+    min_samples: int = 32
+
+
 class ShardConnection:
     """One framed connection to a shard worker (blocking request/reply).
 
@@ -65,9 +113,11 @@ class ShardConnection:
     """
 
     def __init__(self, address: tuple[str, int], *, timeout: float = 30.0,
-                 max_payload: int = wire.MAX_PAYLOAD):
+                 max_payload: int = wire.MAX_PAYLOAD,
+                 deadline_name: str = "timeout"):
         self.address = tuple(address)
         self.timeout = timeout
+        self.deadline_name = deadline_name   # which knob set the deadline
         self.max_payload = max_payload
         self._seq = 0
         self.broken: str | None = None     # why this conn is unusable
@@ -144,6 +194,7 @@ class ShardConnection:
             self.mark_broken(f"timed out mid-{msg.type.name} seq={msg.seq}")
             raise TransportTimeout(
                 f"worker {self._name} timed out after {self.timeout}s "
+                f"({self.deadline_name}) "
                 f"({msg.type.name} seq={msg.seq}{self._stale_note()})") from e
         except (wire.WireError, OSError) as e:
             self.mark_broken(f"stream failed during {msg.type.name} "
@@ -175,6 +226,28 @@ class ShardConnection:
             # keys off dirty/unknown_outcome)
             raise err
         return reply
+
+    def reconnect(self) -> None:
+        """Replace the socket in place: same worker, fresh stream, fresh
+        seq space, ``broken`` cleared.  Object identity is preserved so
+        every holder of this connection (``RemoteShard``, fan-out maps,
+        skew histograms) sees the fresh lane without rebinding.  Used by
+        the fan-out's dirty-lane hygiene: a lane abandoned mid-request
+        still has a worker thread serving a question nobody will read —
+        possibly sitting in the very stall that was hedged around — and
+        reusing it would queue the next request behind exactly the
+        latency hedging exists to cut."""
+        self.close()
+        try:
+            self.sock = socket.create_connection(self.address,
+                                                 timeout=self.timeout)
+        except OSError as e:
+            raise WorkerError(f"cannot reconnect to worker at "
+                              f"{self.address[0]}:{self.address[1]}: "
+                              f"{e}") from e
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._seq = 0
+        self.broken = None
 
     @property
     def _name(self) -> str:
@@ -226,34 +299,74 @@ class FanoutGroup:
     ``result()``/``flush()`` drives every socket through one ``selectors``
     loop under a single deadline.  Sockets are nonblocking only inside the
     loop, so the blocking request path stays usable between fan-outs.
+
+    With a ``HedgePolicy`` and per-shard twin connections (``hedge_conns``),
+    a submitted request marked ``hedgeable`` may be re-issued on the twin
+    when its reply is late (see the module docstring for the semantics).
     """
 
     def __init__(self, conns: list[ShardConnection], *,
-                 timeout: float = 30.0):
+                 timeout: float = 30.0, hedge: HedgePolicy | None = None,
+                 hedge_conns: dict[ShardConnection, ShardConnection]
+                 | None = None,
+                 deadline_name: str = "timeout"):
         self.conns = list(conns)
         self.timeout = timeout
+        self.hedge = hedge
+        self._twin = dict(hedge_conns or {})
+        self._deadline_name = deadline_name
         self._out: dict[ShardConnection, list] = {}     # pending send buffers
         self._out_total: dict[ShardConnection, int] = {}
         self._in: dict[ShardConnection, bytearray] = {}
         self._want: dict[ShardConnection, int] = {}     # expected reply seq
         self._replies: dict[ShardConnection, Message] = {}
+        self._msgs: dict[ShardConnection, Message] = {}  # hedgeable, per round
         self._round_error: BaseException | None = None  # why the round died
         reg = obs_metrics.default()
         self._m_timeout = reg.counter("transport.client.timeouts")
         self._m_bytes_out = reg.counter("transport.client.bytes_out")
         self._m_bytes_in = reg.counter("transport.client.bytes_in")
+        self._m_hedges = reg.counter("transport.client.hedges")
+        self._m_hedge_wins = reg.counter("transport.client.hedge_wins")
+        self._m_redials = reg.counter("transport.client.lane_redials")
+        # lanes (twin OR primary) whose last request was abandoned
+        # mid-flight: the worker is still serving that request on the
+        # socket, so the lane is reconnected before its next use (see
+        # _redial).  Primaries go dirty when a hedge wins their slot;
+        # twins when their hedge loses or the round dies under them.
+        self._dirty: set[ShardConnection] = set()
         self._h_round = reg.histogram("transport.client.fanout")
         self._round_t0 = 0.0               # when the current round started
         self._reply_lat: dict[ShardConnection, float] = {}
+        # private per-shard reply-SKEW histograms — each unhedged round
+        # records how much later than the round's fastest reply each shard
+        # landed.  Owned by THIS group (not the registry) so another plane
+        # in the same process cannot pollute the signal the hedge delay is
+        # derived from; absolute latencies live in the registry's
+        # ``query.shard<i>.partial`` instead
+        self._lat_h = {c: obs_metrics.Histogram(f"fanout.skew.{i}")
+                       for i, c in enumerate(self.conns)}
+        self.n_hedges = 0                  # hedges fired (plain tallies)
+        self.n_hedge_wins = 0              # hedges whose reply won the slot
+        self.n_redials = 0                 # abandoned lanes reconnected
 
     def submit(self, conn: ShardConnection, msg: Message, *,
-               decode=_partial_from, reset_on_error: bool = True) -> _Pending:
+               decode=_partial_from, reset_on_error: bool = True,
+               hedgeable: bool = False) -> _Pending:
         if conn in self._out or conn in self._replies:
             raise TransportError("one outstanding fan-out request per shard")
         if not self._out and not self._replies:
             self._round_error = None      # a fresh round: forget old failures
             self._reply_lat.clear()
+            self._msgs.clear()
         try:
+            # a dirty lane (its last request was abandoned to a hedged win
+            # or a dead round) is reconnected before carrying new traffic;
+            # see _redial for why reuse would defeat the hedge
+            if conn in self._dirty and not self._redial(conn):
+                raise WorkerError(
+                    f"worker {conn._name} unreachable while redialing a "
+                    "lane with an abandoned request in flight")
             conn.check_usable()
             msg.seq = conn.next_seq()
             self._want[conn] = msg.seq
@@ -261,6 +374,11 @@ class FanoutGroup:
                                else b for b in wire.encode_message(msg)]
             self._out_total[conn] = sum(b.nbytes for b in self._out[conn])
             self._in[conn] = bytearray()
+            # only idempotent reads are ever eligible: the write path never
+            # passes hedgeable=True, so a retry can't double-index a batch
+            if hedgeable and self.hedge is not None \
+                    and self._twin.get(conn) is not None:
+                self._msgs[conn] = msg
         except BaseException:
             self.reset()      # abandon siblings already queued this round
             raise
@@ -300,6 +418,60 @@ class FanoutGroup:
         self._out_total.clear()
         self._in.clear()
         self._replies.clear()
+        self._msgs.clear()
+
+    def _hedge_delay(self, conn: ShardConnection) -> float | None:
+        """Seconds until ``conn``'s request may hedge, or None (never)."""
+        p = self.hedge
+        if p is None or conn not in self._msgs:
+            return None                  # no policy / not a hedgeable read
+        if p.delay_s is not None:
+            return max(float(p.delay_s), 0.0)
+        # the delay derives from reply SKEW — how much later than its
+        # round's first reply each shard lands — and only from the PEER
+        # connections' skew, never conn's own.  Absolute latencies are the
+        # wrong signal twice over: a coordinator-side pause (GC, a compile,
+        # a scheduler hiccup) delays every reply of a round together and
+        # would inflate an absolute-latency percentile into a delay that
+        # never fires, and a stalling shard queues the rounds behind each
+        # stall on its own socket, so its own history grows until it vetoes
+        # its own hedges.  Peer skew is immune to both.  (Single-shard
+        # groups have no peers, hence no skew signal: adaptive mode never
+        # hedges them — set delay_s to hedge a lone shard.)
+        hists = [h for c, h in self._lat_h.items() if c is not conn]
+        total = sum(h.count for h in hists)
+        if not hists or total < p.min_samples:
+            return None                  # no skew signal yet: don't guess
+        counts = [sum(h.counts[i] for h in hists)
+                  for i in range(len(hists[0].counts))]
+        lat = obs_metrics._quantile_from_counts(counts, total, p.quantile)
+        return min(max(p.multiplier * lat, p.min_delay_s), p.max_delay_s)
+
+    def _redial(self, conn: ShardConnection) -> bool:
+        """Reconnect an abandoned lane in place; False when the worker is
+        unreachable right now.
+
+        A lane whose last request was abandoned (its hedge race was lost,
+        or a hedge won its slot) still has that request in flight: the
+        worker's thread for the socket is executing it — and may be
+        sitting in the very stall that was hedged around — so the lane's
+        next request would queue behind exactly the latency hedging
+        exists to cut.  This matters most for PRIMARIES: without the
+        redial, one stalled read blacks the primary lane out for the full
+        stall, every round issued meanwhile must hedge to survive, and
+        each of those hedges gives the twin lane its own chance to stall
+        — the tail failure becomes a correlated burst.  Reconnecting the
+        abandoned lane ends the blackout at the first hedged win.  A lane
+        cut mid-frame (poisoned) is also recovered here: the fresh stream
+        starts frame-aligned with a fresh seq space."""
+        try:
+            conn.reconnect()
+        except TransportError:
+            return False              # worker unreachable: lane stays dirty
+        self._dirty.discard(conn)
+        self.n_redials += 1
+        self._m_redials.inc()
+        return True
 
     # -- the event loop ------------------------------------------------------
     def flush(self) -> None:
@@ -326,20 +498,122 @@ class FanoutGroup:
             return
         self._round_t0 = time.perf_counter()
         deadline = time.monotonic() + self.timeout
+        # hedge bookkeeping, all per-round: when a shard's request hedges,
+        # ``owner`` maps the fired twin leg back to its primary and
+        # ``fired`` the primary to its twin — two legs, one reply slot
+        owner: dict[ShardConnection, ShardConnection] = {}
+        fired: dict[ShardConnection, ShardConnection] = {}
+        hedge_at: dict[ShardConnection, float] = {}
+        unhedged_done: dict[ShardConnection, float] = {}
+        # a FIXED delay arms at round start; the adaptive (skew-derived)
+        # delay arms when the round's FIRST reply lands — "this shard is
+        # late relative to its peers" only exists once a peer has answered,
+        # and a round-start timer would misfire on every coordinator-side
+        # pause that delays the whole round together
+        if self.hedge is not None and self.hedge.delay_s is not None:
+            now = time.monotonic()
+            for conn in pending:
+                d = self._hedge_delay(conn)
+                if d is not None:
+                    hedge_at[conn] = now + d
         sel = selectors.DefaultSelector()
+
+        def _cleanup_leg(conn: ShardConnection) -> None:
+            try:
+                sel.unregister(conn.sock)
+            except (KeyError, ValueError):
+                pass
+            pending.discard(conn)
+            self._out.pop(conn, None)
+            self._out_total.pop(conn, None)
+            self._in.pop(conn, None)
+
+        def _settle_loser(loser: ShardConnection, why: str) -> None:
+            # the other leg won this slot: a loser cut mid-frame can no
+            # longer be framed and is poisoned; fully-sent-nothing-read
+            # stays usable — its late reply is a frame-aligned stale the
+            # seq pairing discards on the connection's next use
+            left = sum(b.nbytes for b in self._out.get(loser, []))
+            if 0 < left < self._out_total.get(loser, 0):
+                loser.mark_broken(f"request frame cut mid-send by {why}")
+            elif len(self._in.get(loser, b"")) and not left:
+                loser.mark_broken(f"reply frame partially consumed by {why}")
+            _cleanup_leg(loser)
+
+        def _fire_hedge(primary: ShardConnection) -> bool:
+            twin = self._twin.get(primary)
+            msg = self._msgs.get(primary)
+            if twin is None or msg is None:
+                return False
+            if (twin.broken or twin in self._dirty) \
+                    and not self._redial(twin):
+                return False          # worker unreachable: no hedge now
+            # same request, re-encoded under the twin's own seq space; the
+            # worker serves both connections, so whichever leg's reply
+            # lands first carries the identical deterministic answer
+            msg.seq = twin.next_seq()
+            self._want[twin] = msg.seq
+            self._out[twin] = [b if isinstance(b, memoryview)
+                               else memoryview(b)
+                               for b in wire.encode_message(msg)]
+            self._out_total[twin] = sum(b.nbytes for b in self._out[twin])
+            self._in[twin] = bytearray()
+            twin.sock.setblocking(False)
+            sel.register(twin.sock, selectors.EVENT_WRITE, twin)
+            pending.add(twin)
+            owner[twin] = primary
+            fired[primary] = twin
+            self.n_hedges += 1
+            self._m_hedges.inc()
+            return True
+
+        def _leg_failed(conn: ShardConnection, err: BaseException) -> bool:
+            """One leg's stream broke mid-round.  True when the slot
+            survives on the other leg (possibly a hedge fired right now) —
+            the failed leg is poisoned and retired; False when the failure
+            is terminal and the round must die."""
+            primary = owner.get(conn)
+            if primary is not None:          # the hedge leg died: drop it
+                conn.mark_broken(
+                    f"hedge leg failed: {type(err).__name__}")
+                _cleanup_leg(conn)
+                return primary in pending or primary in self._replies
+            twin = fired.get(conn)
+            live = twin is not None and twin in pending
+            if not live and fired.get(conn) is None:
+                live = _fire_hedge(conn)     # failure-triggered hedge
+            if not live:
+                return False
+            conn.mark_broken(
+                f"stream failed mid-fan-out: {type(err).__name__}")
+            _cleanup_leg(conn)
+            return True
+
         try:
             for conn in pending:
                 conn.sock.setblocking(False)
                 sel.register(conn.sock, selectors.EVENT_WRITE, conn)
             while pending:
-                budget = deadline - time.monotonic()
+                now = time.monotonic()
+                budget = deadline - now
                 if budget <= 0:
                     self._m_timeout.inc()
+                    waiting = {owner.get(c, c) for c in pending}
                     names = sorted(f"{c._name} (seq={self._want.get(c)})"
-                                   for c in pending)
+                                   for c in waiting)
                     raise TransportTimeout(
-                        f"fan-out timed out after {self.timeout}s waiting on "
+                        f"fan-out timed out after {self.timeout}s "
+                        f"({self._deadline_name}) waiting on "
                         f"{len(names)} shard(s): {', '.join(names)}")
+                for c in [c for c, t in hedge_at.items()
+                          if t <= now and c in pending and c not in fired]:
+                    if not _fire_hedge(c):
+                        hedge_at.pop(c, None)      # twin unusable: give up
+                nxt = min((t for c, t in hedge_at.items()
+                           if c in pending and c not in fired),
+                          default=None)
+                if nxt is not None:
+                    budget = min(budget, max(nxt - now, 0.0) + 1e-4)
                 for key, _ in sel.select(budget):
                     conn = key.data
                     if conn not in pending:
@@ -350,20 +624,75 @@ class FanoutGroup:
                         else:
                             self._pump_recv(sel, conn)
                     except wire.WireError as e:
-                        raise WorkerError(
-                            f"worker {conn._name} broke the stream: "
-                            f"{type(e).__name__}: {e}") from e
+                        if not _leg_failed(conn, e):
+                            raise WorkerError(
+                                f"worker {conn._name} broke the stream: "
+                                f"{type(e).__name__}: {e}") from e
+                        continue
                     except OSError as e:
-                        raise WorkerError(
-                            f"worker {conn._name} connection failed: "
-                            f"{e}") from e
+                        if not _leg_failed(conn, e):
+                            raise WorkerError(
+                                f"worker {conn._name} connection failed: "
+                                f"{e}") from e
+                        continue
                     if conn in self._replies:
-                        sel.unregister(conn.sock)
-                        pending.discard(conn)
+                        _cleanup_leg(conn)
+                        primary = owner.get(conn)
+                        if primary is not None:      # the hedge leg won
+                            self._replies[primary] = self._replies.pop(conn)
+                            self._reply_lat[primary] = \
+                                self._reply_lat.pop(conn)
+                            self.n_hedge_wins += 1
+                            self._m_hedge_wins.inc()
+                            if primary in pending:
+                                # the primary's abandoned request is still
+                                # being served (likely mid-stall): retire
+                                # the whole lane so the NEXT round starts
+                                # on a fresh one instead of queueing behind
+                                # the remainder of the stall
+                                self._dirty.add(primary)
+                                _settle_loser(primary, "a hedged win")
+                        else:
+                            # only unhedged primary wins feed the skew
+                            # signal (collected here, skews recorded once
+                            # the round completes): a hedged win's latency
+                            # includes the hedge delay and would inflate
+                            # future delays
+                            lat = self._reply_lat.get(conn)
+                            if lat is not None and conn in self._lat_h:
+                                unhedged_done[conn] = lat
+                            twin = fired.get(conn)
+                            if twin is not None and twin in pending:
+                                # the worker is still serving the abandoned
+                                # hedge on this lane: redial before reuse
+                                self._dirty.add(twin)
+                                _settle_loser(twin, "the primary winning")
+                        if self.hedge is not None \
+                                and self.hedge.delay_s is None \
+                                and not hedge_at:
+                            # first reply of the round landed: arm the
+                            # skew timers for everyone still pending
+                            now = time.monotonic()
+                            for c in pending:
+                                if c in owner:       # hedge legs never hedge
+                                    continue
+                                d = self._hedge_delay(c)
+                                if d is not None:
+                                    hedge_at[c] = now + d
             self._h_round.observe(time.perf_counter() - self._round_t0)
+            if len(unhedged_done) > 1:
+                # skew = lateness vs the round's fastest unhedged reply;
+                # the 1us floor keeps the fastest shard's "zero" inside
+                # the histogram's bucket range
+                base = min(unhedged_done.values())
+                for c, lat in unhedged_done.items():
+                    self._lat_h[c].observe(max(lat - base, 1e-6))
         finally:
+            # hedge legs still pending when the round ends (it died, or the
+            # primary won) have abandoned requests in flight server-side
+            self._dirty.update(c for c in pending if c in owner)
             sel.close()
-            for conn in self.conns:
+            for conn in self.conns + list(self._twin.values()):
                 try:
                     conn.sock.setblocking(True)
                     conn.sock.settimeout(conn.timeout)
@@ -446,14 +775,18 @@ class FanoutGroup:
     def close(self) -> None:
         for conn in self.conns:
             conn.close()
+        for conn in self._twin.values():
+            conn.close()
 
 
 class RemoteShard:
     """``ShardBackend`` over one shard worker (see ``store.sharded``)."""
 
-    def __init__(self, conn: ShardConnection, group: FanoutGroup):
+    def __init__(self, conn: ShardConnection, group: FanoutGroup,
+                 hedge_conn: ShardConnection | None = None):
         self.conn = conn
         self.group = group
+        self.hedge_conn = hedge_conn
 
     @staticmethod
     def _traced(fields: dict) -> dict:
@@ -493,18 +826,21 @@ class RemoteShard:
                                  reset_on_error=False)
 
     # -- the query fan-out ---------------------------------------------------
+    # both reads are hedgeable: re-asking the same worker the same
+    # deterministic question is idempotent, so a duplicate can only cost
+    # compute, never change an answer or the store
     def start_query(self, hashes: np.ndarray, qwords: np.ndarray,
                     top_k: int, mode: str) -> _Pending:
         lo, hi = wire.split_u64(hashes)
         return self.group.submit(self.conn, Message(MsgType.QUERY, self._traced({
             "hash_lo": lo, "hash_hi": hi,
             "qwords": np.ascontiguousarray(qwords, np.uint32),
-            "top_k": int(top_k), "mode": mode})))
+            "top_k": int(top_k), "mode": mode})), hedgeable=True)
 
     def start_brute(self, qwords: np.ndarray, top_k: int) -> _Pending:
         return self.group.submit(self.conn, Message(MsgType.BRUTE, self._traced({
             "qwords": np.ascontiguousarray(qwords, np.uint32),
-            "top_k": int(top_k)})))
+            "top_k": int(top_k)})), hedgeable=True)
 
     # -- control -------------------------------------------------------------
     def stats(self) -> dict:
@@ -520,6 +856,8 @@ class RemoteShard:
 
     def close(self) -> None:
         self.conn.close()
+        if self.hedge_conn is not None:
+            self.hedge_conn.close()
 
 
 def shutdown_plane(store, handles, *, join_timeout: float = 10.0) -> bool:
@@ -549,7 +887,9 @@ def shutdown_plane(store, handles, *, join_timeout: float = 10.0) -> bool:
 
 def connect_sharded(addresses, cfg=None, *, snapshot_dir: str | None = None,
                     partition: str = "round_robin", query_impl: str = "auto",
-                    timeout: float = 30.0) -> ShardedSketchStore:
+                    timeout: float = 30.0,
+                    hedge: "HedgePolicy | bool | None" = None,
+                    ) -> ShardedSketchStore:
     """Build a tcp-backed ``ShardedSketchStore`` over worker ``addresses``.
 
     Fresh plane: pass the workers' ``StoreConfig`` as ``cfg``.  Snapshot
@@ -560,13 +900,32 @@ def connect_sharded(addresses, cfg=None, *, snapshot_dir: str | None = None,
     ``query_impl`` steers only the COORDINATOR's one broadcast band-hash
     fold; each worker's probe/score legs follow the knob it was spawned
     with (``spawn_workers(query_impl=...)``).
+
+    ``timeout`` is the effective query deadline — ``SearchConfig`` plumbs
+    it here as ``query_timeout_s``, and ``TransportTimeout`` messages name
+    it.  ``hedge`` enables hedged reads: a ``HedgePolicy`` (or ``True``
+    for the defaults) opens a second connection per worker for the group's
+    late-reply re-issues.
     """
+    if hedge is True:
+        hedge = HedgePolicy()
+    elif hedge is False:
+        hedge = None
     conns: list[ShardConnection] = []
+    twins: dict[ShardConnection, ShardConnection] = {}
     try:
         for a in addresses:
-            conns.append(ShardConnection(a, timeout=timeout))
-        group = FanoutGroup(conns, timeout=timeout)
-        backends = [RemoteShard(c, group) for c in conns]
+            conns.append(ShardConnection(a, timeout=timeout,
+                                         deadline_name="query_timeout_s"))
+        if hedge is not None:
+            for c in conns:
+                twins[c] = ShardConnection(c.address, timeout=timeout,
+                                           deadline_name="query_timeout_s")
+        group = FanoutGroup(conns, timeout=timeout, hedge=hedge,
+                            hedge_conns=twins,
+                            deadline_name="query_timeout_s")
+        backends = [RemoteShard(c, group, hedge_conn=twins.get(c))
+                    for c in conns]
         if snapshot_dir is not None:
             store = ShardedSketchStore.load(snapshot_dir, backends=backends,
                                             query_impl=query_impl)
@@ -590,6 +949,6 @@ def connect_sharded(addresses, cfg=None, *, snapshot_dir: str | None = None,
                     "snapshot_dir (or none) for these workers?")
         return store
     except BaseException:
-        for c in conns:        # no fd leak when a later step fails
+        for c in conns + list(twins.values()):  # no fd leak on failure
             c.close()
         raise

@@ -14,12 +14,27 @@ per-shard snapshot written by ``ShardedSketchStore.save``.  The bound
 address travels back to the parent over a one-shot pipe so workers can bind
 port 0 and never race over port numbers.
 
+Connections are served one thread each, so a coordinator may hold more than
+one connection to the same worker — which is what makes hedged queries
+(``client.HedgePolicy``) work: a hedge re-issue on the second connection is
+accepted and answered even while the primary connection is stalled.  The
+``SketchStore`` itself is not thread-safe, so actual request *handling* is
+serialized behind one worker-wide lock; the concurrency buys bypass of
+head-of-line stalls that happen outside the store (socket backlog, a
+dropped reply, the injected-slowness sleep below), which is exactly the
+class of stall hedging targets.
+
 Failure semantics: a handler exception is caught and answered with an ERROR
 frame (the connection stays up); a protocol-level decode failure (bad
 checksum, truncated frame) also gets an ERROR frame but then drops the
 connection, since the stream can no longer be trusted to be in sync.  EOF
 from the client returns the worker to ``accept`` — a coordinator can
 reconnect.  Only SHUTDOWN (acked first) exits the process.
+
+``spawn_workers(slow_shards=...)`` injects probabilistic latency into a
+worker's QUERY/BRUTE handling (a pre-handle sleep) — the reproducible
+"one slow shard" scenario the hedging benchmarks and CI smoke use to
+demonstrate tail-latency cuts without relying on a noisy host.
 """
 
 from __future__ import annotations
@@ -27,8 +42,10 @@ from __future__ import annotations
 import json
 import multiprocessing
 import os
+import random
 import select
 import socket
+import threading
 import time
 import traceback
 
@@ -104,9 +121,22 @@ def _handle(store: SketchStore, msg: Message,
 
 
 def _serve_conn(store: SketchStore, conn: socket.socket,
-                shard: int = -1) -> bool:
-    """Serve one coordinator connection.  Returns False when SHUTDOWN."""
+                shard: int = -1, *,
+                exec_lock: threading.Lock | None = None,
+                slow: tuple[float, float] | None = None) -> bool:
+    """Serve one coordinator connection.  Returns False when SHUTDOWN.
+
+    ``exec_lock`` serializes handler execution across this worker's
+    connection threads (the store is single-threaded code).  ``slow`` is
+    ``(prob, sleep_s)`` injected latency: each QUERY/BRUTE independently
+    sleeps ``sleep_s`` with probability ``prob`` *before* taking the lock,
+    so a hedged re-issue of the same request gets a fresh draw and can
+    overtake a sleeping primary.
+    """
     conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    if exec_lock is None:
+        exec_lock = threading.Lock()
+    rng = random.Random()
     reg = obs_metrics.default()
     tracer = obs_trace.default()
     bytes_in = reg.counter("worker.bytes_in")
@@ -136,12 +166,16 @@ def _serve_conn(store: SketchStore, conn: socket.socket,
         if wire.TRACE_ID_FIELD in msg.fields:
             ctx = obs_trace.TraceCtx(int(msg.fields[wire.TRACE_ID_FIELD]),
                                      int(msg.fields[wire.TRACE_PARENT_FIELD]))
+        if slow is not None and msg.type in (MsgType.QUERY, MsgType.BRUTE) \
+                and rng.random() < slow[0]:
+            time.sleep(slow[1])
         t0 = time.perf_counter()
         try:
             # with no ctx (and the worker tracer's sample rate of 0) this
             # returns the shared no-op span — untraced requests pay nothing
             with tracer.span(f"worker.{msg.type.name.lower()}", parent=ctx):
-                reply, keep = _handle(store, msg, shard)
+                with exec_lock:
+                    reply, keep = _handle(store, msg, shard)
         except Exception as e:                   # worker-side op failure
             errors.inc()
             reply, keep = Message(MsgType.ERROR, {
@@ -160,7 +194,7 @@ def _serve_conn(store: SketchStore, conn: socket.socket,
             return keep    # client vanished before reading: back to accept
         if not keep:
             return False
-        # queue-depth proxy for a single-threaded worker: another request
+        # queue-depth proxy for a serial connection: another request
         # already readable the moment we finish one means the coordinator
         # is ahead of us — each such observation is one backlogged request
         try:
@@ -172,12 +206,15 @@ def _serve_conn(store: SketchStore, conn: socket.socket,
 
 def run_worker(ready_conn, cfg: StoreConfig | None, snapshot: str | None,
                probe_impl: str, host: str, port: int,
-               shard: int = -1, query_impl: str = "auto") -> None:
+               shard: int = -1, query_impl: str = "auto",
+               slow: tuple[float, float] | None = None) -> None:
     """Worker entry point (spawn target — all arguments picklable).
 
     Boots a ``SketchStore`` (empty from ``cfg``, or from ``snapshot``),
     binds ``(host, port)`` (port 0 = ephemeral), reports the bound address
-    through ``ready_conn``, and serves until SHUTDOWN.
+    through ``ready_conn``, and serves until SHUTDOWN.  Each accepted
+    connection gets its own serving thread (see ``_serve_conn`` for the
+    locking discipline); ``slow`` injects probabilistic read latency.
 
     ``probe_impl="auto"`` and ``query_impl="auto"`` are resolved HERE,
     against this worker's own jax backend — not the coordinator's — so a
@@ -211,14 +248,41 @@ def run_worker(ready_conn, cfg: StoreConfig | None, snapshot: str | None,
     try:
         lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         lsock.bind((host, port))
-        lsock.listen(4)
+        lsock.listen(8)
         ready_conn.send(lsock.getsockname())
         ready_conn.close()
-        while True:
-            conn, _ = lsock.accept()
-            with conn:
-                if not _serve_conn(store, conn, shard):
-                    return
+        stop = threading.Event()
+        exec_lock = threading.Lock()
+
+        def _serve(conn: socket.socket) -> None:
+            try:
+                with conn:
+                    if not _serve_conn(store, conn, shard,
+                                       exec_lock=exec_lock, slow=slow):
+                        stop.set()
+            except ConnectionResetError:
+                # normal for a hedge twin: the coordinator closes it with an
+                # unread stale reply still buffered, which surfaces as RST
+                pass
+            except Exception:
+                # a crashed serving thread must not take the worker down:
+                # the coordinator sees the dropped connection and reacts
+                # (mark_broken / TransportError); other connections live on
+                traceback.print_exc()
+
+        threads: list[threading.Thread] = []
+        lsock.settimeout(0.25)       # bounded accept so SHUTDOWN is noticed
+        while not stop.is_set():
+            try:
+                conn, _ = lsock.accept()
+            except socket.timeout:
+                continue
+            t = threading.Thread(target=_serve, args=(conn,), daemon=True,
+                                 name=f"serve-shard{shard}")
+            t.start()
+            threads.append(t)
+        for t in threads:
+            t.join(5)
     finally:
         lsock.close()
 
@@ -253,13 +317,18 @@ class WorkerHandle:
 def spawn_workers(cfg: StoreConfig | None, n_shards: int, *,
                   snapshot_dir: str | None = None, probe_impl: str = "auto",
                   query_impl: str = "auto", host: str = "127.0.0.1",
-                  start_timeout: float = 120.0) -> list[WorkerHandle]:
+                  start_timeout: float = 120.0,
+                  slow_shards: dict[int, tuple[float, float]] | None = None,
+                  ) -> list[WorkerHandle]:
     """Spawn ``n_shards`` shard workers on localhost; returns their handles.
 
     Workers start in parallel (the dominant cost is each spawn re-importing
     jax) and each reports its ephemeral port back before this returns.  With
     ``snapshot_dir``, worker ``i`` boots from ``shard_{i}.npz`` inside it
     (the ``ShardedSketchStore.save`` layout) instead of empty from ``cfg``.
+
+    ``slow_shards`` maps shard index -> ``(prob, sleep_s)`` injected read
+    latency (the hedging benchmarks' reproducible slow-shard scenario).
     """
     ctx = multiprocessing.get_context("spawn")
     started = []
@@ -270,7 +339,8 @@ def spawn_workers(cfg: StoreConfig | None, n_shards: int, *,
             parent, child = ctx.Pipe(duplex=False)
             proc = ctx.Process(
                 target=run_worker,
-                args=(child, cfg, snap, probe_impl, host, 0, i, query_impl),
+                args=(child, cfg, snap, probe_impl, host, 0, i, query_impl,
+                      slow_shards.get(i) if slow_shards else None),
                 daemon=True, name=f"shard-worker-{i}")
             proc.start()
             child.close()

@@ -1,0 +1,227 @@
+"""Streaming query plane: admission queue + pipelined batch execution.
+
+The acceptance contract: a query answered through ``StreamingQueryService``
+is **bit-identical** to the same query answered alone through
+``SimilaritySearchService.query_sparse`` — whatever batch it was coalesced
+into, at any pipeline depth, with mixed per-query top_k, and including
+rows that ride the brute-force-fallback leg.  Plus admission semantics: a
+full batch flushes immediately, a lone query flushes at the deadline (no
+arrival-dependent starvation), close() answers everything admitted, and a
+batch's failure rejects its own tickets without killing the coalescer.
+
+Most tests run on the in-process plane (no worker spawns); one end-to-end
+test streams over real tcp workers with an injected-slow shard and hedged
+reads, asserting parity AND that hedges actually fired.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.obs import metrics as obs_metrics
+from repro.serve.search import SearchConfig, SimilaritySearchService
+
+D, K, NB, R = 1 << 13, 64, 16, 4
+NNZ = 32
+
+
+def _docs(n, seed=0, lo=0, hi=D):
+    rng = np.random.default_rng(seed)
+    return np.sort(rng.integers(lo, hi, (n, NNZ), np.int32), axis=1)
+
+
+def _service(n_shards=2, **kw):
+    return SimilaritySearchService(SearchConfig(
+        d=D, k=K, n_bands=NB, rows_per_band=R, n_shards=n_shards, **kw))
+
+
+@pytest.fixture(scope="module")
+def plane():
+    """One shared inproc plane: 256 indexed docs + queries mixing indexed
+    rows with novel rows (novel rows over a tiny corpus are how the global
+    brute-force fallback triggers)."""
+    svc = _service()
+    docs = _docs(256, seed=3)
+    svc.add_sparse(docs)
+    q = np.concatenate([docs[:12], _docs(4, seed=7)])
+    yield svc, q
+    svc.close()
+
+
+def _alone(svc, row, top_k):
+    ids, scores = svc.query_sparse(row[None], top_k=top_k)
+    return ids[0], scores[0]
+
+
+def test_coalesced_equals_alone(plane):
+    """Every ticket == the same query run alone, across mixed top_k and
+    novel (fallback) rows, regardless of batch composition."""
+    svc, q = plane
+    with svc.stream(max_batch=8, max_delay_ms=5.0) as st:
+        tickets = [st.submit_sparse(q[i], top_k=(3 if i % 2 else 7))
+                   for i in range(len(q))]
+        results = [t.result(timeout=60) for t in tickets]
+    for i, (ids, scores) in enumerate(results):
+        want_ids, want_scores = _alone(svc, q[i], 3 if i % 2 else 7)
+        assert np.array_equal(ids, want_ids), f"ids diverge at query {i}"
+        assert np.array_equal(scores, want_scores)
+        assert ids.shape == (3 if i % 2 else 7,)
+
+
+@pytest.mark.parametrize("s", [1, 2, 4])
+def test_shard_counts_never_change_answers(s):
+    """Streamed == alone at S in {1, 2, 4} (the sharded-vs-single parity
+    contract extended through the admission queue)."""
+    svc = _service(n_shards=s)
+    try:
+        docs = _docs(128, seed=s)
+        svc.add_sparse(docs)
+        q = np.concatenate([docs[:6], _docs(2, seed=s + 50)])
+        with svc.stream(max_batch=4, max_delay_ms=2.0) as st:
+            tickets = [st.submit_sparse(row, top_k=4) for row in q]
+            results = [t.result(timeout=60) for t in tickets]
+        for i, (ids, scores) in enumerate(results):
+            want_ids, want_scores = _alone(svc, q[i], 4)
+            assert np.array_equal(ids, want_ids), f"S={s} query {i}"
+            assert np.array_equal(scores, want_scores)
+    finally:
+        svc.close()
+
+
+@pytest.mark.parametrize("depth", [1, 2, 4])
+def test_depth_never_changes_answers(plane, depth):
+    svc, q = plane
+    with svc.stream(max_batch=4, max_delay_ms=1.0, depth=depth) as st:
+        tickets = [st.submit_sparse(row, top_k=5) for row in q]
+        results = [t.result(timeout=60) for t in tickets]
+    for i, (ids, scores) in enumerate(results):
+        want_ids, want_scores = _alone(svc, q[i], 5)
+        assert np.array_equal(ids, want_ids), f"depth={depth} query {i}"
+        assert np.array_equal(scores, want_scores)
+
+
+def test_full_batch_flushes_without_deadline(plane):
+    """max_batch arrivals flush immediately — the (absurd) deadline is
+    never the thing that releases them."""
+    svc, q = plane
+    reg = obs_metrics.default()
+    full0 = reg.counter("stream.flush.full").value
+    t0 = time.perf_counter()
+    with svc.stream(max_batch=8, max_delay_ms=60_000.0) as st:
+        tickets = [st.submit_sparse(q[i % len(q)]) for i in range(8)]
+        for t in tickets:
+            t.result(timeout=60)
+    assert time.perf_counter() - t0 < 30          # not the 60 s deadline
+    assert reg.counter("stream.flush.full").value == full0 + 1
+    assert st.n_batches == 1
+
+
+def test_lone_query_flushes_at_deadline(plane):
+    """A single query is answered after max_delay_ms with NO further
+    arrivals — deadline flush is what prevents starvation."""
+    svc, q = plane
+    reg = obs_metrics.default()
+    dl0 = reg.counter("stream.flush.deadline").value
+    with svc.stream(max_batch=64, max_delay_ms=20.0) as st:
+        t = st.submit_sparse(q[0], top_k=4)
+        ids, scores = t.result(timeout=60)
+    assert reg.counter("stream.flush.deadline").value == dl0 + 1
+    assert t.latency_s >= 0.020                   # it did wait the deadline
+    want_ids, want_scores = _alone(svc, q[0], 4)
+    assert np.array_equal(ids, want_ids)
+    assert np.array_equal(scores, want_scores)
+
+
+def test_incompatible_shape_flushes_prefix(plane):
+    """A row with a different nnz can't stack with the queue in front of
+    it: the prefix flushes, both still answer exactly."""
+    svc, q = plane
+    wide = np.sort(np.random.default_rng(9).integers(
+        0, D, (NNZ * 2,), np.int32))
+    reg = obs_metrics.default()
+    sh0 = reg.counter("stream.flush.shape").value
+    with svc.stream(max_batch=64, max_delay_ms=50.0) as st:
+        a = st.submit_sparse(q[0], top_k=5)
+        b = st.submit_sparse(wide, top_k=5)
+        ra = a.result(timeout=60)
+        rb = b.result(timeout=60)
+    assert reg.counter("stream.flush.shape").value == sh0 + 1
+    assert np.array_equal(ra[0], _alone(svc, q[0], 5)[0])
+    assert np.array_equal(rb[0], _alone(svc, wide, 5)[0])
+
+
+def test_close_flushes_everything_and_rejects_late(plane):
+    svc, q = plane
+    st = svc.stream(max_batch=64, max_delay_ms=60_000.0)
+    tickets = [st.submit_sparse(row, top_k=3) for row in q[:5]]
+    st.close()                      # no deadline ever fired: close drains
+    for i, t in enumerate(tickets):
+        assert t.done
+        ids, _ = t.result(timeout=0)
+        assert np.array_equal(ids, _alone(svc, q[i], 3)[0])
+    with pytest.raises(RuntimeError, match="closed"):
+        st.submit_sparse(q[0])
+    st.close()                      # idempotent
+
+
+def test_batch_failure_rejects_only_its_tickets():
+    """Queries against an empty index fail; the rejection carries the
+    service's error and the coalescer keeps serving afterwards."""
+    svc = _service(n_shards=1)
+    try:
+        docs = _docs(64, seed=5)
+        with svc.stream(max_batch=4, max_delay_ms=2.0) as st:
+            bad = st.submit_sparse(docs[0], top_k=3)
+            with pytest.raises(ValueError, match="empty"):
+                bad.result(timeout=60)
+            svc.add_sparse(docs)    # now the same stream must recover
+            good = st.submit_sparse(docs[0], top_k=3)
+            ids, _ = good.result(timeout=60)
+        assert np.array_equal(ids, _alone(svc, docs[0], 3)[0])
+    finally:
+        svc.close()
+
+
+def test_submit_rejects_batches():
+    service = _service(n_shards=1)
+    try:
+        with service.stream() as st:
+            with pytest.raises(ValueError, match="ONE query"):
+                st.submit_sparse(_docs(2, seed=1))
+    finally:
+        service.close()
+
+
+def test_stream_over_tcp_with_hedged_slow_shard():
+    """End to end at the smallest real scale: tcp workers, one shard
+    sleeping on most reads, hedged twin connections — streamed answers stay
+    bit-identical to the batch reference and the hedges actually fire."""
+    from repro.store.store import StoreConfig
+    from repro.transport import HedgePolicy, connect_sharded, spawn_workers
+
+    docs = _docs(200, seed=11)
+    q = np.concatenate([docs[:8], _docs(3, seed=13)])
+    cfg = SearchConfig(d=D, k=K, n_bands=NB, rows_per_band=R, n_shards=2,
+                       transport="tcp")
+    store_cfg = StoreConfig(k=K, n_bands=NB, rows_per_band=R)
+    workers = spawn_workers(store_cfg, 2, slow_shards={1: (0.8, 0.02)})
+    try:
+        store = connect_sharded([h.address for h in workers], store_cfg,
+                                timeout=60, hedge=HedgePolicy(delay_s=0.004))
+        svc = SimilaritySearchService(cfg, store=store, workers=workers)
+        svc.add_sparse(docs)
+        ref = svc.query_sparse(q, top_k=5)
+        with svc.stream(max_batch=4, max_delay_ms=2.0) as st:
+            for rep in range(4):    # several rounds so hedges get chances
+                tickets = [st.submit_sparse(row, top_k=5) for row in q]
+                for i, t in enumerate(tickets):
+                    ids, scores = t.result(timeout=120)
+                    assert np.array_equal(ids, ref[0][i]), f"query {i}"
+                    assert np.array_equal(scores, ref[1][i])
+        group = store.shards[0].group
+        assert group.n_hedges > 0, "slow shard never triggered a hedge"
+        svc.close()                 # also shuts the workers down
+    finally:
+        for h in workers:
+            h.terminate()

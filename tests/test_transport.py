@@ -381,6 +381,111 @@ def test_worker_survives_client_hangup_mid_reply():
             h.terminate()
 
 
+def test_hedged_reads_bit_identical_and_win():
+    """With one shard sleeping on most of its reads, hedged twin reads must
+    (a) fire, (b) win some races, and (c) never change a single bit of any
+    answer — the losing leg's late reply is discarded by seq, not merged."""
+    from repro.transport import HedgePolicy
+
+    sigs = _corpus(seed=21)
+    q = _queries(sigs, seed=22)
+    cfg = StoreConfig(k=K, n_bands=NB, rows_per_band=R)
+    single = SketchStore(cfg)
+    single.add(sigs)
+    want = single.query(q, top_k=5)
+    handles = spawn_workers(cfg, 2, slow_shards={1: (0.8, 0.03)})
+    try:
+        tcp = connect_sharded([h.address for h in handles], cfg, timeout=60,
+                              hedge=HedgePolicy(delay_s=0.005))
+        tcp.add(sigs)
+        for _ in range(15):
+            got = tcp.query(q, top_k=5)
+            assert np.array_equal(want[0], got[0])
+            assert np.array_equal(want[1], got[1])
+        g = tcp.shards[0].group
+        assert g.n_hedges > 0, "slow shard never triggered a hedge"
+        assert g.n_hedge_wins > 0, "no hedge ever beat a 30 ms stall"
+        _shutdown(tcp, handles)
+    finally:
+        for h in handles:
+            h.terminate()
+
+
+def test_hedge_delay_derives_from_peer_skew():
+    """The adaptive delay for a shard comes from its PEERS' reply-skew
+    histograms, never its own: a stalling shard's own percentiles are
+    inflated by rounds queued behind each stall, and a self-derived delay
+    would grow past the stall and veto the very hedge that should cut it.
+    (``FanoutGroup``'s ctor never touches sockets, so plain objects stand
+    in for connections.)"""
+    from repro.transport import HedgePolicy
+    from repro.transport.client import FanoutGroup
+
+    slow, fast1, fast2 = object(), object(), object()
+    g = FanoutGroup([slow, fast1, fast2], hedge=HedgePolicy(),
+                    hedge_conns={slow: object(), fast1: object(),
+                                 fast2: object()})
+    for _ in range(40):                 # peers land ~2 ms after the fastest
+        g._lat_h[fast1].observe(0.002)
+        g._lat_h[fast2].observe(0.002)
+        g._lat_h[slow].observe(0.5)     # the slow shard skews 500 ms
+    g._msgs = {slow: object(), fast1: object()}   # hedgeable this round
+    d = g._hedge_delay(slow)
+    assert d is not None and d < 0.05, \
+        f"slow shard's own history leaked into its delay (got {d})"
+    # the healthy shard's delay sees the slow peer's fat tail — that only
+    # makes its hedges rarer, never wrong
+    assert g._hedge_delay(fast1) is not None
+    assert g._hedge_delay(fast2) is None          # not hedgeable this round
+    # a single-connection group has no peers, hence no skew signal: the
+    # adaptive mode never hedges it (a fixed delay_s still would)
+    lone = FanoutGroup([slow], hedge=HedgePolicy(),
+                       hedge_conns={slow: object()})
+    lone._msgs = {slow: object()}
+    for _ in range(40):
+        lone._lat_h[slow].observe(0.002)
+    assert lone._hedge_delay(slow) is None
+
+
+def test_writes_never_hedge():
+    """ADD is not idempotent: even with an immediate hedge delay, only the
+    read path (QUERY/BRUTE) may re-issue on the twin connection."""
+    from repro.transport import HedgePolicy
+
+    sigs = _corpus(n=80, dup_pairs=0)
+    cfg = StoreConfig(k=K, n_bands=NB, rows_per_band=R)
+    handles = spawn_workers(cfg, 2, slow_shards={0: (1.0, 0.02)})
+    try:
+        tcp = connect_sharded([h.address for h in handles], cfg, timeout=60,
+                              hedge=HedgePolicy(delay_s=0.0))
+        g = tcp.shards[0].group
+        tcp.add(sigs)
+        tcp.add(_corpus(n=40, seed=5, dup_pairs=0))
+        assert g.n_hedges == 0, "a write was hedged"
+        tcp.query(sigs[:4], top_k=3)           # every read stalls 20 ms:
+        assert g.n_hedges > 0                  # delay-0 hedges must fire
+        _shutdown(tcp, handles)
+    finally:
+        for h in handles:
+            h.terminate()
+
+
+def test_query_timeout_error_names_the_knob():
+    """A fan-out deadline on the query path tells the operator WHICH
+    deadline expired (``query_timeout_s``), not just that one did."""
+    sigs = _corpus(n=60, dup_pairs=0)
+    cfg = StoreConfig(k=K, n_bands=NB, rows_per_band=R)
+    handles = spawn_workers(cfg, 1, slow_shards={0: (1.0, 2.0)})
+    try:
+        tcp = connect_sharded([h.address for h in handles], cfg, timeout=0.5)
+        tcp.add(sigs)                          # writes are never slowed
+        with pytest.raises(TransportError, match="query_timeout_s"):
+            tcp.query(sigs[:2], top_k=3)
+    finally:
+        for h in handles:
+            h.terminate()
+
+
 def test_worker_error_propagates_with_message():
     """A worker-side exception comes back as WorkerError carrying the
     worker's own message, and the worker keeps serving afterwards."""
