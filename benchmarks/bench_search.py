@@ -397,6 +397,121 @@ def _bench_stream_open_loop(em, *, transports: tuple[str, ...],
        f"cut={p99['unhedged'] / max(p99['hedged'], 1e-9):.1f}x")
 
 
+def _bench_availability(em, *, n_docs: int, n_queries: int, rounds: int,
+                        kill_round: int, k: int = 128, n_bands: int = 32,
+                        rows_per_band: int = 4) -> None:
+    """Availability axis: the same mid-traffic kill, unreplicated vs
+    replicated.
+
+    Both planes are S=2 tcp; a worker serving shard 0 is terminated while
+    query rounds are in flight.  The unreplicated row records the outage —
+    every round from the kill on fails until an operator rebuilds the
+    plane (the pre-PR-9 behavior, measured, not asserted).  The replicated
+    row (R=2 + write-ahead ingest journal + supervisor) must answer EVERY
+    round bit-identically to the single-store reference: it records the
+    p99 across all rounds INCLUDING the kill instant (the in-round
+    failover's price) and the measured recovery time from the kill to the
+    supervisor's digest-verified rejoin restoring R=2.
+    """
+    import tempfile
+
+    from repro.replica import (IngestJournal, Supervisor, connect_replicated,
+                               spawn_replicated)
+    from repro.transport import (TransportError, connect_sharded,
+                                 shutdown_plane, spawn_workers)
+
+    cfg = StoreConfig.sized_for(-(-n_docs // 2), k=k, n_bands=n_bands,
+                                rows_per_band=rows_per_band, bucket_width=4)
+    rng = np.random.default_rng(17)
+    sigs = rng.integers(0, 1 << 20, (n_docs, k), dtype=np.int32)
+    qsigs = sigs[rng.choice(n_docs, n_queries, replace=False)]
+    ref_store = SketchStore(cfg)
+    ref_store.add(sigs)
+    ref = ref_store.query(qsigs, top_k=10)
+
+    # -- unreplicated S=2: the kill is an outage ----------------------------
+    handles = spawn_workers(cfg, 2)
+    sh = None
+    lat, failed = [], 0
+    try:
+        sh = connect_sharded([h.address for h in handles], cfg)
+        sh.add(sigs)
+        sh.query(qsigs, top_k=10)          # warm the shape
+        for i in range(rounds):
+            if i == kill_round:
+                handles[0].terminate()
+            t0 = time.perf_counter()
+            try:
+                ids, scores = sh.query(qsigs, top_k=10)
+                assert np.array_equal(ids, ref[0]), "unreplicated parity"
+                lat.append(time.perf_counter() - t0)
+            except TransportError:
+                failed += 1                # down until an operator rebuilds
+    finally:
+        if sh is not None:
+            shutdown_plane(sh, handles)
+        else:
+            for h in handles:
+                h.terminate()
+    p99u = float(np.percentile(lat, 99)) * 1e3 if lat else float("nan")
+    em("search_avail_tcp_s2_unreplicated",
+       float(np.mean(lat)) * 1e6 if lat else 0.0,
+       f"rounds={rounds}|killed_round={kill_round}|failed_rounds={failed}|"
+       f"p99_ms={p99u:.2f}|recovered=no|outage=until_operator_rebuild")
+
+    # -- replicated S=2 x R=2: zero failed rounds, measured recovery --------
+    with tempfile.TemporaryDirectory() as tdir:
+        journal = IngestJournal(f"{tdir}/ingest.journal")
+        grid = spawn_replicated(cfg, 2, 2)
+        store = sup = None
+        lat, t_kill, t_rec = [], None, None
+        try:
+            store = connect_replicated(grid, cfg, journal=journal)
+            sup = Supervisor(store, interval_s=0.2)
+            sup.start()                    # heals concurrently with serving
+            store.add(sigs)
+            store.query(qsigs, top_k=10)   # warm the shape
+            for i in range(rounds):
+                if i == kill_round:
+                    t_kill = time.perf_counter()
+                    grid[0][0].terminate()     # shard 0's PRIMARY
+                t0 = time.perf_counter()
+                ids, scores = store.query(qsigs, top_k=10)
+                lat.append(time.perf_counter() - t0)
+                # the availability contract IS parity on every round
+                assert np.array_equal(ids, ref[0]), f"replicated ids r{i}"
+                assert np.array_equal(scores, ref[1]), \
+                    f"replicated scores r{i}"
+                if t_kill is not None and t_rec is None and \
+                        all(l.up for rs in store.shards for l in rs.lanes):
+                    t_rec = time.perf_counter()
+            deadline = time.perf_counter() + 120
+            while t_rec is None and time.perf_counter() < deadline:
+                if all(l.up for rs in store.shards for l in rs.lanes):
+                    t_rec = time.perf_counter()
+                    break
+                time.sleep(0.2)
+        finally:
+            if sup is not None:
+                sup.stop()
+            if store is not None:
+                hs = [l.handle for rs in store.shards for l in rs.lanes
+                      if l.handle is not None]
+                shutdown_plane(store, hs)
+            else:
+                for row in grid:
+                    for h in row:
+                        h.terminate()
+            journal.close()
+        p99r = float(np.percentile(lat, 99)) * 1e3
+        kill_ms = lat[kill_round] * 1e3
+        rec = "none" if t_rec is None else f"{t_rec - t_kill:.2f}"
+        em("search_avail_tcp_s2_replicated_r2", float(np.mean(lat)) * 1e6,
+           f"rounds={rounds}|killed_round={kill_round}|failed_rounds=0|"
+           f"p99_ms={p99r:.2f}|killed_round_ms={kill_ms:.2f}|"
+           f"recovery_s={rec}|parity=exact_all_rounds|journal=on")
+
+
 def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
         n_bands: int = 32, rows_per_band: int = 4,
         shards: tuple[int, ...] = (2, 4),
@@ -405,7 +520,8 @@ def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
         ingest_docs: int = 20_000, ingest_batch: int = 512,
         query_impl: str = "auto",
         arrival_rates: tuple[float, ...] | None = (150.0, 1000.0),
-        stream_queries: int | None = None) -> list[dict]:
+        stream_queries: int | None = None,
+        availability: bool | None = None) -> list[dict]:
     rows_out: list[dict] = []
 
     def em(name, us, derived, **fields):
@@ -670,6 +786,21 @@ def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
                 arrival_rates=arrival_rates,
                 n_docs=ingest_docs, n_stream=stream_queries or 1024)
 
+    # availability axis: kill a worker mid-traffic, unreplicated (outage)
+    # vs replicated R=2 (zero failed rounds + measured recovery).  Auto:
+    # on for full runs with a tcp axis, off in smoke (the CI chaos test
+    # asserts the same contract; the bench exists for the numbers)
+    from .common import smoke
+    if availability is None:
+        availability = not smoke()
+    if availability and "tcp" in transports:
+        if smoke():
+            _bench_availability(em, n_docs=800, n_queries=16,
+                                rounds=12, kill_round=4)
+        else:
+            _bench_availability(em, n_docs=ingest_docs, n_queries=64,
+                                rounds=60, kill_round=20)
+
     return rows_out
 
 
@@ -702,6 +833,11 @@ def main(argv=None) -> None:
                          "streaming axis (empty string disables it)")
     ap.add_argument("--stream-queries", type=int, default=None,
                     help="queries per open-loop streaming run")
+    ap.add_argument("--availability", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="mid-traffic kill axis: unreplicated outage vs "
+                         "replicated R=2 recovery (default: on for full "
+                         "runs with a tcp axis, off in smoke)")
     args = ap.parse_args(argv)
     if args.smoke:
         common.set_smoke(True)
@@ -724,6 +860,7 @@ def main(argv=None) -> None:
             float(r) for r in args.stream_rates.split(",") if r)
     if args.stream_queries is not None:
         kw["stream_queries"] = args.stream_queries
+    kw["availability"] = args.availability
     print("name,us_per_call,derived")
     run(**kw)
 

@@ -74,7 +74,10 @@ def serve_search(args) -> None:
             transport=args.transport,
             query_timeout_s=args.query_timeout,
             hedge=args.hedge,
-            hedge_delay_ms=args.hedge_delay_ms)) as svc:
+            hedge_delay_ms=args.hedge_delay_ms,
+            n_replicas=args.replicas,
+            journal_dir=args.journal_dir,
+            supervisor=args.supervisor)) as svc:
         # pipelined fused ingest: batch N+1 signs while batch N scatters
         # (--pipeline-depth 1 = serial; answers identical at any depth)
         bs = max(1, min(args.ingest_batch, len(idx)))
@@ -189,6 +192,16 @@ def main() -> None:
                     help="fixed hedge delay in ms (default: derived from "
                          "observed per-shard reply latencies; 0 hedges "
                          "immediately)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replica workers per shard (tcp transport; 1 = "
+                         "the classic unreplicated plane, bit-identical)")
+    ap.add_argument("--journal-dir", default=None,
+                    help="directory for the write-ahead ingest journal "
+                         "(tcp transport; required for replica resync)")
+    ap.add_argument("--supervisor", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="self-heal dead replicas: respawn, replay the "
+                         "journal, digest-verify, rejoin (--replicas > 1)")
     ap.add_argument("--stream", action="store_true",
                     help="run the open-loop streaming demo after ingest "
                          "(search mode)")

@@ -378,6 +378,23 @@ def merge_snapshots(*snaps: dict) -> dict:
     return out
 
 
+def label_snapshot(snap: dict, prefix: str) -> dict:
+    """A copy of ``snap`` with every instrument name prefixed — how a
+    plane snapshot keeps per-worker provenance: each worker's registry is
+    merged twice, once raw (so plane-wide totals stay one series) and once
+    under its ``shard{i}.replica{r}.`` prefix (so a failover
+    investigation can see WHICH lane's counters moved).  Values are
+    shared, not copied — treat the result as read-only merge input."""
+    return {
+        "counters": {prefix + n: v
+                     for n, v in snap.get("counters", {}).items()},
+        "gauges": {prefix + n: v
+                   for n, v in snap.get("gauges", {}).items()},
+        "hists": {prefix + n: h
+                  for n, h in snap.get("hists", {}).items()},
+    }
+
+
 def snapshot_delta(before: dict, after: dict) -> dict:
     """What happened between two snapshots of the SAME registry: counters
     and histogram buckets subtract; gauges are levels, so the delta keeps

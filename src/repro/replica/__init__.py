@@ -1,0 +1,22 @@
+"""Replicated, self-healing serving plane (R replicas per shard).
+
+``ReplicaSet`` slots in behind the ``ShardBackend`` protocol, so the
+coordinator, partitioning, merge, and service layers are unchanged; the
+``IngestJournal`` write-ahead log plus the ``Supervisor``'s
+respawn-replay-verify-rejoin loop make a killed replica a transient
+redundancy loss instead of an outage.  See each module's docstring for
+the design; ``store/README.md`` has the operator's runbook.
+"""
+
+from .journal import IngestJournal, JournalRecord, scan_journal
+from .replicaset import (REPLICA_STATE_FILE, ReplicaLane, ReplicaSet,
+                         ReplicatedSketchStore, connect_replicated,
+                         snapshot_journal_seq, spawn_replicated)
+from .supervisor import Supervisor
+
+__all__ = [
+    "IngestJournal", "JournalRecord", "scan_journal",
+    "REPLICA_STATE_FILE", "ReplicaLane", "ReplicaSet",
+    "ReplicatedSketchStore", "connect_replicated", "snapshot_journal_seq",
+    "spawn_replicated", "Supervisor",
+]

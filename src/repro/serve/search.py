@@ -67,6 +67,13 @@ class SearchConfig:
     query_timeout_s: float = 30.0    # fan-out deadline (tcp transport)
     hedge: bool = False         # hedged shard reads (tcp transport)
     hedge_delay_ms: float | None = None  # fixed hedge delay; None = derived
+    # replication (tcp transport; see repro.replica): R workers per shard,
+    # a write-ahead ingest journal, and a self-healing supervisor.  At the
+    # default n_replicas=1 with no journal the classic unreplicated plane
+    # is built — bit-identical to before these knobs existed.
+    n_replicas: int = 1         # replica lanes per shard
+    journal_dir: str | None = None   # write-ahead ingest journal directory
+    supervisor: bool = True     # self-heal dead replicas (n_replicas > 1)
 
 
 class SimilaritySearchService:
@@ -88,8 +95,12 @@ class SimilaritySearchService:
                                 n_slots=cfg.n_slots,
                                 bucket_width=cfg.bucket_width)
         self._workers: list = list(workers) if workers else []
+        self._supervisor = None
         if store is not None:
             self.store = store
+        elif cfg.transport == "tcp" and (cfg.n_replicas > 1
+                                         or cfg.journal_dir is not None):
+            self._build_replicated(store_cfg)
         elif cfg.transport == "tcp":
             from repro.transport import (HedgePolicy, connect_sharded,
                                          spawn_workers)
@@ -119,6 +130,46 @@ class SimilaritySearchService:
         reg = obs_metrics.default()
         self._h_query = reg.histogram("service.query")
         self._h_sign = reg.histogram("service.sign")
+
+    def _build_replicated(self, store_cfg: StoreConfig) -> None:
+        """The replicated tcp plane: an S x R worker grid, a write-ahead
+        ingest journal, and (by default) the self-healing supervisor.
+        Hedging is always armed here — the failure-triggered hedge IS the
+        in-round read failover to a sibling replica — with
+        ``hedge_delay_ms`` still honored as a fixed-delay override."""
+        import os
+
+        from repro.replica import (IngestJournal, Supervisor,
+                                   connect_replicated, spawn_replicated)
+        from repro.transport import HedgePolicy
+        cfg = self.cfg
+        journal = None
+        if cfg.journal_dir is not None:
+            journal = IngestJournal(
+                os.path.join(cfg.journal_dir, "ingest.journal"))
+        grid = spawn_replicated(store_cfg, cfg.n_shards,
+                                max(cfg.n_replicas, 1),
+                                probe_impl=cfg.probe_impl,
+                                query_impl=cfg.query_impl)
+        self._workers = [h for row in grid for h in row]
+        hedge = True if cfg.hedge_delay_ms is None \
+            else HedgePolicy(delay_s=cfg.hedge_delay_ms / 1e3)
+        try:
+            self.store = connect_replicated(
+                grid, store_cfg, journal=journal,
+                partition=cfg.partition, query_impl=cfg.query_impl,
+                timeout=cfg.query_timeout_s, hedge=hedge)
+        except BaseException:
+            if journal is not None:
+                journal.close()
+            for h in self._workers:        # no orphan worker processes
+                h.terminate()
+            raise
+        if cfg.supervisor and cfg.n_replicas > 1:
+            self._supervisor = Supervisor(self.store,
+                                          probe_impl=cfg.probe_impl,
+                                          query_impl=cfg.query_impl)
+            self._supervisor.start()
 
     # -- the fused fast path -----------------------------------------------
     @property
@@ -211,11 +262,25 @@ class SimilaritySearchService:
         """Shut down shard workers (tcp transport); idempotent, inproc no-op.
 
         Graceful first (SHUTDOWN over the wire), then a hard terminate for
-        any worker that did not exit in time.
+        any worker that did not exit in time.  The supervisor stops FIRST —
+        otherwise it would diagnose the shutdown as a mass failure and
+        respawn every worker the teardown just killed.
         """
+        if self._supervisor is not None:
+            self._supervisor.stop()
+            self._supervisor = None
         if self._workers:
             from repro.transport import shutdown_plane
             shutdown_plane(self.store, self._workers)
+            # replaced workers (supervisor respawns) may not be in the
+            # original list; the store's lanes are authoritative
+            for rset in getattr(self.store, "shards", []):
+                for lane in getattr(rset, "lanes", []):
+                    if lane.handle is not None:
+                        lane.handle.terminate()
+        journal = getattr(self.store, "journal", None)
+        if journal is not None:
+            journal.close()
         self._workers = []
 
     def __enter__(self) -> "SimilaritySearchService":

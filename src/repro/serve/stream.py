@@ -54,6 +54,12 @@ class StreamConfig:
     depth: int = 2              # in-flight batches (1 = serial, 2 = overlap)
     pad_pow2: bool = True       # pad partial batches to pow2 (see module doc)
     top_k: int = 10             # default per-query top_k
+    # transient-failure retries per batch query (reads are idempotent, so a
+    # retry can only cost latency, never change an answer).  On a
+    # replicated plane a round that dies to a killed replica typically
+    # succeeds on retry — the replica set has failed over by then — so the
+    # admitted queries survive the kill instead of erroring out
+    retries: int = 0
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -63,6 +69,8 @@ class StreamConfig:
                 f"max_delay_ms must be >= 0 (got {self.max_delay_ms})")
         if self.depth < 1:
             raise ValueError(f"depth must be >= 1 (got {self.depth})")
+        if self.retries < 0:
+            raise ValueError(f"retries must be >= 0 (got {self.retries})")
 
 
 class QueryTicket:
@@ -138,6 +146,7 @@ class StreamingQueryService:
         self._h_qwait = reg.histogram("stream.queue_wait")
         self._h_e2e = reg.histogram("stream.e2e")
         self._c_queries = reg.counter("stream.queries")
+        self._c_retries = reg.counter("stream.retries")
         self._c_flush = {r: reg.counter(f"stream.flush.{r}")
                          for r in FLUSH_REASONS}
         self.n_batches = 0
@@ -243,6 +252,23 @@ class StreamingQueryService:
             self._h_qwait.observe(now - t.t_submit)
         self._inflight.append((signed, tickets))
 
+    def _query_with_retry(self, svc, signed, top_k: int):
+        """Run one batch query, retrying up to ``cfg.retries`` times on
+        transport failures only — a ``TransportError`` means a shard round
+        died (worker killed, stream cut), which on a self-healing plane is
+        transient; any other exception is deterministic and re-raising it
+        immediately is the right answer."""
+        from repro.transport import TransportError
+        last: BaseException | None = None
+        for attempt in range(self.cfg.retries + 1):
+            try:
+                return svc._query(signed, top_k)
+            except TransportError as e:
+                last = e
+                if attempt < self.cfg.retries:
+                    self._c_retries.inc()
+        raise last
+
     def _drain_one(self) -> None:
         signed, tickets = self._inflight.popleft()
         svc = self.service
@@ -253,7 +279,7 @@ class StreamingQueryService:
                 # (mirrors _traced_query)
                 signed = np.asarray(signed)
             top_k = max(t.top_k for t in tickets)
-            ids, scores = svc._query(signed, top_k)
+            ids, scores = self._query_with_retry(svc, signed, top_k)
             ids, scores = np.asarray(ids), np.asarray(scores)
         except Exception as e:
             # one batch's failure answers its own tickets and nothing else;

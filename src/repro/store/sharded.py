@@ -287,13 +287,31 @@ class ShardedSketchStore:
         the same exact associative reduction ``merge_topk`` does for
         scores.  In-process shards already share the coordinator's
         registry, so their stats carry no ``obs`` and nothing is counted
-        twice."""
+        twice.
+
+        Every worker snapshot is merged twice: raw on the shard's FIRST
+        lane only (plane-wide totals keep meaning "one lane per shard" at
+        any replication factor, so dashboards and the existing assertions
+        survive R>1 unchanged) and under a ``shard{i}.replica{r}.`` prefix
+        for every lane (``label_snapshot``) — the provenance a failover
+        investigation needs to see which replica's counters moved.
+        Backends exposing ``stats_all`` (replica sets) contribute one
+        labelled snapshot per live lane; plain backends are lane
+        ``replica 0`` of their shard."""
         snaps = [obs_metrics.default().snapshot()]
-        for sh in self.shards:
-            blob = sh.stats().get("obs")
-            if blob:
-                snaps.append(json.loads(blob)
-                             if isinstance(blob, str) else blob)
+        for i, sh in enumerate(self.shards):
+            stats_all = getattr(sh, "stats_all", None)
+            per_lane = stats_all() if stats_all is not None \
+                else [(0, sh.stats())]
+            for k, (r, stats) in enumerate(per_lane):
+                blob = stats.get("obs")
+                if not blob:
+                    continue
+                snap = json.loads(blob) if isinstance(blob, str) else blob
+                if k == 0:
+                    snaps.append(snap)
+                snaps.append(obs_metrics.label_snapshot(
+                    snap, f"shard{i}.replica{r}."))
         return obs_metrics.merge_snapshots(*snaps)
 
     def _gids(self, shard: int) -> np.ndarray:

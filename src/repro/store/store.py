@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import zlib
 
 import numpy as np
 
@@ -418,6 +419,20 @@ class SketchStore:
     def candidate_pairs(self) -> np.ndarray:
         """(P, 2) int64 unique (i, j), i < j, sharing >= 1 band bucket."""
         return self.table.candidate_pairs()
+
+    def digest(self) -> dict:
+        """Content digest of the signature buffer: ``{size, crc, indexed}``.
+
+        ``crc`` is the CRC-32 of the packed rows in insertion order, so two
+        stores hold bit-identical signatures iff their digests match —
+        regardless of table geometry (slot count, spills), which replay or
+        snapshot boot may legitimately reproduce differently.  This is the
+        parity check a resynced replica must pass against a live peer
+        before rejoining the fan-out (``repro.replica.supervisor``)."""
+        rows = np.ascontiguousarray(self.buffer.all_packed())
+        return {"size": int(self.size),
+                "crc": int(zlib.crc32(rows.tobytes()) & 0xFFFFFFFF),
+                "indexed": int(self.table.n_items)}
 
     # -- snapshots ---------------------------------------------------------
     _BAND_MODES = (None, "sig", "packed")   # snapshot encoding of _band_mode

@@ -114,11 +114,19 @@ class ShardConnection:
 
     def __init__(self, address: tuple[str, int], *, timeout: float = 30.0,
                  max_payload: int = wire.MAX_PAYLOAD,
-                 deadline_name: str = "timeout"):
+                 deadline_name: str = "timeout",
+                 shard: int = -1, replica: int = 0):
         self.address = tuple(address)
         self.timeout = timeout
         self.deadline_name = deadline_name   # which knob set the deadline
         self.max_payload = max_payload
+        # (shard, replica) lane labels: every WorkerError/TransportTimeout
+        # raised for this connection names the exact lane (``_name``), and
+        # the lane-labelled counters below let failover tooling tell WHICH
+        # replica of WHICH shard is timing out / going stale — an R-way
+        # plane is unoperable when all its lanes alias one counter series
+        self.shard = shard
+        self.replica = replica
         self._seq = 0
         self.broken: str | None = None     # why this conn is unusable
         # registry handles are bound once at construction (the disabled
@@ -130,6 +138,11 @@ class ShardConnection:
         self._m_timeout = reg.counter("transport.client.timeouts")
         self._m_bytes_out = reg.counter("transport.client.bytes_out")
         self._m_bytes_in = reg.counter("transport.client.bytes_in")
+        lane = f".shard{shard}.replica{replica}" if shard >= 0 else ""
+        self._m_stale_lane = reg.counter(
+            f"transport.client.stale_replies{lane}") if lane else None
+        self._m_timeout_lane = reg.counter(
+            f"transport.client.timeouts{lane}") if lane else None
         self.n_stale = 0                   # stale replies discarded here
         self.n_timeouts = 0
         self.last_stale_seq: int | None = None
@@ -162,6 +175,16 @@ class ShardConnection:
         self.n_stale += 1
         self.last_stale_seq = seq
         self._m_stale.inc()
+        if self._m_stale_lane is not None:
+            self._m_stale_lane.inc()
+
+    def note_timeout(self) -> None:
+        """Record one deadline expiry against this lane (aggregate + the
+        (shard, replica)-labelled series failover logs correlate with)."""
+        self.n_timeouts += 1
+        self._m_timeout.inc()
+        if self._m_timeout_lane is not None:
+            self._m_timeout_lane.inc()
 
     def _stale_note(self) -> str:
         if not self.n_stale:
@@ -189,8 +212,7 @@ class ShardConnection:
         except socket.timeout as e:
             # the frame may have been cut mid-send or mid-read; seq pairing
             # only recovers frame-aligned streams, so poison the connection
-            self.n_timeouts += 1
-            self._m_timeout.inc()
+            self.note_timeout()
             self.mark_broken(f"timed out mid-{msg.type.name} seq={msg.seq}")
             raise TransportTimeout(
                 f"worker {self._name} timed out after {self.timeout}s "
@@ -251,6 +273,9 @@ class ShardConnection:
 
     @property
     def _name(self) -> str:
+        if self.shard >= 0:
+            return (f"shard {self.shard} replica {self.replica} at "
+                    f"{self.address[0]}:{self.address[1]}")
         return f"{self.address[0]}:{self.address[1]}"
 
     def close(self) -> None:
@@ -321,6 +346,11 @@ class FanoutGroup:
         self._want: dict[ShardConnection, int] = {}     # expected reply seq
         self._replies: dict[ShardConnection, Message] = {}
         self._msgs: dict[ShardConnection, Message] = {}  # hedgeable, per round
+        # legs that may fail WITHOUT killing the round (replicated writes:
+        # one dead replica degrades redundancy, the sibling legs complete);
+        # a tolerant leg's failure is parked here and surfaced at take()
+        self._tolerant: set[ShardConnection] = set()
+        self._leg_errors: dict[ShardConnection, BaseException] = {}
         self._round_error: BaseException | None = None  # why the round died
         reg = obs_metrics.default()
         self._m_timeout = reg.counter("transport.client.timeouts")
@@ -352,13 +382,23 @@ class FanoutGroup:
 
     def submit(self, conn: ShardConnection, msg: Message, *,
                decode=_partial_from, reset_on_error: bool = True,
-               hedgeable: bool = False) -> _Pending:
+               hedgeable: bool = False, tolerate: bool = False,
+               keep_round_on_error: bool = False) -> _Pending:
+        """Queue one outgoing frame.  ``tolerate`` marks the leg as allowed
+        to fail without killing the round (its failure is surfaced at its
+        own ``take`` instead — replicated writes use this so one dead
+        replica costs redundancy, not the plane).  ``keep_round_on_error``
+        makes a submit-phase failure clean up only THIS leg's slots, so a
+        replica set can retry the submit on a sibling lane without
+        abandoning everything already queued this round."""
         if conn in self._out or conn in self._replies:
             raise TransportError("one outstanding fan-out request per shard")
         if not self._out and not self._replies:
             self._round_error = None      # a fresh round: forget old failures
             self._reply_lat.clear()
             self._msgs.clear()
+            self._tolerant.clear()
+            self._leg_errors.clear()
         try:
             # a dirty lane (its last request was abandoned to a hedged win
             # or a dead round) is reconnected before carrying new traffic;
@@ -379,14 +419,34 @@ class FanoutGroup:
             if hedgeable and self.hedge is not None \
                     and self._twin.get(conn) is not None:
                 self._msgs[conn] = msg
+            if tolerate:
+                self._tolerant.add(conn)
         except BaseException:
-            self.reset()      # abandon siblings already queued this round
+            if keep_round_on_error:
+                # drop only this leg; siblings already queued stay live
+                self._out.pop(conn, None)
+                self._out_total.pop(conn, None)
+                self._in.pop(conn, None)
+                self._want.pop(conn, None)
+                self._msgs.pop(conn, None)
+            else:
+                self.reset()  # abandon siblings already queued this round
             raise
         return _Pending(self, conn, decode=decode,
                         reset_on_error=reset_on_error)
 
     def take(self, conn: ShardConnection, *,
              reset_on_error: bool = True) -> Message:
+        leg_err = self._leg_errors.pop(conn, None)
+        if leg_err is not None:
+            # this tolerant leg failed mid-round while its siblings went on
+            # to complete; after its frame hit the wire nobody can prove
+            # whether the worker processed the request
+            err = WorkerError(
+                f"worker {conn._name} failed mid-fan-out: "
+                f"{type(leg_err).__name__}: {leg_err}")
+            err.unknown_outcome = True
+            raise err from leg_err
         if conn not in self._replies:
             if self._round_error is None:
                 raise TransportError(
@@ -419,6 +479,51 @@ class FanoutGroup:
         self._in.clear()
         self._replies.clear()
         self._msgs.clear()
+        self._tolerant.clear()
+        self._leg_errors.clear()
+
+    # -- membership (replica failover rewires lanes between rounds) ----------
+    def set_twin(self, primary: ShardConnection,
+                 twin: ShardConnection | None) -> None:
+        """Point ``primary``'s hedge twin at ``twin`` (None removes it).
+        A replicated plane wires each shard's twin to ANOTHER replica's
+        connection, so a hedge is a failover to a different machine —
+        bit-identical replies either way, since replicas hold the same
+        rows (writes fan out to all lanes before any later read)."""
+        if twin is None:
+            self._twin.pop(primary, None)
+        else:
+            self._twin[primary] = twin
+
+    def adopt_conn(self, conn: ShardConnection) -> None:
+        """Add a connection to the group (a resynced replica rejoining):
+        it gets a skew histogram and the blocking-mode restore in flush."""
+        if conn not in self.conns:
+            self.conns.append(conn)
+            self._lat_h[conn] = obs_metrics.Histogram(
+                f"fanout.skew.{len(self.conns) - 1}")
+
+    def retire_conn(self, conn: ShardConnection) -> None:
+        """Remove a connection from the group (its lane went down); twin
+        mappings through it are dropped — callers re-wire via set_twin."""
+        if conn in self.conns:
+            self.conns.remove(conn)
+        self._lat_h.pop(conn, None)
+        self._dirty.discard(conn)
+        self._twin.pop(conn, None)
+        for p, t in list(self._twin.items()):
+            if t is conn:
+                del self._twin[p]
+
+    def ensure_clean(self, conn: ShardConnection) -> None:
+        """Make a lane usable for a blocking request: redial it if it was
+        poisoned or abandoned mid-request (the read-failover path calls
+        this before re-asking a sibling replica).  Raises ``WorkerError``
+        when the worker is unreachable."""
+        if conn.broken or conn in self._dirty:
+            if not self._redial(conn):
+                raise WorkerError(
+                    f"worker {conn._name} unreachable while redialing")
 
     def _hedge_delay(self, conn: ShardConnection) -> float | None:
         """Seconds until ``conn``'s request may hedge, or None (never)."""
@@ -597,8 +702,28 @@ class FanoutGroup:
                 now = time.monotonic()
                 budget = deadline - now
                 if budget <= 0:
-                    self._m_timeout.inc()
                     waiting = {owner.get(c, c) for c in pending}
+                    if waiting and waiting <= self._tolerant:
+                        # every leg still pending opted into per-leg
+                        # failure: time each out individually (lane down,
+                        # outcome unknown) and let the round complete on
+                        # the replies that DID land
+                        for c in sorted(waiting, key=id):
+                            c.note_timeout()
+                            e = TransportTimeout(
+                                f"worker {c._name} timed out after "
+                                f"{self.timeout}s ({self._deadline_name}) "
+                                f"(seq={self._want.get(c)})")
+                            self._leg_errors[c] = e
+                            c.mark_broken("timed out mid-fan-out")
+                            _cleanup_leg(c)
+                        for c in list(pending):   # stray hedge legs
+                            _cleanup_leg(c)
+                        continue
+                    self._m_timeout.inc()
+                    for c in waiting:
+                        if c._m_timeout_lane is not None:
+                            c._m_timeout_lane.inc()
                     names = sorted(f"{c._name} (seq={self._want.get(c)})"
                                    for c in waiting)
                     raise TransportTimeout(
@@ -623,14 +748,35 @@ class FanoutGroup:
                             self._pump_send(sel, conn)
                         else:
                             self._pump_recv(sel, conn)
-                    except wire.WireError as e:
+                    # WorkerError covers EOF mid-reply (the worker process
+                    # died cleanly) — a leg failure like any stream break,
+                    # so a killed replica's read fails over in-round via
+                    # the failure-triggered hedge instead of killing the
+                    # whole round
+                    except (wire.WireError, WorkerError) as e:
                         if not _leg_failed(conn, e):
+                            if conn in self._tolerant:
+                                self._leg_errors[conn] = e
+                                conn.mark_broken(
+                                    f"stream failed mid-fan-out: "
+                                    f"{type(e).__name__}")
+                                _cleanup_leg(conn)
+                                continue
+                            if isinstance(e, WorkerError):
+                                raise
                             raise WorkerError(
                                 f"worker {conn._name} broke the stream: "
                                 f"{type(e).__name__}: {e}") from e
                         continue
                     except OSError as e:
                         if not _leg_failed(conn, e):
+                            if conn in self._tolerant:
+                                self._leg_errors[conn] = e
+                                conn.mark_broken(
+                                    f"connection failed mid-fan-out: "
+                                    f"{type(e).__name__}")
+                                _cleanup_leg(conn)
+                                continue
                             raise WorkerError(
                                 f"worker {conn._name} connection failed: "
                                 f"{e}") from e
@@ -914,13 +1060,15 @@ def connect_sharded(addresses, cfg=None, *, snapshot_dir: str | None = None,
     conns: list[ShardConnection] = []
     twins: dict[ShardConnection, ShardConnection] = {}
     try:
-        for a in addresses:
+        for i, a in enumerate(addresses):
             conns.append(ShardConnection(a, timeout=timeout,
-                                         deadline_name="query_timeout_s"))
+                                         deadline_name="query_timeout_s",
+                                         shard=i))
         if hedge is not None:
             for c in conns:
                 twins[c] = ShardConnection(c.address, timeout=timeout,
-                                           deadline_name="query_timeout_s")
+                                           deadline_name="query_timeout_s",
+                                           shard=c.shard)
         group = FanoutGroup(conns, timeout=timeout, hedge=hedge,
                             hedge_conns=twins,
                             deadline_name="query_timeout_s")
@@ -944,7 +1092,7 @@ def connect_sharded(addresses, cfg=None, *, snapshot_dir: str | None = None,
             size, want = int(b.stats()["size"]), store._gid_len[i]
             if size != want:
                 raise WorkerError(
-                    f"worker {i} at {conns[i]._name} holds {size} items but "
+                    f"worker {conns[i]._name} holds {size} items but "
                     f"the coordinator's gid map has {want} — wrong "
                     "snapshot_dir (or none) for these workers?")
         return store

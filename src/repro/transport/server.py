@@ -61,7 +61,7 @@ from .wire import Message, MsgType
 
 
 def _handle(store: SketchStore, msg: Message,
-            shard: int = -1) -> tuple[Message, bool]:
+            shard: int = -1, replica: int = 0) -> tuple[Message, bool]:
     """One request -> (reply, keep_serving)."""
     f = msg.fields
     if msg.type == MsgType.ADD:
@@ -109,9 +109,14 @@ def _handle(store: SketchStore, msg: Message,
                                     "query_impl": store.query_impl,
                                     "pid": os.getpid(),
                                     "shard": int(shard),
+                                    "replica": int(replica),
                                     "obs": json.dumps(
                                         obs_metrics.default().snapshot())
                                     }), True
+    if msg.type == MsgType.DIGEST:
+        # signature-buffer content digest — the resync parity check a
+        # respawned replica must pass against a live peer before rejoining
+        return Message(MsgType.OK, store.digest()), True
     if msg.type == MsgType.SNAPSHOT:
         store.save(f["path"])
         return Message(MsgType.OK, {}), True
@@ -123,7 +128,8 @@ def _handle(store: SketchStore, msg: Message,
 def _serve_conn(store: SketchStore, conn: socket.socket,
                 shard: int = -1, *,
                 exec_lock: threading.Lock | None = None,
-                slow: tuple[float, float] | None = None) -> bool:
+                slow: tuple[float, float] | None = None,
+                replica: int = 0) -> bool:
     """Serve one coordinator connection.  Returns False when SHUTDOWN.
 
     ``exec_lock`` serializes handler execution across this worker's
@@ -175,7 +181,7 @@ def _serve_conn(store: SketchStore, conn: socket.socket,
             # returns the shared no-op span — untraced requests pay nothing
             with tracer.span(f"worker.{msg.type.name.lower()}", parent=ctx):
                 with exec_lock:
-                    reply, keep = _handle(store, msg, shard)
+                    reply, keep = _handle(store, msg, shard, replica)
         except Exception as e:                   # worker-side op failure
             errors.inc()
             reply, keep = Message(MsgType.ERROR, {
@@ -207,7 +213,8 @@ def _serve_conn(store: SketchStore, conn: socket.socket,
 def run_worker(ready_conn, cfg: StoreConfig | None, snapshot: str | None,
                probe_impl: str, host: str, port: int,
                shard: int = -1, query_impl: str = "auto",
-               slow: tuple[float, float] | None = None) -> None:
+               slow: tuple[float, float] | None = None,
+               replica: int = 0) -> None:
     """Worker entry point (spawn target — all arguments picklable).
 
     Boots a ``SketchStore`` (empty from ``cfg``, or from ``snapshot``),
@@ -227,8 +234,10 @@ def run_worker(ready_conn, cfg: StoreConfig | None, snapshot: str | None,
     # stitched trace says which process each span ran in; sample rate stays
     # 0 — worker spans only open under a wire-propagated parent, inheriting
     # the coordinator's sampling decision
-    obs_trace.set_default(obs_trace.Tracer(
-        proc=f"shard{shard}" if shard >= 0 else f"worker-pid{os.getpid()}"))
+    proc = f"shard{shard}" if shard >= 0 else f"worker-pid{os.getpid()}"
+    if shard >= 0 and replica > 0:       # R-way lanes get distinct proc tags
+        proc = f"shard{shard}r{replica}"
+    obs_trace.set_default(obs_trace.Tracer(proc=proc))
     if probe_impl == "auto":
         from repro.kernels.dispatch import select_probe_impl
         probe_impl = select_probe_impl()
@@ -258,7 +267,8 @@ def run_worker(ready_conn, cfg: StoreConfig | None, snapshot: str | None,
             try:
                 with conn:
                     if not _serve_conn(store, conn, shard,
-                                       exec_lock=exec_lock, slow=slow):
+                                       exec_lock=exec_lock, slow=slow,
+                                       replica=replica):
                         stop.set()
             except ConnectionResetError:
                 # normal for a hedge twin: the coordinator closes it with an
@@ -290,10 +300,12 @@ def run_worker(ready_conn, cfg: StoreConfig | None, snapshot: str | None,
 class WorkerHandle:
     """A spawned shard worker: its process and its bound address."""
 
-    def __init__(self, proc, address: tuple[str, int], shard: int):
+    def __init__(self, proc, address: tuple[str, int], shard: int,
+                 replica: int = 0):
         self.proc = proc
         self.address = address
         self.shard = shard
+        self.replica = replica
 
     @property
     def alive(self) -> bool:
@@ -310,38 +322,55 @@ class WorkerHandle:
 
     def __repr__(self) -> str:
         state = "alive" if self.alive else "dead"
-        return f"WorkerHandle(shard={self.shard}, " \
+        return f"WorkerHandle(shard={self.shard}, replica={self.replica}, " \
                f"addr={self.address[0]}:{self.address[1]}, {state})"
 
 
-def spawn_workers(cfg: StoreConfig | None, n_shards: int, *,
+def spawn_workers(cfg: StoreConfig | None, n_workers: int, *,
                   snapshot_dir: str | None = None, probe_impl: str = "auto",
                   query_impl: str = "auto", host: str = "127.0.0.1",
                   start_timeout: float = 120.0,
                   slow_shards: dict[int, tuple[float, float]] | None = None,
+                  shards: list[int] | None = None,
+                  replicas: list[int] | None = None,
                   ) -> list[WorkerHandle]:
-    """Spawn ``n_shards`` shard workers on localhost; returns their handles.
+    """Spawn ``n_workers`` shard workers on localhost; returns their handles.
 
     Workers start in parallel (the dominant cost is each spawn re-importing
     jax) and each reports its ephemeral port back before this returns.  With
-    ``snapshot_dir``, worker ``i`` boots from ``shard_{i}.npz`` inside it
-    (the ``ShardedSketchStore.save`` layout) instead of empty from ``cfg``.
+    ``snapshot_dir``, worker ``i`` boots from ``shard_{shards[i]}.npz``
+    inside it (the ``ShardedSketchStore.save`` layout) instead of empty from
+    ``cfg``.
 
-    ``slow_shards`` maps shard index -> ``(prob, sleep_s)`` injected read
-    latency (the hedging benchmarks' reproducible slow-shard scenario).
+    ``shards``/``replicas`` give each worker its explicit (shard, replica)
+    assignment — a replicated plane spawns R workers per shard index
+    (``repro.replica``).  The default is the classic unreplicated layout:
+    worker ``i`` IS shard ``i``, replica 0.
+
+    ``slow_shards`` maps WORKER index -> ``(prob, sleep_s)`` injected read
+    latency (the hedging benchmarks' reproducible slow-shard scenario; for
+    the default layout worker index == shard index).
     """
+    if shards is None:
+        shards = list(range(n_workers))
+    if replicas is None:
+        replicas = [0] * n_workers
+    if len(shards) != n_workers or len(replicas) != n_workers:
+        raise ValueError("shards/replicas must have one entry per worker")
     ctx = multiprocessing.get_context("spawn")
     started = []
     try:
-        for i in range(n_shards):
-            snap = shard_snapshot_path(snapshot_dir, i) \
+        for i in range(n_workers):
+            snap = shard_snapshot_path(snapshot_dir, shards[i]) \
                 if snapshot_dir is not None else None
             parent, child = ctx.Pipe(duplex=False)
             proc = ctx.Process(
                 target=run_worker,
-                args=(child, cfg, snap, probe_impl, host, 0, i, query_impl,
-                      slow_shards.get(i) if slow_shards else None),
-                daemon=True, name=f"shard-worker-{i}")
+                args=(child, cfg, snap, probe_impl, host, 0, shards[i],
+                      query_impl,
+                      slow_shards.get(i) if slow_shards else None,
+                      replicas[i]),
+                daemon=True, name=f"shard-worker-{shards[i]}r{replicas[i]}")
             proc.start()
             child.close()
             started.append((proc, parent, i))
@@ -356,7 +385,8 @@ def spawn_workers(cfg: StoreConfig | None, n_shards: int, *,
                     f"shard worker {i} did not report its address within "
                     f"{start_timeout:.0f}s")
             try:
-                handles.append(WorkerHandle(proc, tuple(parent.recv()), i))
+                handles.append(WorkerHandle(proc, tuple(parent.recv()),
+                                            shards[i], replicas[i]))
             except EOFError as e:
                 proc.join(5)
                 raise RuntimeError(

@@ -77,6 +77,8 @@ class MsgType(enum.IntEnum):
     SNAPSHOT = 7     # path — worker saves its SketchStore there
     SHUTDOWN = 8     # graceful worker exit (acked with OK first)
     ERROR = 9        # reply: error=str — worker-side exception text
+    DIGEST = 10      # content digest of the worker's signature buffer
+                     # (replica resync parity check — see replica.supervisor)
 
 
 class WireError(Exception):

@@ -1,0 +1,230 @@
+"""Replicated plane: chaos failover + journal-backed recovery semantics.
+
+The acceptance contract of the replica subsystem: with S shards x R=2
+replica lanes of real spawned tcp workers, ANY single replica can be
+killed mid-traffic — mid-ingest or mid-query — and the plane keeps
+answering **bit-identically** to a single-store reference (zero wrong
+answers, zero lost batches), while the supervisor respawns the dead
+worker, replays the ingest journal, digest-verifies it against a live
+peer, and restores R=2.  The resynced replica must then be able to carry
+the shard ALONE (its former peer killed) and still answer bit-exactly —
+parity is the proof the journal replay rebuilt content, not just counts.
+
+The in-process tests cover the coordinator-side mechanics without worker
+spawns: write-ahead journal append/rollback around scatter, snapshot +
+tail-replay reboot, and (shard, replica)-labelled plane observability.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.obs import metrics as obs_metrics
+from repro.replica import (IngestJournal, ReplicatedSketchStore, Supervisor,
+                           connect_replicated, snapshot_journal_seq,
+                           spawn_replicated)
+from repro.store import SketchStore, StoreConfig
+from repro.transport import shutdown_plane
+
+K, NB, RPB = 64, 16, 4
+
+
+def _cfg():
+    return StoreConfig(k=K, n_bands=NB, rows_per_band=RPB,
+                       n_slots=256, bucket_width=8)
+
+
+def _corpus(n=180, k=K, seed=0, dup_pairs=3):
+    rng = np.random.default_rng(seed)
+    sigs = rng.integers(0, 1 << 16, (n, k), dtype=np.int32)
+    for t in range(dup_pairs):
+        sigs[n - 1 - t] = sigs[t]
+    return sigs
+
+
+def _queries(sigs, n_strangers=2, seed=1):
+    """Indexed rows + strangers with no bucket hit anywhere (the global
+    brute-force-fallback leg must survive failover too)."""
+    rng = np.random.default_rng(seed)
+    strangers = rng.integers(1 << 20, 1 << 24,
+                             (n_strangers, sigs.shape[1]), dtype=np.int32)
+    return np.concatenate([sigs[:10], strangers])
+
+
+def _assert_parity(ref: SketchStore, store, q, top_k=5):
+    want_ids, want_scores = ref.query(q, top_k=top_k)
+    got_ids, got_scores = store.query(q, top_k=top_k)
+    np.testing.assert_array_equal(got_ids, want_ids)
+    np.testing.assert_array_equal(got_scores, want_scores)
+
+
+# -- in-process: journal integration ----------------------------------------
+
+def test_journal_write_ahead_and_reboot_replay(tmp_path):
+    """Every accepted batch is journalled before it scatters; a plane
+    rebooted from snapshot + journal tail answers bit-identically."""
+    cfg = _cfg()
+    sigs = _corpus(n=120)
+    batches = np.array_split(sigs, 4)
+    journal = IngestJournal(str(tmp_path / "ingest.journal"))
+    ref = SketchStore(cfg)
+    store = ReplicatedSketchStore(cfg, 2, journal=journal)
+    for b in batches[:2]:
+        ref.add(b)
+        store.add(b)
+    assert journal.last_seq == 1
+    snap = str(tmp_path / "snap")
+    store.save(snap)
+    assert snapshot_journal_seq(snap) == 1
+    # two more batches after the snapshot: the journal tail
+    for b in batches[2:]:
+        ref.add(b)
+        store.add(b)
+    assert journal.last_seq == 3
+    # reboot from snapshot, replay the tail
+    store2 = ReplicatedSketchStore.load(snap)
+    store2.journal = journal
+    assert store2.n_items == len(batches[0]) + len(batches[1])
+    assert store2.replay_tail() == 2
+    assert store2.n_items == len(sigs)
+    _assert_parity(ref, store2, _queries(sigs))
+    # compact: snapshot covers everything, journal empties
+    snap2 = str(tmp_path / "snap2")
+    assert store2.compact(snap2) == 4
+    assert journal.records() == []
+    journal.close()
+
+
+def test_scatter_failure_rolls_back_journal_record(tmp_path):
+    """A scatter that provably lands nowhere must not leave a phantom
+    record — replay would diverge a resynced replica from the plane."""
+    cfg = _cfg()
+    journal = IngestJournal(str(tmp_path / "ingest.journal"))
+    store = ReplicatedSketchStore(cfg, 2, journal=journal)
+    store.add(_corpus(n=20))
+    assert journal.last_seq == 0
+    with pytest.raises(Exception):
+        store.add(np.zeros((3, K + 1), np.int32))    # bad width: clean fail
+    assert store._failed is None                     # plane still usable
+    assert journal.last_seq == 0                     # record rolled back
+    store.add(_corpus(n=10, seed=3))
+    assert journal.last_seq == 1
+    assert [r.seq for r in journal.records()] == [0, 1]
+    journal.close()
+
+
+# -- the chaos test: real workers, kills mid-traffic -------------------------
+
+def test_chaos_failover_bit_identical(tmp_path):
+    """S=2 x R=2 tcp plane: kill one replica mid-ingest and one (a
+    PRIMARY) mid-query; every answer stays bit-identical to the
+    single-store reference; the supervisor restores R=2 with
+    digest-verified parity; the resynced replicas then carry the plane
+    alone."""
+    cfg = _cfg()
+    sigs = _corpus(n=180)
+    batches = np.array_split(sigs, 6)
+    q = _queries(sigs)
+    ref = SketchStore(cfg)
+    journal = IngestJournal(str(tmp_path / "ingest.journal"))
+    grid = spawn_replicated(cfg, 2, 2)
+    store = sup = None
+    try:
+        store = connect_replicated(grid, cfg, journal=journal, timeout=60)
+        sup = Supervisor(store, heartbeat_timeout_s=10)
+
+        # healthy plane: parity baseline
+        for b in batches[:3]:
+            ref.add(b)
+            store.add(b)
+        _assert_parity(ref, store, q)
+
+        # obs provenance: worker snapshots are lane-labelled
+        snap = store.obs_snapshot()
+        labelled = [n for n in snap["hists"]
+                    if n.startswith("shard0.replica0.")]
+        assert labelled, "per-lane labelled snapshots missing"
+        assert snap["hists"]["worker.handle.query"]["count"] >= 2
+
+        # kill a NON-primary replica, then keep ingesting: writes must
+        # succeed on reduced redundancy (tolerant legs), not poison the
+        # plane
+        grid[0][1].terminate()
+        for b in batches[3:5]:
+            ref.add(b)
+            store.add(b)
+        assert not store.shards[0].lanes[1].up
+        assert store._failed is None
+        _assert_parity(ref, store, q)
+
+        # kill shard 1's PRIMARY, then query: the read fails over to the
+        # sibling replica (in-round via the failure hedge, or blocking
+        # retry) — bit-identical either way, never a wrong answer
+        grid[1][0].terminate()
+        _assert_parity(ref, store, q)
+
+        # supervisor heals: respawn, journal replay, digest-verified
+        # rejoin, back to R=2 on every shard
+        deadline = time.monotonic() + 240
+        while time.monotonic() < deadline:
+            sup.check_once()
+            if all(l.up for rs in store.shards for l in rs.lanes):
+                break
+            time.sleep(0.2)
+        assert all(l.up for rs in store.shards for l in rs.lanes), \
+            [(l.shard, l.replica, l.why_down)
+             for rs in store.shards for l in rs.lanes if not l.up]
+        reg = obs_metrics.default().snapshot()["counters"]
+        assert reg.get("replica.failovers", 0) >= 2
+        _assert_parity(ref, store, q)
+
+        # now kill the ORIGINAL survivors: the resynced replicas must
+        # carry their shards alone, which proves the journal replay
+        # rebuilt bit-identical content, not just matching sizes
+        store.shards[0].lanes[0].handle.terminate()
+        store.shards[1].lanes[1].handle.terminate()
+        ref.add(batches[5])
+        store.add(batches[5])
+        _assert_parity(ref, store, q)
+        assert journal.last_seq == 5           # all six batches journalled
+    finally:
+        if sup is not None:
+            sup.stop()
+        if store is not None:
+            handles = [l.handle for rs in store.shards for l in rs.lanes
+                       if l.handle is not None]
+            shutdown_plane(store, handles, join_timeout=15)
+        else:
+            for row in grid:
+                for h in row:
+                    h.terminate()
+        journal.close()
+
+
+def test_all_replicas_down_is_an_error_not_a_hang(tmp_path):
+    """Killing EVERY replica of a shard surfaces as an exception within
+    the deadline — degraded is fine, silent wrong answers are not."""
+    cfg = _cfg()
+    sigs = _corpus(n=60)
+    journal = IngestJournal(str(tmp_path / "ingest.journal"))
+    grid = spawn_replicated(cfg, 1, 2)
+    store = None
+    try:
+        store = connect_replicated(grid, cfg, journal=journal, timeout=30)
+        store.add(sigs)
+        for h in grid[0]:
+            h.terminate()
+        time.sleep(0.5)
+        with pytest.raises(Exception):
+            store.query(sigs[:4], top_k=3)
+    finally:
+        if store is not None:
+            handles = [l.handle for rs in store.shards for l in rs.lanes
+                       if l.handle is not None]
+            shutdown_plane(store, handles, join_timeout=15)
+        else:
+            for row in grid:
+                for h in row:
+                    h.terminate()
+        journal.close()
