@@ -397,14 +397,171 @@ def _bench_stream_open_loop(em, *, transports: tuple[str, ...],
        f"cut={p99['unhedged'] / max(p99['hedged'], 1e-9):.1f}x")
 
 
+def _bench_overload(em, *, n_docs: int, n_stream: int, n_storm: int,
+                    rates_x: tuple[float, ...] = (0.5, 1.0, 2.0, 4.0),
+                    max_batch: int = 32, max_queue: int = 64,
+                    query_timeout_s: float = 10.0) -> None:
+    """Overload axis: open-loop arrivals swept past measured capacity.
+
+    A tcp S=2 plane serves through the bounded-admission streaming front
+    (``max_queue`` + per-ticket ``query_timeout_s``).  Capacity is measured
+    closed-loop first, then Poisson arrivals are offered at ``rates_x``
+    multiples of it.  The overload contract is ASSERTED, not just
+    reported: past saturation (>= 2x capacity) goodput stays within 20% of
+    the sweep's peak (shedding keeps admitted work at capacity instead of
+    collapsing under queue growth), the p99 of answered queries stays
+    bounded by the deadline, shed > 0, and every answered query is
+    bit-identical to the unloaded reference — zero wrong answers.
+
+    The retry-storm pair then drives a fully-shedding worker
+    (``gate_limit=0``) through the stream's retry path: the shared
+    ``RetryBudget`` caps total retry traffic, while the unbudgeted
+    baseline amplifies every rejection into ``retries`` more requests
+    (asserted >= 2x the budgeted traffic).
+    """
+    from repro.serve.search import SearchConfig, SimilaritySearchService
+    from repro.transport import (DeadlineExceeded, Overloaded, RetryBudget,
+                                 connect_sharded, spawn_workers)
+
+    d, k, nb, r = 1 << 14, 128, 32, 4
+    nnz = 160
+    rng = np.random.default_rng(23)
+    docs = np.sort(rng.integers(0, d, (n_docs, nnz), np.int32), axis=1)
+    qrows = docs[rng.integers(0, n_docs, n_stream)].copy()
+
+    cfg = SearchConfig(d=d, k=k, n_bands=nb, rows_per_band=r,
+                       n_shards=2, transport="tcp")
+    results: dict[float, dict] = {}
+    with SimilaritySearchService(cfg) as svc:
+        for lo in range(0, n_docs, 512):
+            svc.add_sparse(docs[lo: lo + 512])
+        b = 1
+        while b <= max_batch:                  # warm every pow2 shape
+            svc.query_sparse(qrows[:b], top_k=10)
+            b *= 2
+        ref = svc.query_sparse(qrows, top_k=10)
+
+        # closed-loop capacity: back-to-back full-size batches
+        t0 = time.perf_counter()
+        for lo in range(0, 2 * n_stream, max_batch):
+            svc.query_sparse(qrows[lo % n_stream:
+                                   lo % n_stream + max_batch], top_k=10)
+        capacity = 2 * n_stream / (time.perf_counter() - t0)
+
+        for x in rates_x:
+            rate = capacity * x
+            gaps = np.random.default_rng(int(x * 100)).exponential(
+                1.0 / rate, n_stream)
+            arrivals = np.cumsum(gaps)
+            with svc.stream(max_batch=max_batch, max_delay_ms=2.0, depth=2,
+                            max_queue=max_queue,
+                            query_timeout_s=query_timeout_s) as st:
+                t0 = time.perf_counter()
+                tickets = []
+                for i in range(n_stream):
+                    lag = t0 + arrivals[i] - time.perf_counter()
+                    if lag > 0:
+                        time.sleep(lag)
+                    tickets.append(st.submit_sparse(qrows[i], top_k=10))
+                done, shed, expired, wrong = [], 0, 0, 0
+                for i, t in enumerate(tickets):
+                    try:
+                        ids, scores = t.result(timeout=120)
+                    except Overloaded:
+                        shed += 1
+                        continue
+                    except DeadlineExceeded:
+                        expired += 1
+                        continue
+                    if not (np.array_equal(ids, ref[0][i])
+                            and np.array_equal(scores, ref[1][i])):
+                        wrong += 1
+                    done.append(t.latency_s)
+            wall = max(t.t_done for t in tickets) - t0
+            lat = np.sort(done)
+            p99 = lat[int(0.99 * (len(lat) - 1))] * 1e3 if len(done) else 0.0
+            m = {"goodput": len(done) / wall, "shed": shed,
+                 "expired": expired, "wrong": wrong, "p99_ms": p99}
+            results[x] = m
+            em(f"search_overload_tcp_s2_x{x:g}",
+               float(np.mean(lat)) * 1e6 if len(done) else 0.0,
+               f"offered_x={x:g}|offered_qps={rate:.0f}|"
+               f"capacity_qps={capacity:.0f}|"
+               f"goodput_qps={m['goodput']:.0f}|answered={len(done)}|"
+               f"shed={shed}|expired={expired}|wrong={wrong}|"
+               f"p99_ms={p99:.2f}|max_queue={max_queue}|"
+               f"query_timeout_s={query_timeout_s:g}|parity=exact_answered")
+            assert wrong == 0, \
+                f"{wrong} wrong answers under {x:g}x overload"
+
+    peak = max(m["goodput"] for m in results.values())
+    for x, m in results.items():
+        if x < 2.0:
+            continue
+        assert m["shed"] + m["expired"] > 0, \
+            f"no shedding at {x:g}x capacity — admission bound never bit"
+        assert m["goodput"] >= 0.8 * peak, \
+            (f"goodput collapsed under overload: {m['goodput']:.0f} qps at "
+             f"{x:g}x vs peak {peak:.0f}")
+        assert m["p99_ms"] <= query_timeout_s * 1e3, \
+            f"p99 {m['p99_ms']:.0f}ms exceeds the {query_timeout_s}s deadline"
+
+    # -- retry storm: budgeted vs unbudgeted over a fully-shedding worker ----
+    storm: dict[str, int] = {}
+    for tag, budget in (
+            ("budgeted", RetryBudget(ratio=0.05, cap=5.0, floor_per_s=0.0)),
+            ("unbudgeted", RetryBudget(unlimited=True))):
+        store_cfg = StoreConfig(k=k, n_bands=nb, rows_per_band=r)
+        workers = spawn_workers(store_cfg, 1, gate_limit=0)
+        svc2 = None
+        try:
+            try:
+                store = connect_sharded([h.address for h in workers],
+                                        store_cfg, budget=budget)
+            except BaseException:
+                for h in workers:
+                    h.terminate()
+                raise
+            svc2 = SimilaritySearchService(
+                SearchConfig(d=d, k=k, n_bands=nb, rows_per_band=r,
+                             n_shards=1, transport="tcp"),
+                store=store, workers=workers)
+            svc2.add_sparse(docs[:64])         # writes bypass the gate
+            n_failed = 0
+            with svc2.stream(max_batch=8, max_delay_ms=0.5,
+                             retries=3) as st:
+                tickets = [st.submit_sparse(qrows[i % n_stream], top_k=10)
+                           for i in range(n_storm)]
+                for t in tickets:
+                    try:
+                        t.result(timeout=120)
+                    except Overloaded:
+                        n_failed += 1
+            storm[tag] = budget.n_spent
+            em(f"search_overload_retry_storm_{tag}", 0.0,
+               f"queries={n_storm}|failed={n_failed}|"
+               f"retries_spent={budget.n_spent}|"
+               f"retries_denied={budget.n_denied}|"
+               f"primaries={budget.n_primaries}|stream_retries=3")
+        finally:
+            if svc2 is not None:
+                svc2.close()
+    assert storm["unbudgeted"] >= 2 * max(storm["budgeted"], 1), \
+        (f"retry budget did not cap the storm: budgeted="
+         f"{storm['budgeted']} unbudgeted={storm['unbudgeted']}")
+
+
 def _bench_availability(em, *, n_docs: int, n_queries: int, rounds: int,
                         kill_round: int, k: int = 128, n_bands: int = 32,
                         rows_per_band: int = 4) -> None:
     """Availability axis: the same mid-traffic kill, unreplicated vs
     replicated.
 
-    Both planes are S=2 tcp; a worker serving shard 0 is terminated while
-    query rounds are in flight.  The unreplicated row records the outage —
+    Both planes are S=2 tcp; shard 0's worker carries a deterministic
+    ``FaultPlan`` that hard-kills it on its ``kill_round + 1``-th QUERY
+    (the warmup round is #0) — death lands mid-protocol on the exact same
+    message every run, not wherever a wall-clock ``terminate()`` race puts
+    it.  The unreplicated row records the outage —
     every round from the kill on fails until an operator rebuilds the
     plane (the pre-PR-9 behavior, measured, not asserted).  The replicated
     row (R=2 + write-ahead ingest journal + supervisor) must answer EVERY
@@ -417,8 +574,14 @@ def _bench_availability(em, *, n_docs: int, n_queries: int, rounds: int,
 
     from repro.replica import (IngestJournal, Supervisor, connect_replicated,
                                spawn_replicated)
-    from repro.transport import (TransportError, connect_sharded,
-                                 shutdown_plane, spawn_workers)
+    from repro.transport import (FaultEvent, FaultPlan, TransportError,
+                                 connect_sharded, shutdown_plane,
+                                 spawn_workers)
+
+    # the warm query is QUERY #0, so round i is the worker's QUERY
+    # #(i + 1): the kill fires as the victim receives round kill_round's
+    # query — the same protocol point every run
+    kill = FaultPlan([FaultEvent("kill", kill_round + 1, "query")])
 
     cfg = StoreConfig.sized_for(-(-n_docs // 2), k=k, n_bands=n_bands,
                                 rows_per_band=rows_per_band, bucket_width=4)
@@ -430,7 +593,7 @@ def _bench_availability(em, *, n_docs: int, n_queries: int, rounds: int,
     ref = ref_store.query(qsigs, top_k=10)
 
     # -- unreplicated S=2: the kill is an outage ----------------------------
-    handles = spawn_workers(cfg, 2)
+    handles = spawn_workers(cfg, 2, faults={0: kill})
     sh = None
     lat, failed = [], 0
     try:
@@ -438,8 +601,6 @@ def _bench_availability(em, *, n_docs: int, n_queries: int, rounds: int,
         sh.add(sigs)
         sh.query(qsigs, top_k=10)          # warm the shape
         for i in range(rounds):
-            if i == kill_round:
-                handles[0].terminate()
             t0 = time.perf_counter()
             try:
                 ids, scores = sh.query(qsigs, top_k=10)
@@ -462,7 +623,7 @@ def _bench_availability(em, *, n_docs: int, n_queries: int, rounds: int,
     # -- replicated S=2 x R=2: zero failed rounds, measured recovery --------
     with tempfile.TemporaryDirectory() as tdir:
         journal = IngestJournal(f"{tdir}/ingest.journal")
-        grid = spawn_replicated(cfg, 2, 2)
+        grid = spawn_replicated(cfg, 2, 2, faults={(0, 0): kill})
         store = sup = None
         lat, t_kill, t_rec = [], None, None
         try:
@@ -473,8 +634,7 @@ def _bench_availability(em, *, n_docs: int, n_queries: int, rounds: int,
             store.query(qsigs, top_k=10)   # warm the shape
             for i in range(rounds):
                 if i == kill_round:
-                    t_kill = time.perf_counter()
-                    grid[0][0].terminate()     # shard 0's PRIMARY
+                    t_kill = time.perf_counter()   # plan kills the PRIMARY
                 t0 = time.perf_counter()
                 ids, scores = store.query(qsigs, top_k=10)
                 lat.append(time.perf_counter() - t0)
@@ -521,7 +681,8 @@ def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
         query_impl: str = "auto",
         arrival_rates: tuple[float, ...] | None = (150.0, 1000.0),
         stream_queries: int | None = None,
-        availability: bool | None = None) -> list[dict]:
+        availability: bool | None = None,
+        overload: bool | None = None) -> list[dict]:
     rows_out: list[dict] = []
 
     def em(name, us, derived, **fields):
@@ -801,6 +962,21 @@ def run(n_items: int = 100_000, n_queries: int = 256, k: int = 128,
             _bench_availability(em, n_docs=ingest_docs, n_queries=64,
                                 rounds=60, kill_round=20)
 
+    # overload axis: open-loop arrivals past measured capacity through the
+    # bounded-admission streaming front, plus the budgeted-vs-unbudgeted
+    # retry storm.  Same gating as availability: full runs with tcp
+    if overload is None:
+        overload = not smoke()
+    if overload and "tcp" in transports:
+        if smoke():
+            _bench_overload(em, n_docs=1_200, n_stream=160, n_storm=64,
+                            rates_x=(1.0, 4.0), max_batch=16,
+                            max_queue=32, query_timeout_s=5.0)
+        else:
+            _bench_overload(em, n_docs=8_000, n_stream=512, n_storm=128,
+                            max_batch=32, max_queue=64,
+                            query_timeout_s=10.0)
+
     return rows_out
 
 
@@ -838,6 +1014,12 @@ def main(argv=None) -> None:
                     help="mid-traffic kill axis: unreplicated outage vs "
                          "replicated R=2 recovery (default: on for full "
                          "runs with a tcp axis, off in smoke)")
+    ap.add_argument("--overload", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="overload axis: open-loop rates past capacity "
+                         "(goodput/shed/p99 contract) + budgeted vs "
+                         "unbudgeted retry storm (default: on for full "
+                         "runs with a tcp axis, off in smoke)")
     args = ap.parse_args(argv)
     if args.smoke:
         common.set_smoke(True)
@@ -861,6 +1043,7 @@ def main(argv=None) -> None:
     if args.stream_queries is not None:
         kw["stream_queries"] = args.stream_queries
     kw["availability"] = args.availability
+    kw["overload"] = args.overload
     print("name,us_per_call,derived")
     run(**kw)
 

@@ -19,6 +19,12 @@ the whole plane.
 a dump file: every line parses, has the schema above, and — with
 ``--require-shard-hists`` — at least one snapshot carries a nonzero
 per-shard partial-latency histogram (the CI metrics-smoke gate).
+``--require-overload`` additionally requires the overload-hardening
+families to be wired: the plane's shared retry-budget token gauge, at
+least one per-lane circuit-breaker state gauge, and at least one
+shedding-surface metric (streaming admission queue or worker admission
+gate).  Names are matched as substrings so per-lane relabelled worker
+snapshots (``shard0.replica1.worker.overloaded``) count.
 """
 
 from __future__ import annotations
@@ -90,15 +96,45 @@ class MetricsDumper:
         self.close()
 
 
-def check_dump(path: str, require_shard_hists: bool = False) -> dict:
+# the overload-hardening metric surface, grouped by what must exist for
+# the plane to be considered wired (substring match against metric names,
+# so per-lane relabelled worker snapshots count)
+_OVERLOAD_FAMILIES = {
+    "retry_budget": ("transport.retry_budget.tokens",),
+    "breaker": ("transport.breaker.",),
+    "shed_surface": ("stream.queue_depth", "stream.shed",
+                     "worker.admission.depth", "worker.overloaded"),
+}
+
+
+def _iter_snapshots(line: dict):
+    """The line's own registry snapshot plus any snapshot-shaped dicts an
+    ``extra`` callable folded in (worker STATS obs payloads)."""
+    yield line["metrics"]
+    for key, val in line.items():
+        if key == "metrics" or not isinstance(val, dict):
+            continue
+        if {"counters", "gauges", "hists"} <= set(val):
+            yield val
+        else:
+            for sub in val.values():
+                if isinstance(sub, dict) \
+                        and {"counters", "gauges", "hists"} <= set(sub):
+                    yield sub
+
+
+def check_dump(path: str, require_shard_hists: bool = False,
+               require_overload: bool = False) -> dict:
     """Validate a dump file; raise ``ValueError`` on malformed content.
 
-    Returns summary stats: line count, span count, and the per-shard
-    partial-latency histogram names seen with nonzero counts.
+    Returns summary stats: line count, span count, the per-shard
+    partial-latency histogram names seen with nonzero counts, and which
+    overload-hardening metric families were present.
     """
     n_lines = 0
     n_spans = 0
     shard_hists: set[str] = set()
+    overload_seen: dict[str, set] = {k: set() for k in _OVERLOAD_FAMILIES}
     with open(path, encoding="utf-8") as f:
         for lineno, raw in enumerate(f, 1):
             raw = raw.strip()
@@ -122,6 +158,13 @@ def check_dump(path: str, require_shard_hists: bool = False) -> dict:
                         f"{path}:{lineno}: hist {name!r} has no int count")
                 if ".shard" in name and ".partial" in name and h["count"] > 0:
                     shard_hists.add(name)
+            for sub in _iter_snapshots(line):
+                names = list(sub.get("counters", {})) \
+                    + list(sub.get("gauges", {}))
+                for family, needles in _OVERLOAD_FAMILIES.items():
+                    for name in names:
+                        if any(n in name for n in needles):
+                            overload_seen[family].add(name)
             n_spans += len(line["spans"])
             n_lines += 1
     if n_lines == 0:
@@ -130,8 +173,16 @@ def check_dump(path: str, require_shard_hists: bool = False) -> dict:
         raise ValueError(
             f"{path}: expected nonzero per-shard partial histograms for >=2 "
             f"shards, saw {sorted(shard_hists)}")
+    if require_overload:
+        missing = [f for f, seen in overload_seen.items() if not seen]
+        if missing:
+            raise ValueError(
+                f"{path}: overload metric families missing: {missing} "
+                f"(need {[_OVERLOAD_FAMILIES[f] for f in missing]})")
     return {"lines": n_lines, "spans": n_spans,
-            "shard_hists": sorted(shard_hists)}
+            "shard_hists": sorted(shard_hists),
+            "overload_families": {k: sorted(v)
+                                  for k, v in overload_seen.items() if v}}
 
 
 def main(argv=None) -> int:
@@ -142,15 +193,21 @@ def main(argv=None) -> int:
     ap.add_argument("--require-shard-hists", action="store_true",
                     help="require nonzero per-shard partial histograms "
                          "from >=2 shards (CI smoke gate)")
+    ap.add_argument("--require-overload", action="store_true",
+                    help="require the overload-hardening metric families "
+                         "(retry budget, circuit breakers, a shedding "
+                         "surface) to appear in the dump (CI smoke gate)")
     args = ap.parse_args(argv)
     try:
         out = check_dump(args.check,
-                         require_shard_hists=args.require_shard_hists)
+                         require_shard_hists=args.require_shard_hists,
+                         require_overload=args.require_overload)
     except (OSError, ValueError) as e:
         print(f"FAIL: {e}", file=sys.stderr)
         return 1
     print(f"OK: {out['lines']} lines, {out['spans']} spans, "
-          f"shard hists: {out['shard_hists']}")
+          f"shard hists: {out['shard_hists']}, "
+          f"overload families: {sorted(out['overload_families'])}")
     return 0
 
 

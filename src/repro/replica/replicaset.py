@@ -46,9 +46,11 @@ from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.store.sharded import ShardedSketchStore
 from repro.transport import wire
-from repro.transport.client import (FanoutGroup, HedgePolicy, ShardConnection,
-                                    TransportError, WorkerError,
-                                    _partial_from)
+from repro.transport.client import (DeadlineExceeded, FanoutGroup,
+                                    HedgePolicy, RetryBudget,
+                                    ShardConnection, TransportError,
+                                    WorkerError, _partial_from,
+                                    attach_deadline)
 from repro.transport.server import WorkerHandle, spawn_workers
 from repro.transport.wire import Message, MsgType
 
@@ -71,13 +73,14 @@ class ReplicaLane:
 
 
 def _traced(fields: dict) -> dict:
-    """Attach the ambient trace context as wire fields (same contract as
-    ``RemoteShard._traced`` — worker spans join the coordinator's trace)."""
+    """Attach the ambient trace context and deadline as wire fields (same
+    contract as ``RemoteShard._traced`` — worker spans join the
+    coordinator's trace; expired reads drop server-side)."""
     ctx = obs_trace.current()
     if ctx is not None:
         fields[wire.TRACE_ID_FIELD] = ctx.trace_id
         fields[wire.TRACE_PARENT_FIELD] = ctx.span_id
-    return fields
+    return attach_deadline(fields)
 
 
 class _ReplicaRead:
@@ -95,6 +98,8 @@ class _ReplicaRead:
     def result(self):
         try:
             return self._pend.result()
+        except DeadlineExceeded:
+            raise          # the caller is gone: no lane can answer in time
         except TransportError as first:
             return self._failover(first)
 
@@ -106,17 +111,33 @@ class _ReplicaRead:
         rs = self._rset
         rs._m_read_failover.inc()
         last: TransportError = first
-        for lane in rs.up_lanes():
+        candidates = rs.breaker_ordered(rs.up_lanes())
+        for i, lane in enumerate(candidates):
+            # an open breaker means this lane has been flapping: skip it
+            # (no probe due yet) unless it is the LAST candidate — an
+            # all-open shard still gets one attempt rather than none
+            if i < len(candidates) - 1 \
+                    and not lane.conn.breaker.allow():
+                continue
+            # every failover re-ask is retry traffic from the shared
+            # budget; an exhausted budget surfaces the original failure
+            # instead of feeding a retry storm
+            if not rs.group.budget.try_spend():
+                raise WorkerError(
+                    f"shard {rs.shard}: read failover stopped — retry "
+                    f"budget exhausted (original failure: "
+                    f"{type(first).__name__}: {first})") from first
             try:
                 rs.group.ensure_clean(lane.conn)
                 reply = lane.conn.request(Message(self._msg.type,
                                                   dict(self._msg.fields)))
             except TransportError as e:
                 if lane.conn.broken is None:
-                    # an ERROR reply over an intact stream: the worker is
-                    # alive and deterministically rejected the request —
-                    # another replica would answer the same, and burning
-                    # lanes on it would take a healthy shard down
+                    # an ERROR/OVERLOADED reply over an intact stream: the
+                    # worker is alive and deterministically rejected the
+                    # request — the caller's own retry policy (budget +
+                    # deadline) decides what happens next; burning lanes
+                    # on it would take a healthy shard down
                     raise
                 last = e
                 rs._mark_down(lane, f"read failover failed: {e}")
@@ -212,6 +233,13 @@ class ReplicaSet:
         with self.lock:
             return [l for l in self.lanes if l.up]
 
+    @staticmethod
+    def breaker_ordered(lanes: list[ReplicaLane]) -> list[ReplicaLane]:
+        """Stable order with breaker-healthy lanes first: a flapping lane
+        (breaker open / half-open) is deprioritized, not banished — it is
+        still attempted when it is the only option or its probe is due."""
+        return sorted(lanes, key=lambda l: not l.conn.breaker.healthy)
+
     def primary(self) -> ReplicaLane:
         with self.lock:
             for l in self.lanes:
@@ -260,7 +288,11 @@ class ReplicaSet:
     # -- reads ---------------------------------------------------------------
     def _start_read(self, msg: Message, decode) -> _ReplicaRead:
         last: TransportError | None = None
-        for lane in self.up_lanes():
+        candidates = self.breaker_ordered(self.up_lanes())
+        for i, lane in enumerate(candidates):
+            if i < len(candidates) - 1 \
+                    and not lane.conn.breaker.allow():
+                continue       # breaker open and a sibling is available
             try:
                 pend = self.group.submit(lane.conn, msg, decode=decode,
                                          reset_on_error=False,
@@ -468,13 +500,18 @@ def spawn_replicated(cfg, n_shards: int, n_replicas: int, *,
                      host: str = "127.0.0.1", start_timeout: float = 120.0,
                      slow_lanes: dict[tuple[int, int],
                                       tuple[float, float]] | None = None,
+                     gate_limit: int | None = None,
+                     faults: dict[tuple[int, int], object] | None = None,
                      ) -> list[list[WorkerHandle]]:
     """Spawn an S x R worker grid; returns ``grid[shard][replica]``.
 
     Every replica of shard s boots from the SAME ``shard_{s}.npz`` when
     ``snapshot_dir`` is given — replicas start bit-identical by
     construction.  ``slow_lanes`` maps ``(shard, replica)`` to the
-    ``(prob, sleep_s)`` injected read latency of ``spawn_workers``.
+    ``(prob, sleep_s)`` injected read latency of ``spawn_workers``;
+    ``faults`` maps ``(shard, replica)`` to that lane's deterministic
+    ``FaultPlan`` (or encoded spec) — explicit per-spawn plans, so a
+    supervisor respawn of the slot does NOT re-inherit the schedule.
     """
     shards = [s for s in range(n_shards) for _ in range(n_replicas)]
     replicas = [r for _ in range(n_shards) for r in range(n_replicas)]
@@ -483,12 +520,18 @@ def spawn_replicated(cfg, n_shards: int, n_replicas: int, *,
         slow = {i: slow_lanes[(shards[i], replicas[i])]
                 for i in range(len(shards))
                 if (shards[i], replicas[i]) in slow_lanes}
+    plans = None
+    if faults:
+        plans = {i: faults[(shards[i], replicas[i])]
+                 for i in range(len(shards))
+                 if (shards[i], replicas[i]) in faults}
     handles = spawn_workers(cfg, n_shards * n_replicas,
                             snapshot_dir=snapshot_dir,
                             probe_impl=probe_impl, query_impl=query_impl,
                             host=host, start_timeout=start_timeout,
                             slow_shards=slow, shards=shards,
-                            replicas=replicas)
+                            replicas=replicas, gate_limit=gate_limit,
+                            faults=plans)
     return [[handles[s * n_replicas + r] for r in range(n_replicas)]
             for s in range(n_shards)]
 
@@ -499,6 +542,7 @@ def connect_replicated(grid: list[list[WorkerHandle]], cfg=None, *,
                        partition: str = "round_robin",
                        query_impl: str = "auto", timeout: float = 30.0,
                        hedge: "HedgePolicy | bool | None" = True,
+                       budget: RetryBudget | None = None,
                        ) -> ReplicatedSketchStore:
     """Build a ``ReplicatedSketchStore`` over a ``spawn_replicated`` grid.
 
@@ -527,7 +571,7 @@ def connect_replicated(grid: list[list[WorkerHandle]], cfg=None, *,
                 lanes.append(ReplicaLane(s, r, conn, h))
             lanes_by_shard.append(lanes)
         group = FanoutGroup(conns, timeout=timeout, hedge=hedge,
-                            deadline_name="query_timeout_s")
+                            deadline_name="query_timeout_s", budget=budget)
         lock = threading.RLock()
         rsets = [ReplicaSet(s, lanes, group, lock)
                  for s, lanes in enumerate(lanes_by_shard)]

@@ -31,11 +31,22 @@ half-built worker, and leaves the lane down — the next tick retries.
 Successful failovers count ``replica.failovers`` and observe the
 ``replica.resync`` histogram (kill-to-rejoin wall time, the availability
 number the bench reports).
+
+Crash-loop protection keeps a sick lane from eating the plane: a lane
+that dies again within ``stable_window_s`` of its last rejoin extends a
+per-lane streak, and each streak step delays the next respawn by
+exponential backoff with jitter (so a deterministic crasher doesn't
+respawn in lockstep with its trigger).  A lane whose streak reaches
+``max_respawns`` is capped: it stays down, counts once into
+``replica.crash_loops``, and the supervisor stops burning snapshots,
+journal replays, and digest checks on it.  A lane that survives the
+stable window resets its streak to zero.
 """
 
 from __future__ import annotations
 
 import os
+import random
 import threading
 import time
 import traceback
@@ -62,7 +73,9 @@ class Supervisor:
                  interval_s: float = 0.5, heartbeat_timeout_s: float = 5.0,
                  snapshot_dir: str | None = None,
                  probe_impl: str = "auto", query_impl: str = "auto",
-                 start_timeout: float = 120.0):
+                 start_timeout: float = 120.0,
+                 backoff_base_s: float = 0.25, backoff_max_s: float = 30.0,
+                 max_respawns: int = 5, stable_window_s: float = 30.0):
         self.store = store
         self.interval_s = float(interval_s)
         self.heartbeat_timeout_s = float(heartbeat_timeout_s)
@@ -70,11 +83,19 @@ class Supervisor:
         self.probe_impl = probe_impl
         self.query_impl = query_impl
         self.start_timeout = float(start_timeout)
+        self.backoff_base_s = float(backoff_base_s)
+        self.backoff_max_s = float(backoff_max_s)
+        self.max_respawns = int(max_respawns)
+        self.stable_window_s = float(stable_window_s)
         reg = obs_metrics.default()
         self._m_failovers = reg.counter("replica.failovers")
         self._m_recover_fail = reg.counter("replica.recover_failures")
         self._m_heartbeats = reg.counter("replica.heartbeats")
+        self._m_crash_loops = reg.counter("replica.crash_loops")
         self._h_resync = reg.histogram("replica.resync")
+        # per-lane crash-loop state: streak of quick deaths, earliest next
+        # respawn, last rejoin instant (-1 = none pending), capped flag
+        self._backoff: dict[tuple[int, int], dict] = {}
         # private control conns, one per (shard, replica) slot — heartbeats
         # never ride the query lanes, so a stalled fan-out cannot fake a
         # dead worker and a heartbeat cannot queue behind a big ADD
@@ -152,8 +173,38 @@ class Supervisor:
         self._m_heartbeats.inc()
         return True
 
+    # -- crash-loop gate -----------------------------------------------------
+    def _crash_gate(self, lane: ReplicaLane) -> bool:
+        """May this down lane be respawned *now*?  Advances the per-lane
+        crash-loop streak the first time a post-rejoin death is seen; a
+        capped lane never passes again."""
+        key = (lane.shard, lane.replica)
+        st = self._backoff.setdefault(
+            key, {"streak": 0, "not_before": 0.0, "rejoined": -1.0,
+                  "capped": False})
+        if st["capped"]:
+            return False
+        now = time.monotonic()
+        if st["rejoined"] >= 0.0:
+            # first tick that sees this lane down again after a rejoin:
+            # a quick death extends the streak, a long-stable lane resets it
+            quick = (now - st["rejoined"]) < self.stable_window_s
+            st["streak"] = st["streak"] + 1 if quick else 0
+            st["rejoined"] = -1.0
+            if st["streak"] >= self.max_respawns:
+                st["capped"] = True
+                self._m_crash_loops.inc()
+                return False
+            if st["streak"] > 0:
+                delay = min(self.backoff_max_s,
+                            self.backoff_base_s * 2.0 ** (st["streak"] - 1))
+                st["not_before"] = now + delay * (0.5 + random.random())
+        return now >= st["not_before"]
+
     # -- recovery ------------------------------------------------------------
     def _recover(self, rset: ReplicaSet, lane: ReplicaLane) -> bool:
+        if not self._crash_gate(lane):
+            return False               # backing off / capped — not a failure
         t0 = time.perf_counter()
         handle = None
         conn = None
@@ -192,6 +243,9 @@ class Supervisor:
                     last = self._replay(conn, rset.shard, recs)
                 self._verify(rset, lane, conn)
                 rset.rejoin(lane, conn, handle)
+            st = self._backoff.get((lane.shard, lane.replica))
+            if st is not None:
+                st["rejoined"] = time.monotonic()
             self._m_failovers.inc()
             self._h_resync.observe(time.perf_counter() - t0)
             return True

@@ -31,11 +31,26 @@ could have no candidates and drag the whole batch through the brute
 fallback) while per-row independence keeps the real rows' answers
 untouched; the padding's only job is to keep the set of distinct batch
 shapes small so JAX recompiles O(log max_batch) times, not O(max_batch).
+
+Overload hardening: ``max_queue`` bounds the admission queue — a full
+queue sheds the NEWEST arrival (its ticket comes back already rejected
+with :class:`~repro.transport.client.Overloaded` carrying a retry-after
+hint), so queued work is never reordered and every *admitted* query stays
+bit-identical to the serial reference.  ``query_timeout_s`` gives each
+ticket an absolute deadline that propagates as the wire deadline of its
+coalesced batch (the batch carries the MAX over its tickets' deadlines;
+per-row independence means sharing a batch never changes an answer, only
+when it lands).  Tickets whose deadline passes while still queued are
+dropped at dispatch without signing.  Batch retries
+(``StreamConfig.retries``) spend from the plane's shared ``RetryBudget``
+— the same bucket hedges and replica failovers draw on — honor a
+server's ``retry_after_s`` hint, and never fire past the batch deadline.
 """
 
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import threading
 import time
@@ -43,6 +58,8 @@ import time
 import numpy as np
 
 from repro.obs import metrics as obs_metrics
+from repro.transport.client import (DeadlineExceeded, Overloaded,
+                                    TransportError, deadline_scope)
 
 FLUSH_REASONS = ("full", "deadline", "shape", "close")
 
@@ -60,6 +77,13 @@ class StreamConfig:
     # succeeds on retry — the replica set has failed over by then — so the
     # admitted queries survive the kill instead of erroring out
     retries: int = 0
+    # admission bound (0 = unbounded): a full queue sheds the NEWEST
+    # arrival with an already-rejected Overloaded ticket — admitted work
+    # is never reordered or revoked
+    max_queue: int = 0
+    # default per-ticket deadline (0 = none), overridable per submit;
+    # propagates as the batch's wire deadline so workers drop expired work
+    query_timeout_s: float = 0.0
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -71,16 +95,23 @@ class StreamConfig:
             raise ValueError(f"depth must be >= 1 (got {self.depth})")
         if self.retries < 0:
             raise ValueError(f"retries must be >= 0 (got {self.retries})")
+        if self.max_queue < 0:
+            raise ValueError(f"max_queue must be >= 0 (got {self.max_queue})")
+        if self.query_timeout_s < 0:
+            raise ValueError(f"query_timeout_s must be >= 0 "
+                             f"(got {self.query_timeout_s})")
 
 
 class QueryTicket:
     """One submitted query: resolves to ``(ids, scores)`` when its batch
     completes.  ``latency_s`` is admission-to-answer wall time."""
 
-    def __init__(self, row: np.ndarray, layout: str, top_k: int):
+    def __init__(self, row: np.ndarray, layout: str, top_k: int,
+                 deadline: float | None = None):
         self.row = row
         self.layout = layout
         self.top_k = top_k
+        self.deadline = deadline   # absolute epoch seconds, None = no limit
         # admission-compatibility key: batches only coalesce rows the
         # signing kernel can stack into one array
         self.key = (layout, row.shape, row.dtype.str)
@@ -147,6 +178,9 @@ class StreamingQueryService:
         self._h_e2e = reg.histogram("stream.e2e")
         self._c_queries = reg.counter("stream.queries")
         self._c_retries = reg.counter("stream.retries")
+        self._c_shed = reg.counter("stream.shed")
+        self._c_expired = reg.counter("stream.expired")
+        self._g_depth = reg.gauge("stream.queue_depth")
         self._c_flush = {r: reg.counter(f"stream.flush.{r}")
                          for r in FLUSH_REASONS}
         self.n_batches = 0
@@ -155,25 +189,51 @@ class StreamingQueryService:
         self._thread.start()
 
     # -- submission ----------------------------------------------------------
-    def submit_sparse(self, idx, top_k: int | None = None) -> QueryTicket:
+    def submit_sparse(self, idx, top_k: int | None = None,
+                      query_timeout_s: float | None = None) -> QueryTicket:
         """Admit one sparse query (1-D array of active indices)."""
-        return self._submit(np.asarray(idx), "sparse", top_k)
+        return self._submit(np.asarray(idx), "sparse", top_k, query_timeout_s)
 
-    def submit_dense(self, v, top_k: int | None = None) -> QueryTicket:
+    def submit_dense(self, v, top_k: int | None = None,
+                     query_timeout_s: float | None = None) -> QueryTicket:
         """Admit one dense query (1-D vector of length d)."""
-        return self._submit(np.asarray(v), "dense", top_k)
+        return self._submit(np.asarray(v), "dense", top_k, query_timeout_s)
 
-    def _submit(self, row: np.ndarray, layout: str,
-                top_k: int | None) -> QueryTicket:
+    def _retry_after_locked(self) -> float:
+        """Server-side backoff hint for a shed ticket: roughly one drain of
+        the current queue (observed e2e mean per batch x queued batches),
+        floored at one coalescing window."""
+        floor = self.cfg.max_delay_ms / 1e3
+        if not self._h_e2e.count:
+            return max(floor, 1e-3)
+        batches = max(len(self._q) / self.cfg.max_batch, 1.0)
+        return max(self._h_e2e.mean * batches, floor, 1e-3)
+
+    def _submit(self, row: np.ndarray, layout: str, top_k: int | None,
+                query_timeout_s: float | None = None) -> QueryTicket:
         if row.ndim != 1:
             raise ValueError(
                 f"submit takes ONE query (1-D row, got shape {row.shape}); "
                 "batches are what the admission queue builds")
-        t = QueryTicket(row, layout, int(top_k or self.cfg.top_k))
+        tmo = self.cfg.query_timeout_s if query_timeout_s is None \
+            else float(query_timeout_s)
+        t = QueryTicket(row, layout, int(top_k or self.cfg.top_k),
+                        deadline=time.time() + tmo if tmo > 0 else None)
         with self._cond:
             if self._closed:
                 raise RuntimeError("streaming service is closed")
+            if self.cfg.max_queue and len(self._q) >= self.cfg.max_queue:
+                # reject-newest: the ticket comes back already rejected —
+                # same interface as an admitted one, so callers need one
+                # code path — and the queue's FIFO admitted work stands
+                self._c_shed.inc()
+                t._reject(Overloaded(
+                    f"streaming admission queue full "
+                    f"({len(self._q)}/{self.cfg.max_queue}): query shed",
+                    retry_after_s=self._retry_after_locked()))
+                return t
             self._q.append(t)
+            self._g_depth.set(len(self._q))
             self._cond.notify()
         return t
 
@@ -225,7 +285,9 @@ class StreamingQueryService:
                 self._cond.wait(
                     timeout=max(deadline - time.perf_counter(), 0.0))
                 continue
-            return [self._q.popleft() for _ in range(n)], reason
+            out = [self._q.popleft() for _ in range(n)]
+            self._g_depth.set(len(self._q))
+            return out, reason
 
     def _pad_to(self, n: int) -> int:
         if not self.cfg.pad_pow2:
@@ -233,6 +295,22 @@ class StreamingQueryService:
         return min(1 << (n - 1).bit_length(), self.cfg.max_batch)
 
     def _dispatch(self, tickets: list[QueryTicket], reason: str) -> None:
+        # a ticket whose deadline passed while queued is dead weight: its
+        # caller is gone, so it is dropped before any signing work happens
+        now = time.time()
+        live = []
+        for t in tickets:
+            if t.deadline is not None and now >= t.deadline:
+                self._c_expired.inc()
+                t._reject(DeadlineExceeded(
+                    "query deadline passed while queued: dropped before "
+                    "dispatch"))
+            else:
+                live.append(t)
+        self._c_flush[reason].inc()
+        if not live:
+            return
+        tickets = live
         rows = np.stack([t.row for t in tickets])
         n_pad = self._pad_to(len(tickets)) - len(tickets)
         if n_pad:
@@ -245,28 +323,72 @@ class StreamingQueryService:
             for t in tickets:
                 t._reject(e)
             return
-        self._c_flush[reason].inc()
         self._h_batch.observe(len(tickets))
         now = time.perf_counter()
         for t in tickets:
             self._h_qwait.observe(now - t.t_submit)
         self._inflight.append((signed, tickets))
 
-    def _query_with_retry(self, svc, signed, top_k: int):
-        """Run one batch query, retrying up to ``cfg.retries`` times on
-        transport failures only — a ``TransportError`` means a shard round
-        died (worker killed, stream cut), which on a self-healing plane is
-        transient; any other exception is deterministic and re-raising it
-        immediately is the right answer."""
-        from repro.transport import TransportError
+    def _budget(self):
+        """The plane's shared ``RetryBudget``, when the store has one (a
+        remote plane routes every shard through one ``FanoutGroup`` whose
+        budget is THE plane budget); an in-proc store has no transport and
+        its retries stay free."""
+        for sh in getattr(self.service.store, "shards", []) or []:
+            b = getattr(getattr(sh, "group", None), "budget", None)
+            if b is not None:
+                return b
+        return None
+
+    @staticmethod
+    def _batch_deadline(tickets: list[QueryTicket]) -> float | None:
+        """Wire deadline for a coalesced batch: the MAX over its tickets'
+        deadlines.  The batch must be allowed to finish for its most
+        patient ticket; per-row independence means an earlier-deadline
+        sibling still gets its exact answer when the batch lands.  Any
+        ticket without a deadline makes the batch unbounded."""
+        dls = [t.deadline for t in tickets]
+        if any(d is None for d in dls):
+            return None
+        return max(dls)
+
+    def _query_with_retry(self, svc, signed, top_k: int,
+                          batch_deadline: float | None = None):
+        """Run one batch query under the batch's wire deadline, retrying up
+        to ``cfg.retries`` times on transient failures only.
+
+        Transient means a ``TransportError`` (a shard round died — worker
+        killed, stream cut — which a self-healing plane fixes between
+        attempts) or an ``Overloaded`` rejection (provably clean, and its
+        ``retry_after_s`` hint is honored before re-asking).  Every retry
+        spends one token from the plane's shared ``RetryBudget`` and never
+        fires past ``batch_deadline``.  ``DeadlineExceeded`` is terminal:
+        the caller is gone, so re-asking is pure waste.  Any other
+        exception is deterministic and re-raises immediately."""
+        budget = self._budget()
         last: BaseException | None = None
         for attempt in range(self.cfg.retries + 1):
+            scope = deadline_scope(batch_deadline) \
+                if batch_deadline is not None else contextlib.nullcontext()
             try:
-                return svc._query(signed, top_k)
+                with scope:
+                    return svc._query(signed, top_k)
+            except DeadlineExceeded:
+                raise
+            except Overloaded as e:
+                last, wait = e, max(e.retry_after_s, 0.0)
             except TransportError as e:
-                last = e
-                if attempt < self.cfg.retries:
-                    self._c_retries.inc()
+                last, wait = e, 0.0
+            if attempt >= self.cfg.retries:
+                break
+            if batch_deadline is not None \
+                    and time.time() + wait >= batch_deadline:
+                break                  # a retry could not land in time
+            if budget is not None and not budget.try_spend():
+                break                  # plane-wide retry budget exhausted
+            if wait:
+                time.sleep(wait)
+            self._c_retries.inc()
         raise last
 
     def _drain_one(self) -> None:
@@ -279,7 +401,8 @@ class StreamingQueryService:
                 # (mirrors _traced_query)
                 signed = np.asarray(signed)
             top_k = max(t.top_k for t in tickets)
-            ids, scores = self._query_with_retry(svc, signed, top_k)
+            ids, scores = self._query_with_retry(
+                svc, signed, top_k, self._batch_deadline(tickets))
             ids, scores = np.asarray(ids), np.asarray(scores)
         except Exception as e:
             # one batch's failure answers its own tickets and nothing else;

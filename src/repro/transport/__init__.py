@@ -17,14 +17,31 @@ an actual cross-process transport:
 Because every worker runs the exact same candidate + partial-top-k code as
 the in-process backend and the merge is associative, tcp-backed answers are
 bit-identical to the in-process plane on the same items.
+
+Overload hardening rides the same seams: requests carry an absolute wire
+deadline (``deadline_scope``), workers shed behind a bounded admission
+gate with retryable ``Overloaded`` replies, the coordinator spends every
+hedge/failover/retry from one plane-wide ``RetryBudget`` behind per-lane
+``CircuitBreaker``\\ s, and ``faults`` provides the deterministic
+fault-injection plane the chaos tests and availability bench drive.
 """
 
-from .client import (FanoutGroup, HedgePolicy, RemoteShard, ShardConnection,
-                     TransportError, TransportTimeout, WorkerError,
-                     connect_sharded, shutdown_plane)
-from .server import WorkerHandle, spawn_workers
+from .client import (CircuitBreaker, DeadlineExceeded, FanoutGroup,
+                     HedgePolicy, Overloaded, RemoteShard, RetryBudget,
+                     ShardConnection, TransportError, TransportTimeout,
+                     WorkerError, connect_sharded, current_deadline,
+                     deadline_scope, shutdown_plane)
+from .faults import (FAULT_LOG_ENV, FAULTS_ENV, KILL_EXIT_CODE, FaultEvent,
+                     FaultPlan, faults_env_value, install_client_plan,
+                     read_fired_log)
+from .server import AdmissionGate, WorkerHandle, spawn_workers
 
-__all__ = ["FanoutGroup", "HedgePolicy", "RemoteShard", "ShardConnection",
-           "TransportError", "TransportTimeout", "WorkerError",
-           "connect_sharded", "shutdown_plane", "WorkerHandle",
+__all__ = ["CircuitBreaker", "DeadlineExceeded", "FanoutGroup",
+           "HedgePolicy", "Overloaded", "RemoteShard", "RetryBudget",
+           "ShardConnection", "TransportError", "TransportTimeout",
+           "WorkerError", "connect_sharded", "current_deadline",
+           "deadline_scope", "shutdown_plane",
+           "FAULT_LOG_ENV", "FAULTS_ENV", "KILL_EXIT_CODE", "FaultEvent",
+           "FaultPlan", "faults_env_value", "install_client_plan",
+           "read_fired_log", "AdmissionGate", "WorkerHandle",
            "spawn_workers"]

@@ -44,9 +44,11 @@ same deterministic question, so whichever reply wins is bit-identical.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import selectors
 import socket
+import threading
 import time
 
 import numpy as np
@@ -56,6 +58,7 @@ from repro.obs import trace as obs_trace
 from repro.store.planner import TopKPartial
 from repro.store.sharded import ShardedSketchStore
 
+from . import faults as faults_mod
 from . import wire
 from .wire import Message, MsgType
 
@@ -70,6 +73,237 @@ class WorkerError(TransportError):
 
 class TransportTimeout(TransportError):
     """The fan-out deadline expired with replies still pending."""
+
+
+class Overloaded(WorkerError):
+    """The worker (or the streaming front) rejected the request instead of
+    queueing it.  Provably clean: the request was NOT executed (an
+    OVERLOADED reply arrives over an intact stream), so a retry within the
+    caller's budget and deadline is always safe — this error never carries
+    ``dirty`` or ``unknown_outcome``.  ``retry_after_s`` is the server's
+    backoff hint (roughly one queue drain)."""
+
+    def __init__(self, msg: str, *, retry_after_s: float = 0.0):
+        super().__init__(msg)
+        self.retry_after_s = float(retry_after_s)
+        self.retryable = True
+
+
+class DeadlineExceeded(TransportError):
+    """The request's absolute deadline passed — either before sending
+    (checked coordinator-side) or on arrival at the worker, which dropped
+    the work before computing.  Not retryable: the caller is gone."""
+
+
+# -- ambient wire deadline ----------------------------------------------------
+# The ``ShardBackend`` protocol (add/start_query/...) has no deadline
+# parameter, and growing one through every layer would churn each backend
+# for a field only the transport consumes.  Like the trace context, the
+# deadline is ambient: callers wrap the query in ``deadline_scope`` and the
+# remote backends stamp ``wire.DEADLINE_FIELD`` onto each outgoing request.
+
+_ambient = threading.local()
+
+
+def current_deadline() -> float | None:
+    """Absolute deadline (unix seconds) of the enclosing scope, or None."""
+    return getattr(_ambient, "deadline", None)
+
+
+@contextlib.contextmanager
+def deadline_scope(abs_deadline_s: float | None):
+    """Set the ambient absolute deadline for this thread.  Scopes nest;
+    an inner scope can only tighten (the effective deadline is the min)."""
+    prev = current_deadline()
+    eff = abs_deadline_s
+    if eff is not None and prev is not None:
+        eff = min(eff, prev)
+    _ambient.deadline = eff if eff is not None else prev
+    try:
+        yield
+    finally:
+        _ambient.deadline = prev
+
+
+def attach_deadline(fields: dict) -> dict:
+    """Stamp the ambient deadline (if any) onto outgoing request fields."""
+    dl = current_deadline()
+    if dl is not None:
+        fields[wire.DEADLINE_FIELD] = wire.deadline_us(dl)
+    return fields
+
+
+def check_deadline(what: str = "request") -> None:
+    """Raise ``DeadlineExceeded`` when the ambient deadline already passed
+    — don't put a frame on the wire for an answer nobody will read."""
+    dl = current_deadline()
+    if dl is not None and time.time() > dl:
+        raise DeadlineExceeded(
+            f"{what} deadline passed {time.time() - dl:.3f}s ago "
+            "before the request was sent")
+
+
+class RetryBudget:
+    """Token bucket capping retry traffic as a fraction of primary traffic.
+
+    Every primary request deposits ``ratio`` tokens; every retry — a hedge
+    (timer- or failure-triggered), a replica-failover re-ask, or a
+    ``StreamConfig.retries`` re-dispatch — spends one.  ``cap`` bounds the
+    burst; ``floor_per_s`` trickles tokens in regardless of traffic so a
+    quiet plane can still retry (without it, the first failure after an
+    idle stretch on an empty bucket would be unretryable forever).
+
+    One budget is shared across ALL retry sources of a plane (built in
+    ``connect_sharded`` / ``connect_replicated``): under a brownout the
+    sources compete for the same bounded pool, so total retry traffic
+    stays <= ``ratio`` x primary + the floor instead of each layer
+    amplifying independently — the retry-storm cap.
+
+    ``unlimited=True`` disables the cap (the bench's "unbudgeted baseline"
+    and a pre-PR-10 escape hatch).
+    """
+
+    def __init__(self, *, ratio: float = 0.2, cap: float = 100.0,
+                 floor_per_s: float = 1.0, unlimited: bool = False):
+        self.ratio = float(ratio)
+        self.cap = float(cap)
+        self.floor_per_s = float(floor_per_s)
+        self.unlimited = bool(unlimited)
+        self._tokens = self.cap
+        self._last = time.monotonic()
+        self._lock = threading.Lock()
+        reg = obs_metrics.default()
+        self._g_tokens = reg.gauge("transport.retry_budget.tokens")
+        self._g_tokens.set(self._tokens)
+        self._m_spent = reg.counter("transport.retry_budget.spent")
+        self._m_exhausted = reg.counter("transport.retry_budget.exhausted")
+        self.n_primaries = 0
+        self.n_spent = 0
+        self.n_denied = 0
+
+    def _refill_locked(self) -> None:
+        now = time.monotonic()
+        self._tokens = min(self.cap,
+                           self._tokens + self.floor_per_s *
+                           (now - self._last))
+        self._last = now
+
+    @property
+    def tokens(self) -> float:
+        return self._tokens
+
+    def note_primary(self, n: int = 1) -> None:
+        """Deposit for ``n`` primary requests (``ratio`` tokens each)."""
+        with self._lock:
+            self.n_primaries += n
+            self._refill_locked()
+            self._tokens = min(self.cap, self._tokens + self.ratio * n)
+            self._g_tokens.set(self._tokens)
+
+    def try_spend(self, n: int = 1) -> bool:
+        """Take ``n`` tokens for a retry; False (and the retry must not
+        happen) when the budget is exhausted."""
+        if self.unlimited:
+            self.n_spent += n
+            self._m_spent.inc(n)
+            return True
+        with self._lock:
+            self._refill_locked()
+            if self._tokens >= n:
+                self._tokens -= n
+                self.n_spent += n
+                self._m_spent.inc(n)
+                self._g_tokens.set(self._tokens)
+                return True
+            self.n_denied += n
+            self._m_exhausted.inc(n)
+            return False
+
+
+class CircuitBreaker:
+    """Per-lane circuit breaker: closed -> open after ``fail_threshold``
+    consecutive stream-level failures -> half-open probe after ``reset_s``.
+
+    Failures that count are lane-health events — broken streams, timeouts
+    (``mark_broken`` / ``note_timeout``) — not application ERROR replies,
+    which arrive over an intact stream and say nothing about the lane.  A
+    flapping replica's lane opens and is *skipped* by replica failover and
+    primary selection until its half-open probe succeeds, so each flap
+    costs one probe instead of one full lane-timeout per read.
+    """
+
+    CLOSED, OPEN, HALF_OPEN = 0, 1, 2
+    _STATE_NAMES = {0: "closed", 1: "open", 2: "half-open"}
+
+    def __init__(self, *, fail_threshold: int = 5, reset_s: float = 2.0,
+                 name: str = ""):
+        self.fail_threshold = int(fail_threshold)
+        self.reset_s = float(reset_s)
+        self.state = self.CLOSED
+        self.failures = 0
+        self._opened_t = 0.0
+        self._probe_t = 0.0
+        self._probing = False
+        self._lock = threading.Lock()
+        reg = obs_metrics.default()
+        self._g_state = reg.gauge(f"transport.breaker.{name}.state") \
+            if name else None
+        self._m_opens = reg.counter("transport.breaker.opens")
+        if self._g_state is not None:
+            self._g_state.set(self.CLOSED)
+
+    def _set_state(self, s: int) -> None:
+        self.state = s
+        if self._g_state is not None:
+            self._g_state.set(s)
+
+    @property
+    def state_name(self) -> str:
+        return self._STATE_NAMES[self.state]
+
+    @property
+    def healthy(self) -> bool:
+        """Non-consuming: True only when fully closed (ordering hint for
+        primary selection; ``allow`` is the send-time decision)."""
+        return self.state == self.CLOSED
+
+    def allow(self) -> bool:
+        """May a request be sent on this lane now?  In half-open state only
+        one probe is admitted at a time (a stuck probe is recycled after
+        ``reset_s`` so a lost outcome cannot wedge the lane shut)."""
+        with self._lock:
+            if self.state == self.CLOSED:
+                return True
+            now = time.monotonic()
+            if self.state == self.OPEN:
+                if now - self._opened_t < self.reset_s:
+                    return False
+                self._set_state(self.HALF_OPEN)
+                self._probing = False
+            if self._probing and now - self._probe_t < self.reset_s:
+                return False
+            self._probing = True
+            self._probe_t = now
+            return True
+
+    def record_success(self) -> None:
+        with self._lock:
+            self.failures = 0
+            self._probing = False
+            if self.state != self.CLOSED:
+                self._set_state(self.CLOSED)
+
+    def record_failure(self) -> None:
+        with self._lock:
+            self.failures += 1
+            tripped = (self.state == self.HALF_OPEN
+                       or (self.state == self.CLOSED
+                           and self.failures >= self.fail_threshold))
+            if tripped:
+                self._set_state(self.OPEN)
+                self._opened_t = time.monotonic()
+                self._probing = False
+                self._m_opens.inc()
 
 
 def _partial_from(msg: Message) -> TopKPartial:
@@ -146,6 +380,11 @@ class ShardConnection:
         self.n_stale = 0                   # stale replies discarded here
         self.n_timeouts = 0
         self.last_stale_seq: int | None = None
+        # per-lane breaker: stream-level failures below feed it; replica
+        # failover and primary selection consult it (state rides the
+        # lane-labelled gauge so a dump shows WHICH lane is open)
+        bname = f"shard{shard}.replica{replica}" if shard >= 0 else ""
+        self.breaker = CircuitBreaker(name=bname)
         try:
             self.sock = socket.create_connection(self.address,
                                                  timeout=timeout)
@@ -163,6 +402,7 @@ class ShardConnection:
     def mark_broken(self, why: str) -> None:
         """Poison the connection (framing no longer trustworthy)."""
         self.broken = why
+        self.breaker.record_failure()
         self.close()
 
     def check_usable(self) -> None:
@@ -182,6 +422,7 @@ class ShardConnection:
         """Record one deadline expiry against this lane (aggregate + the
         (shard, replica)-labelled series failover logs correlate with)."""
         self.n_timeouts += 1
+        self.breaker.record_failure()
         self._m_timeout.inc()
         if self._m_timeout_lane is not None:
             self._m_timeout_lane.inc()
@@ -196,6 +437,18 @@ class ShardConnection:
     def request(self, msg: Message) -> Message:
         """Send one frame, read its reply (raises on ERROR replies)."""
         self.check_usable()
+        check_deadline(msg.type.name)
+        # deterministic client-side faults (coordinator perspective): a
+        # plan "drop" severs this lane's socket pre-send, so the failure
+        # paths below run on a reproducible schedule
+        for ev in faults_mod.client_events(msg.type.name.lower()):
+            if ev.kind == "delay":
+                faults_mod.FaultPlan.sleep(ev)
+            else:        # sever the stream; the send below fails in-path
+                try:
+                    self.sock.shutdown(socket.SHUT_RDWR)
+                except OSError:
+                    pass
         msg.seq = self.next_seq()
         try:
             wire.send_message(self.sock, msg, meter=self._m_bytes_out.inc)
@@ -234,6 +487,21 @@ class ShardConnection:
         blob = reply.fields.get(wire.TRACE_SPANS_FIELD)
         if blob:
             obs_trace.default().absorb_json(blob)
+        if reply.type == MsgType.OVERLOADED:
+            # the stream is intact and the worker provably did not execute
+            # the request — lane-healthy for the breaker, clean to retry
+            self.breaker.record_success()
+            reason = reply.fields.get("reason", "admission")
+            if reason == "expired":
+                raise DeadlineExceeded(
+                    f"worker {self._name} dropped the request: its "
+                    f"deadline passed before computing (seq={reply.seq})")
+            raise Overloaded(
+                f"worker {self._name} shed the request at its admission "
+                f"gate (depth {reply.fields.get('gate_depth', '?')}/"
+                f"{reply.fields.get('gate_limit', '?')}, seq={reply.seq})",
+                retry_after_s=int(reply.fields.get("retry_after_us", 0))
+                / 1e6)
         if reply.type == MsgType.ERROR:
             err = WorkerError(f"worker {self._name}: {reply['error']} "
                               f"(seq={reply.seq}{self._stale_note()})")
@@ -247,6 +515,7 @@ class ShardConnection:
             # (the write-path decision in ``ShardedSketchStore._scatter``
             # keys off dirty/unknown_outcome)
             raise err
+        self.breaker.record_success()
         return reply
 
     def reconnect(self) -> None:
@@ -334,10 +603,15 @@ class FanoutGroup:
                  timeout: float = 30.0, hedge: HedgePolicy | None = None,
                  hedge_conns: dict[ShardConnection, ShardConnection]
                  | None = None,
-                 deadline_name: str = "timeout"):
+                 deadline_name: str = "timeout",
+                 budget: RetryBudget | None = None):
         self.conns = list(conns)
         self.timeout = timeout
         self.hedge = hedge
+        # the plane-wide retry budget: submits deposit, hedges (timer- and
+        # failure-triggered) spend; replica failover and stream retries
+        # share this same bucket (see RetryBudget)
+        self.budget = budget if budget is not None else RetryBudget()
         self._twin = dict(hedge_conns or {})
         self._deadline_name = deadline_name
         self._out: dict[ShardConnection, list] = {}     # pending send buffers
@@ -399,6 +673,16 @@ class FanoutGroup:
             self._msgs.clear()
             self._tolerant.clear()
             self._leg_errors.clear()
+        check_deadline(msg.type.name)
+        for ev in faults_mod.client_events(msg.type.name.lower()):
+            if ev.kind == "delay":
+                faults_mod.FaultPlan.sleep(ev)
+            else:                  # sever the lane pre-send (deterministic)
+                try:
+                    conn.sock.shutdown(socket.SHUT_RDWR)
+                except OSError:
+                    pass
+        self.budget.note_primary()
         try:
             # a dirty lane (its last request was abandoned to a hedged win
             # or a dead round) is reconnected before carrying new traffic;
@@ -602,7 +886,14 @@ class FanoutGroup:
         if not pending:
             return
         self._round_t0 = time.perf_counter()
-        deadline = time.monotonic() + self.timeout
+        # the caller's absolute deadline (if any) can only tighten the
+        # round's wall clock — a round that cannot answer in time should
+        # fail at the deadline, not keep S workers busy for the full knob
+        budget_s = self.timeout
+        amb = current_deadline()
+        if amb is not None:
+            budget_s = min(budget_s, max(amb - time.time(), 0.0))
+        deadline = time.monotonic() + budget_s
         # hedge bookkeeping, all per-round: when a shard's request hedges,
         # ``owner`` maps the fired twin leg back to its primary and
         # ``fired`` the primary to its twin — two legs, one reply slot
@@ -649,6 +940,13 @@ class FanoutGroup:
             twin = self._twin.get(primary)
             msg = self._msgs.get(primary)
             if twin is None or msg is None:
+                return False
+            # every hedge — timer-fired tail cut or failure-triggered
+            # failover — is retry traffic and draws from the shared budget;
+            # an exhausted budget means the hedge simply does not fire (the
+            # primary leg keeps its chance, or the round fails and the
+            # caller's budgeted retry path takes over)
+            if not self.budget.try_spend():
                 return False
             if (twin.broken or twin in self._dirty) \
                     and not self._redial(twin):
@@ -936,14 +1234,16 @@ class RemoteShard:
 
     @staticmethod
     def _traced(fields: dict) -> dict:
-        """Attach the ambient trace context (if any) as wire fields, so the
-        worker's spans join the coordinator's trace.  Reading the ambient
-        stack here is what keeps the ``ShardBackend`` protocol unchanged."""
+        """Attach the ambient trace context (if any) and the ambient
+        deadline as wire fields, so the worker's spans join the
+        coordinator's trace and expired work can be dropped server-side.
+        Reading the ambient stacks here is what keeps the ``ShardBackend``
+        protocol unchanged."""
         ctx = obs_trace.current()
         if ctx is not None:
             fields[wire.TRACE_ID_FIELD] = ctx.trace_id
             fields[wire.TRACE_PARENT_FIELD] = ctx.span_id
-        return fields
+        return attach_deadline(fields)
 
     # -- writes (blocking request/reply) ------------------------------------
     def add(self, sigs: np.ndarray) -> int:
@@ -1035,6 +1335,7 @@ def connect_sharded(addresses, cfg=None, *, snapshot_dir: str | None = None,
                     partition: str = "round_robin", query_impl: str = "auto",
                     timeout: float = 30.0,
                     hedge: "HedgePolicy | bool | None" = None,
+                    budget: RetryBudget | None = None,
                     ) -> ShardedSketchStore:
     """Build a tcp-backed ``ShardedSketchStore`` over worker ``addresses``.
 
@@ -1051,7 +1352,9 @@ def connect_sharded(addresses, cfg=None, *, snapshot_dir: str | None = None,
     it here as ``query_timeout_s``, and ``TransportTimeout`` messages name
     it.  ``hedge`` enables hedged reads: a ``HedgePolicy`` (or ``True``
     for the defaults) opens a second connection per worker for the group's
-    late-reply re-issues.
+    late-reply re-issues.  ``budget`` is the plane's shared ``RetryBudget``
+    (None builds the default) — hedges, failovers, and stream retries all
+    draw from it.
     """
     if hedge is True:
         hedge = HedgePolicy()
@@ -1071,7 +1374,8 @@ def connect_sharded(addresses, cfg=None, *, snapshot_dir: str | None = None,
                                            shard=c.shard)
         group = FanoutGroup(conns, timeout=timeout, hedge=hedge,
                             hedge_conns=twins,
-                            deadline_name="query_timeout_s")
+                            deadline_name="query_timeout_s",
+                            budget=budget)
         backends = [RemoteShard(c, group, hedge_conn=twins.get(c))
                     for c in conns]
         if snapshot_dir is not None:

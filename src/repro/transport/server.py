@@ -57,11 +57,71 @@ from repro.store.sharded import shard_snapshot_path
 from repro.store.store import SketchStore, StoreConfig
 
 from . import wire
+from .faults import KILL_EXIT_CODE, FaultPlan
 from .wire import Message, MsgType
+
+GATE_LIMIT_ENV = "REPRO_GATE_LIMIT"
+DEFAULT_GATE_LIMIT = 64
+
+# overload control gates READS only: an OVERLOADED write leg would surface
+# as a failed scatter round — poisoning the unreplicated plane and downing
+# the lane on a replicated one — so writes keep their existing backpressure
+# (the bounded ingest pipeline + the poison taxonomy) and the gate protects
+# the latency-sensitive read path, where shedding is cheap and clean
+_GATED_TYPES = (MsgType.QUERY, MsgType.BRUTE)
+
+
+class AdmissionGate:
+    """Bounded-inflight admission for a worker's read path.
+
+    ``limit`` caps requests admitted concurrently (executing + waiting on
+    the exec lock across all connection threads).  At the cap the worker
+    answers ``OVERLOADED`` instead of queueing — the queue that would have
+    formed here is unbounded memory and head-of-line latency with no one
+    left to read the answer; an explicit reject is retryable within the
+    caller's budget and deadline.
+    """
+
+    def __init__(self, limit: int):
+        self.limit = int(limit)
+        self._n = 0
+        self._lock = threading.Lock()
+        reg = obs_metrics.default()
+        self._depth_g = reg.gauge("worker.admission.depth")
+        reg.gauge("worker.admission.limit").set(self.limit)
+        self.n_overloaded = reg.counter("worker.overloaded")
+        self.n_expired = reg.counter("worker.expired")
+
+    @property
+    def depth(self) -> int:
+        return self._n
+
+    def try_enter(self) -> bool:
+        with self._lock:
+            if self._n >= self.limit:
+                return False
+            self._n += 1
+            self._depth_g.set(self._n)
+            return True
+
+    def leave(self) -> None:
+        with self._lock:
+            self._n -= 1
+            self._depth_g.set(self._n)
+
+
+def _overloaded_reply(reason: str, retry_after_us: int,
+                      gate: "AdmissionGate | None") -> Message:
+    f = {"reason": reason, "retry_after_us": int(retry_after_us)}
+    if gate is not None:
+        f["gate_depth"] = gate.depth
+        f["gate_limit"] = gate.limit
+    return Message(MsgType.OVERLOADED, f)
 
 
 def _handle(store: SketchStore, msg: Message,
-            shard: int = -1, replica: int = 0) -> tuple[Message, bool]:
+            shard: int = -1, replica: int = 0,
+            gate: "AdmissionGate | None" = None) -> tuple[Message, bool]:
     """One request -> (reply, keep_serving)."""
     f = msg.fields
     if msg.type == MsgType.ADD:
@@ -110,6 +170,12 @@ def _handle(store: SketchStore, msg: Message,
                                     "pid": os.getpid(),
                                     "shard": int(shard),
                                     "replica": int(replica),
+                                    "gate_limit": gate.limit if gate else -1,
+                                    "gate_depth": gate.depth if gate else 0,
+                                    "n_overloaded":
+                                        gate.n_overloaded.value if gate else 0,
+                                    "n_expired":
+                                        gate.n_expired.value if gate else 0,
                                     "obs": json.dumps(
                                         obs_metrics.default().snapshot())
                                     }), True
@@ -129,7 +195,9 @@ def _serve_conn(store: SketchStore, conn: socket.socket,
                 shard: int = -1, *,
                 exec_lock: threading.Lock | None = None,
                 slow: tuple[float, float] | None = None,
-                replica: int = 0) -> bool:
+                replica: int = 0,
+                gate: AdmissionGate | None = None,
+                faults: FaultPlan | None = None) -> bool:
     """Serve one coordinator connection.  Returns False when SHUTDOWN.
 
     ``exec_lock`` serializes handler execution across this worker's
@@ -138,6 +206,13 @@ def _serve_conn(store: SketchStore, conn: socket.socket,
     sleeps ``sleep_s`` with probability ``prob`` *before* taking the lock,
     so a hedged re-issue of the same request gets a fresh draw and can
     overtake a sleeping primary.
+
+    ``gate`` bounds read inflight (reject with OVERLOADED at the cap);
+    expired-deadline reads are dropped before computing.  ``faults`` is
+    the worker's deterministic fault schedule, consulted pre-handle —
+    a plan ``kill`` dies before mutating the store, a ``drop`` closes the
+    connection without a reply, a ``truncate`` sends a half frame (the
+    peer sees a corrupt stream, not a clean hangup).
     """
     conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
     if exec_lock is None:
@@ -150,6 +225,7 @@ def _serve_conn(store: SketchStore, conn: socket.socket,
     errors = reg.counter("worker.errors")
     wire_errors = reg.counter("worker.wire_errors")
     backlog = reg.counter("worker.backlog")
+    faults_fired = reg.counter("worker.faults_fired")
     handle_h = {t: reg.histogram(f"worker.handle.{t.name.lower()}")
                 for t in MsgType}
     while True:
@@ -166,12 +242,63 @@ def _serve_conn(store: SketchStore, conn: socket.socket,
             except OSError:
                 pass
             return True
+        if faults is not None:
+            for ev in faults.on_message(msg.type.name.lower()):
+                faults_fired.inc()
+                if ev.kind == "delay":
+                    FaultPlan.sleep(ev)
+                elif ev.kind == "drop":
+                    return True                  # EOF mid-round, no reply
+                elif ev.kind == "truncate":
+                    frame = wire.message_bytes(Message(
+                        MsgType.ERROR, {"error": "injected truncation"},
+                        seq=msg.seq))
+                    try:                         # half a frame, then hangup
+                        conn.sendall(frame[:max(wire.HEADER_SIZE + 1,
+                                                len(frame) // 2)])
+                    except OSError:
+                        pass
+                    return True
+                elif ev.kind == "kill":
+                    # fired-event log already fsynced by on_message; die
+                    # before handling so the store never half-mutates
+                    os._exit(KILL_EXIT_CODE)
         # a request carrying trace fields joins the coordinator's trace:
         # the worker's legs nest under the span whose id rode the frame
         ctx = None
         if wire.TRACE_ID_FIELD in msg.fields:
             ctx = obs_trace.TraceCtx(int(msg.fields[wire.TRACE_ID_FIELD]),
                                      int(msg.fields[wire.TRACE_PARENT_FIELD]))
+        admitted = False
+        if gate is not None and msg.type in _GATED_TYPES:
+            dl = msg.fields.get(wire.DEADLINE_FIELD)
+            if dl is not None and time.time() * 1e6 > int(dl):
+                # caller's deadline already passed: computing the answer
+                # is pure waste — drop before scoring, tell the caller why
+                gate.n_expired.inc()
+                reply = _overloaded_reply("expired", 0, gate)
+                reply.seq = msg.seq
+                try:
+                    wire.send_message(conn, reply, meter=bytes_out.inc)
+                except OSError:
+                    return True
+                continue
+            if not gate.try_enter():
+                gate.n_overloaded.inc()
+                # back off roughly one queue drain: mean read handle time
+                # x current depth (2ms floor when the worker is cold)
+                h = handle_h[MsgType.QUERY]
+                per = h.mean if h.count else 2e-3
+                reply = _overloaded_reply(
+                    "admission", int(max(per, 2e-3) * gate.depth * 1e6),
+                    gate)
+                reply.seq = msg.seq
+                try:
+                    wire.send_message(conn, reply, meter=bytes_out.inc)
+                except OSError:
+                    return True
+                continue
+            admitted = True
         if slow is not None and msg.type in (MsgType.QUERY, MsgType.BRUTE) \
                 and rng.random() < slow[0]:
             time.sleep(slow[1])
@@ -181,13 +308,16 @@ def _serve_conn(store: SketchStore, conn: socket.socket,
             # returns the shared no-op span — untraced requests pay nothing
             with tracer.span(f"worker.{msg.type.name.lower()}", parent=ctx):
                 with exec_lock:
-                    reply, keep = _handle(store, msg, shard, replica)
+                    reply, keep = _handle(store, msg, shard, replica, gate)
         except Exception as e:                   # worker-side op failure
             errors.inc()
             reply, keep = Message(MsgType.ERROR, {
                 "error": f"{type(e).__name__}: {e}",
                 "dirty": int(getattr(e, "add_dirty", False)),
                 "traceback": traceback.format_exc(limit=8)}), True
+        finally:
+            if admitted:
+                gate.leave()
         handle_h[msg.type].observe(time.perf_counter() - t0)
         if ctx is not None:
             spans = tracer.drain()
@@ -214,7 +344,8 @@ def run_worker(ready_conn, cfg: StoreConfig | None, snapshot: str | None,
                probe_impl: str, host: str, port: int,
                shard: int = -1, query_impl: str = "auto",
                slow: tuple[float, float] | None = None,
-               replica: int = 0) -> None:
+               replica: int = 0, gate_limit: int | None = None,
+               fault_spec: str | None = None) -> None:
     """Worker entry point (spawn target — all arguments picklable).
 
     Boots a ``SketchStore`` (empty from ``cfg``, or from ``snapshot``),
@@ -229,7 +360,20 @@ def run_worker(ready_conn, cfg: StoreConfig | None, snapshot: str | None,
     best path (Pallas on its accelerator hosts, compiled-jnp / the numpy
     walk on CPU hosts).  The resolved backends are reported in STATS
     (``probe_impl`` / ``query_impl``).
+
+    ``gate_limit`` bounds admitted read inflight (``REPRO_GATE_LIMIT`` env
+    overrides when None; default ``DEFAULT_GATE_LIMIT``; <= 0 keeps the
+    gate but admits nothing — the always-shed worker the overload tests
+    use).  ``fault_spec`` is a ``FaultPlan.encode()`` JSON schedule
+    (``REPRO_FAULTS`` env keyed ``"<shard>.<replica>"`` when None).
     """
+    lane = f"{shard}.{replica}"
+    if fault_spec is not None:
+        faults = FaultPlan.decode(fault_spec, lane=lane)
+    else:
+        faults = FaultPlan.from_env(lane)
+    if gate_limit is None:
+        gate_limit = int(os.environ.get(GATE_LIMIT_ENV, DEFAULT_GATE_LIMIT))
     # the worker gets its own tracer labelled with its shard index, so a
     # stitched trace says which process each span ran in; sample rate stays
     # 0 — worker spans only open under a wire-propagated parent, inheriting
@@ -262,13 +406,15 @@ def run_worker(ready_conn, cfg: StoreConfig | None, snapshot: str | None,
         ready_conn.close()
         stop = threading.Event()
         exec_lock = threading.Lock()
+        gate = AdmissionGate(gate_limit)
 
         def _serve(conn: socket.socket) -> None:
             try:
                 with conn:
                     if not _serve_conn(store, conn, shard,
                                        exec_lock=exec_lock, slow=slow,
-                                       replica=replica):
+                                       replica=replica, gate=gate,
+                                       faults=faults):
                         stop.set()
             except ConnectionResetError:
                 # normal for a hedge twin: the coordinator closes it with an
@@ -333,6 +479,8 @@ def spawn_workers(cfg: StoreConfig | None, n_workers: int, *,
                   slow_shards: dict[int, tuple[float, float]] | None = None,
                   shards: list[int] | None = None,
                   replicas: list[int] | None = None,
+                  gate_limit: int | None = None,
+                  faults: dict[int, "FaultPlan | str"] | None = None,
                   ) -> list[WorkerHandle]:
     """Spawn ``n_workers`` shard workers on localhost; returns their handles.
 
@@ -350,6 +498,11 @@ def spawn_workers(cfg: StoreConfig | None, n_workers: int, *,
     ``slow_shards`` maps WORKER index -> ``(prob, sleep_s)`` injected read
     latency (the hedging benchmarks' reproducible slow-shard scenario; for
     the default layout worker index == shard index).
+
+    ``gate_limit`` sets every worker's read admission cap (None = env /
+    default).  ``faults`` maps WORKER index -> ``FaultPlan`` (or its
+    ``encode()`` JSON) — the deterministic chaos schedule; workers with no
+    entry also pick up ``REPRO_FAULTS`` env keyed by lane.
     """
     if shards is None:
         shards = list(range(n_workers))
@@ -364,12 +517,15 @@ def spawn_workers(cfg: StoreConfig | None, n_workers: int, *,
             snap = shard_snapshot_path(snapshot_dir, shards[i]) \
                 if snapshot_dir is not None else None
             parent, child = ctx.Pipe(duplex=False)
+            plan = faults.get(i) if faults else None
+            if isinstance(plan, FaultPlan):
+                plan = plan.encode()
             proc = ctx.Process(
                 target=run_worker,
                 args=(child, cfg, snap, probe_impl, host, 0, shards[i],
                       query_impl,
                       slow_shards.get(i) if slow_shards else None,
-                      replicas[i]),
+                      replicas[i], gate_limit, plan),
                 daemon=True, name=f"shard-worker-{shards[i]}r{replicas[i]}")
             proc.start()
             child.close()

@@ -65,6 +65,19 @@ TRACE_ID_FIELD = "_tr"          # request: int, the 63-bit trace id
 TRACE_PARENT_FIELD = "_trp"     # request: int, the coordinator's span id
 TRACE_SPANS_FIELD = "_trs"      # reply: str, JSON list of worker span dicts
 
+# Deadline field (overload control).  Same frozen-header constraint as the
+# trace fields: the absolute deadline rides as an underscore-prefixed payload
+# field — int64 microseconds since the unix epoch (``time.time() * 1e6``;
+# workers are same-host or NTP-disciplined, and deadline checks only need
+# millisecond-grade agreement).  Workers drop expired read work *before*
+# computing and answer ``OVERLOADED`` with ``reason="expired"``.
+DEADLINE_FIELD = "_dl"          # request: int, absolute deadline (us epoch)
+
+
+def deadline_us(abs_deadline_s: float) -> int:
+    """Absolute deadline in seconds-since-epoch -> the wire's int64 us."""
+    return int(abs_deadline_s * 1e6)
+
 
 class MsgType(enum.IntEnum):
     ADD = 1          # rows=(B,K) i32 sigs  OR  words=(B,W) u32 packed
@@ -79,6 +92,10 @@ class MsgType(enum.IntEnum):
     ERROR = 9        # reply: error=str — worker-side exception text
     DIGEST = 10      # content digest of the worker's signature buffer
                      # (replica resync parity check — see replica.supervisor)
+    OVERLOADED = 11  # reply: reason ("admission"|"expired"), retry_after_us,
+                     # gate_depth, gate_limit — the worker did NOT execute
+                     # the request (provably clean: safe to retry within
+                     # budget; never poisons the plane)
 
 
 class WireError(Exception):

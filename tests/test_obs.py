@@ -174,6 +174,33 @@ def test_dump_checker_rejects_garbage(tmp_path):
         check_dump(str(empty_hists), require_shard_hists=True)
 
 
+def test_dump_checker_overload_families(tmp_path):
+    """``--require-overload`` passes only when retry-budget, breaker, and
+    a shedding surface are all wired — worker metrics folded in by an
+    ``extra`` callable (per-lane relabelled STATS snapshots) count."""
+    reg = obs_metrics.Registry()
+    reg.gauge("transport.retry_budget.tokens").set(100.0)
+    reg.gauge("transport.breaker.127.0.0.1:9000.state").set(0.0)
+    partial = tmp_path / "partial.jsonl"
+    partial.write_text(json.dumps(
+        {"t": 1, "seq": 0, "spans": [], "metrics": reg.snapshot()}) + "\n")
+    with pytest.raises(ValueError, match="shed_surface"):
+        check_dump(str(partial), require_overload=True)
+
+    # the shedding surface arrives via a worker STATS snapshot the dump's
+    # ``extra`` callable folded in, not the coordinator registry
+    wreg = obs_metrics.Registry()
+    wreg.gauge("shard0.replica1.worker.admission.depth").set(0.0)
+    wreg.counter("shard0.replica1.worker.overloaded").inc()
+    full = tmp_path / "full.jsonl"
+    full.write_text(json.dumps(
+        {"t": 1, "seq": 0, "spans": [], "metrics": reg.snapshot(),
+         "workers": {"shard0.replica1": wreg.snapshot()}}) + "\n")
+    out = check_dump(str(full), require_overload=True)
+    assert set(out["overload_families"]) == {"retry_budget", "breaker",
+                                             "shed_surface"}
+
+
 # -- wire-propagated traces + STATS snapshots (real tcp workers) --------------
 
 def test_trace_and_stats_roundtrip_through_tcp_workers():

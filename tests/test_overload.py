@@ -1,0 +1,348 @@
+"""Overload hardening: wire deadlines, admission shedding, retry budgets,
+circuit breakers, streaming-front shedding, deterministic faults.
+
+The serving invariants under pressure:
+
+  * a request whose deadline already passed is DROPPED before any scoring
+    work (the worker answers OVERLOADED/expired over an intact stream);
+  * a request that makes its deadline answers bit-identically to the
+    unloaded reference — deadlines shed work, they never change answers;
+  * an admission-gate rejection is provably clean and retryable, and a
+    retry spends from the plane's shared token budget, never firing past
+    the caller's deadline;
+  * the budget caps retry amplification while an unbudgeted baseline
+    amplifies without bound;
+  * the streaming front sheds the NEWEST arrival when its bounded queue
+    fills, with a retry-after hint, and admitted work is untouched.
+"""
+
+import json
+import threading
+import time
+import types
+
+import numpy as np
+import pytest
+
+from repro.serve.stream import StreamConfig, StreamingQueryService
+from repro.store import SketchStore, StoreConfig
+from repro.transport import (CircuitBreaker, DeadlineExceeded, FaultEvent,
+                             FaultPlan, Overloaded, RetryBudget,
+                             ShardConnection, connect_sharded,
+                             deadline_scope, read_fired_log, shutdown_plane,
+                             spawn_workers)
+from repro.transport.wire import DEADLINE_FIELD, Message, MsgType, deadline_us
+
+K, NB, RPB = 64, 16, 4
+
+
+def _cfg():
+    return StoreConfig(k=K, n_bands=NB, rows_per_band=RPB,
+                       n_slots=256, bucket_width=8)
+
+
+def _corpus(n=80, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 1 << 16, (n, K), dtype=np.int32)
+
+
+# -- retry budget -------------------------------------------------------------
+
+def test_retry_budget_caps_storm_unbudgeted_amplifies():
+    """100 primaries all wanting a retry: the budget grants ~ratio x
+    primaries; the unbudgeted baseline grants all of them (>= 2x more) —
+    the retry-storm cap in miniature."""
+    b = RetryBudget(ratio=0.2, cap=5.0, floor_per_s=0.0)
+    while b.try_spend():
+        pass                            # drain the startup burst
+    granted = 0
+    for _ in range(100):
+        b.note_primary()
+        if b.try_spend():
+            granted += 1
+    assert 0 < granted <= 0.2 * 100 + 1
+    u = RetryBudget(unlimited=True)
+    ugranted = sum(u.try_spend() for _ in range(100))
+    assert ugranted == 100
+    assert ugranted >= 2 * granted
+    # +1: the drain loop's terminating probe was also a denial
+    assert b.n_denied == 100 - granted + 1
+
+
+def test_retry_budget_floor_refills_a_quiet_plane():
+    b = RetryBudget(ratio=0.0, cap=2.0, floor_per_s=50.0)
+    while b.try_spend():
+        pass
+    assert not b.try_spend()
+    time.sleep(0.05)                    # floor trickles ~2.5 tokens back
+    assert b.try_spend()
+
+
+# -- circuit breaker ----------------------------------------------------------
+
+def test_circuit_breaker_state_machine():
+    br = CircuitBreaker(fail_threshold=3, reset_s=0.05)
+    assert br.healthy and br.allow()
+    br.record_failure()
+    br.record_success()                 # success resets the streak
+    assert br.state == CircuitBreaker.CLOSED
+    for _ in range(3):
+        br.record_failure()
+    assert br.state == CircuitBreaker.OPEN and not br.healthy
+    assert not br.allow()               # still inside reset window
+    time.sleep(0.06)
+    assert br.allow()                   # half-open: single probe admitted
+    assert not br.allow()               # ... and only one
+    br.record_failure()                 # probe fails -> back to open
+    assert br.state == CircuitBreaker.OPEN
+    time.sleep(0.06)
+    assert br.allow()
+    br.record_success()                 # probe succeeds -> closed
+    assert br.state == CircuitBreaker.CLOSED and br.healthy
+
+
+# -- fault plan ---------------------------------------------------------------
+
+def test_fault_plan_counts_per_type_and_fires_once(tmp_path):
+    log = str(tmp_path / "fired.jsonl")
+    plan = FaultPlan([FaultEvent("kill", 2, "add"),
+                      FaultEvent("delay", 0, None, 5.0)],
+                     lane="0.0", log_path=log)
+    # the any-type event fires on the very first message, whatever it is
+    assert [e.kind for e in plan.on_message("query")] == ["delay"]
+    assert plan.on_message("add") == []          # add #0
+    assert plan.on_message("add") == []          # add #1
+    assert [e.kind for e in plan.on_message("add")] == ["kill"]   # add #2
+    assert plan.on_message("add") == []          # each event fires ONCE
+    recs = read_fired_log(log)
+    assert [(r["kind"], r["on"]) for r in recs] == \
+        [("delay", "query"), ("kill", "add")]
+    # serialization round-trips; seeded schedules are seed-deterministic
+    again = FaultPlan.decode(plan.encode())
+    assert again.encode() == plan.encode()
+    a = FaultPlan.from_seed(7, n_events=3, horizon=10)
+    assert a.encode() == FaultPlan.from_seed(7, n_events=3, horizon=10).encode()
+
+
+# -- worker: wire deadlines + admission gate ----------------------------------
+
+def test_worker_drops_expired_answers_near_deadline_exactly():
+    """An expired-on-arrival request is dropped BEFORE any scoring (the
+    handle histogram never ticks); a request with a live deadline answers
+    bit-identically to the reference."""
+    cfg = _cfg()
+    sigs = _corpus()
+    ref = SketchStore(cfg)
+    ref.add(sigs)
+    handles = spawn_workers(cfg, 1)
+    store = None
+    try:
+        store = connect_sharded([handles[0].address], cfg, timeout=30)
+        store.add(sigs)
+        conn = store.shards[0].conn
+        qwords = np.zeros((1, K * cfg.b // 32), np.uint32)
+        expired = Message(MsgType.BRUTE, {
+            "qwords": qwords, "top_k": 3,
+            DEADLINE_FIELD: deadline_us(time.time() - 5.0)})
+        with pytest.raises(DeadlineExceeded):
+            conn.request(expired)
+        stats = dict(conn.request(Message(MsgType.STATS, {})).fields)
+        assert int(stats["n_expired"]) == 1
+        obs = json.loads(stats["obs"])
+        assert obs["hists"].get("worker.handle.brute",
+                                {}).get("count", 0) == 0, \
+            "expired request was scored instead of dropped"
+        # near-deadline: the wire deadline rides along and the answer is
+        # exact — deadlines shed work, they never change answers
+        with deadline_scope(time.time() + 30.0):
+            ids, scores = store.query(sigs[:8], top_k=5)
+        want_ids, want_scores = ref.query(sigs[:8], top_k=5)
+        np.testing.assert_array_equal(ids, want_ids)
+        np.testing.assert_array_equal(scores, want_scores)
+        stats = dict(conn.request(Message(MsgType.STATS, {})).fields)
+        assert int(stats["n_expired"]) == 1      # unchanged
+    finally:
+        if store is not None:
+            shutdown_plane(store, handles, join_timeout=15)
+        else:
+            for h in handles:
+                h.terminate()
+
+
+def test_worker_admission_gate_sheds_clean_and_retryable():
+    """gate_limit=0 sheds every read with a clean, retryable OVERLOADED;
+    writes are not gated and the lane stays intact after shedding."""
+    cfg = _cfg()
+    sigs = _corpus()
+    handles = spawn_workers(cfg, 1, gate_limit=0)
+    store = None
+    try:
+        store = connect_sharded([handles[0].address], cfg, timeout=30)
+        store.add(sigs)                          # writes bypass the gate
+        with pytest.raises(Overloaded) as ei:
+            store.query(sigs[:4], top_k=3)
+        assert ei.value.retryable
+        assert ei.value.retry_after_s >= 0
+        conn = ShardConnection(handles[0].address, timeout=30,
+                               shard=0, replica=0)
+        stats = dict(conn.request(Message(MsgType.STATS, {})).fields)
+        assert int(stats["gate_limit"]) == 0
+        assert int(stats["n_overloaded"]) >= 1
+        assert int(stats["size"]) == len(sigs)   # the ADD all landed
+        store.add(_corpus(n=10, seed=3))         # lane still writable
+        conn.close()
+    finally:
+        if store is not None:
+            shutdown_plane(store, handles, join_timeout=15)
+        else:
+            for h in handles:
+                h.terminate()
+
+
+# -- streaming front ----------------------------------------------------------
+
+class _FakeService:
+    """Stand-in for SimilaritySearchService: instant sign, pluggable
+    query — lets the stream tests steer overload without worker spawns."""
+
+    packed_ingest = False
+
+    def __init__(self, query_fn):
+        self.cfg = types.SimpleNamespace(query_impl="host")
+        self.store = types.SimpleNamespace(shards=[])
+        self._query_fn = query_fn
+
+    def _sign(self, rows, layout):
+        return rows
+
+    def _query(self, signed, top_k):
+        return self._query_fn(signed, top_k)
+
+
+def _ok_answer(signed, top_k):
+    n = len(np.asarray(signed))
+    return (np.zeros((n, top_k), np.int64),
+            np.zeros((n, top_k), np.float32))
+
+
+def _attach_budget(svc, budget):
+    svc.store = types.SimpleNamespace(shards=[types.SimpleNamespace(
+        group=types.SimpleNamespace(budget=budget))])
+
+
+def test_stream_sheds_newest_when_queue_full():
+    release = threading.Event()
+
+    def slow(signed, top_k):
+        release.wait(5.0)
+        return _ok_answer(signed, top_k)
+
+    s = StreamingQueryService(_FakeService(slow), StreamConfig(
+        max_batch=1, depth=1, max_delay_ms=0.0, max_queue=2))
+    try:
+        admitted, shed = [], None
+        for _ in range(50):
+            t = s.submit_dense(np.arange(4.0))
+            if t.done:                  # came back already rejected
+                shed = t
+                break
+            admitted.append(t)
+        assert shed is not None, "bounded queue never shed"
+        with pytest.raises(Overloaded) as ei:
+            shed.result(0)
+        assert ei.value.retryable and ei.value.retry_after_s > 0
+        release.set()
+        for t in admitted:              # every ADMITTED query answers
+            ids, scores = t.result(30)
+            assert ids.shape == (s.cfg.top_k,)
+    finally:
+        release.set()
+        s.close()
+
+
+def test_stream_drops_expired_ticket_before_dispatch():
+    release = threading.Event()
+
+    def slow(signed, top_k):
+        release.wait(5.0)
+        return _ok_answer(signed, top_k)
+
+    s = StreamingQueryService(_FakeService(slow), StreamConfig(
+        max_batch=1, depth=1, max_delay_ms=0.0))
+    try:
+        t1 = s.submit_dense(np.arange(4.0))              # occupies the pipe
+        t2 = s.submit_dense(np.arange(4.0), query_timeout_s=0.05)
+        time.sleep(0.15)                # t2's deadline passes while queued
+        release.set()
+        t1.result(30)
+        with pytest.raises(DeadlineExceeded):
+            t2.result(30)
+    finally:
+        release.set()
+        s.close()
+
+
+def test_stream_retries_overloaded_within_budget():
+    calls = []
+
+    def flaky(signed, top_k):
+        calls.append(time.monotonic())
+        if len(calls) < 3:
+            raise Overloaded("worker shed it", retry_after_s=0.01)
+        return _ok_answer(signed, top_k)
+
+    svc = _FakeService(flaky)
+    budget = RetryBudget()
+    _attach_budget(svc, budget)
+    s = StreamingQueryService(svc, StreamConfig(
+        max_batch=1, retries=3, query_timeout_s=30.0))
+    try:
+        t = s.submit_dense(np.arange(4.0))
+        t.result(30)                    # retried through to the answer
+        assert len(calls) == 3
+        assert budget.n_spent == 2      # each retry spent one token
+    finally:
+        s.close()
+
+
+def test_stream_never_retries_past_deadline():
+    def always_shedding(signed, top_k):
+        raise Overloaded("worker shed it", retry_after_s=5.0)
+
+    svc = _FakeService(always_shedding)
+    budget = RetryBudget()
+    _attach_budget(svc, budget)
+    s = StreamingQueryService(svc, StreamConfig(max_batch=1, retries=8))
+    try:
+        t = s.submit_dense(np.arange(4.0), query_timeout_s=0.3)
+        t0 = time.monotonic()
+        with pytest.raises(Overloaded):
+            t.result(30)
+        # a 5s retry-after cannot fit a 0.3s deadline: no retry fired, no
+        # token burned, and the failure surfaced immediately
+        assert time.monotonic() - t0 < 2.0
+        assert budget.n_spent == 0
+    finally:
+        s.close()
+
+
+def test_stream_retry_exhausted_budget_stops_retrying():
+    calls = []
+
+    def always_failing(signed, top_k):
+        calls.append(1)
+        raise Overloaded("worker shed it", retry_after_s=0.0)
+
+    svc = _FakeService(always_failing)
+    budget = RetryBudget(ratio=0.0, cap=0.0, floor_per_s=0.0)  # always empty
+    _attach_budget(svc, budget)
+    s = StreamingQueryService(svc, StreamConfig(
+        max_batch=1, retries=5, query_timeout_s=30.0))
+    try:
+        t = s.submit_dense(np.arange(4.0))
+        with pytest.raises(Overloaded):
+            t.result(30)
+        assert len(calls) == 1          # no budget -> primary only
+        assert budget.n_denied >= 1
+    finally:
+        s.close()

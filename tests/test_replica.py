@@ -10,11 +10,19 @@ peer, and restores R=2.  The resynced replica must then be able to carry
 the shard ALONE (its former peer killed) and still answer bit-exactly —
 parity is the proof the journal replay rebuilt content, not just counts.
 
+The kills are NOT wall-clock races: every death is a ``FaultPlan`` event
+keyed to the k-th message of a type seen by a specific lane (kill on the
+4th ADD, kill on the 3rd QUERY, ...), so which worker dies at which
+protocol point is a pure function of the driven traffic.  The scenario
+runs TWICE on the same ``REPRO_FAULT_SEED`` and the fired-event logs must
+match record-for-record — determinism is asserted, not assumed.
+
 The in-process tests cover the coordinator-side mechanics without worker
 spawns: write-ahead journal append/rollback around scatter, snapshot +
 tail-replay reboot, and (shard, replica)-labelled plane observability.
 """
 
+import os
 import time
 
 import numpy as np
@@ -25,7 +33,8 @@ from repro.replica import (IngestJournal, ReplicatedSketchStore, Supervisor,
                            connect_replicated, snapshot_journal_seq,
                            spawn_replicated)
 from repro.store import SketchStore, StoreConfig
-from repro.transport import shutdown_plane
+from repro.transport import (FAULT_LOG_ENV, FaultEvent, FaultPlan,
+                             read_fired_log, shutdown_plane)
 
 K, NB, RPB = 64, 16, 4
 
@@ -114,21 +123,46 @@ def test_scatter_failure_rolls_back_journal_record(tmp_path):
     journal.close()
 
 
-# -- the chaos test: real workers, kills mid-traffic -------------------------
+# -- the chaos test: real workers, plan-scheduled kills mid-traffic ----------
 
-def test_chaos_failover_bit_identical(tmp_path):
-    """S=2 x R=2 tcp plane: kill one replica mid-ingest and one (a
-    PRIMARY) mid-query; every answer stays bit-identical to the
-    single-store reference; the supervisor restores R=2 with
-    digest-verified parity; the resynced replicas then carry the plane
-    alone."""
+def _chaos_plans(seed: int):
+    """The chaos schedule, entirely FaultPlan-driven:
+
+      - lane (0,1) dies on its 4th ADD   (mid-ingest, a non-primary)
+      - lane (1,0) dies on its 3rd QUERY (mid-query, a PRIMARY)
+      - lanes (0,0) and (1,1) die on their 6th ADD (the ORIGINAL
+        survivors, so the resynced replicas must carry alone)
+
+    plus seed-derived delay jitter on lane (0,0)'s first queries — the
+    timing noise chaos needs, injected deterministically instead of left
+    to the scheduler."""
+    jitter = FaultPlan.from_seed(seed, n_events=2, horizon=3,
+                                 kinds=("delay",), msg_type="query",
+                                 delay_ms=15.0).events
+    return {
+        (0, 0): FaultPlan([FaultEvent("kill", 5, "add")] + list(jitter)),
+        (0, 1): FaultPlan([FaultEvent("kill", 3, "add")]),
+        (1, 0): FaultPlan([FaultEvent("kill", 2, "query")]),
+        (1, 1): FaultPlan([FaultEvent("kill", 5, "add")]),
+    }
+
+
+def _chaos_once(tmp_path, seed: int) -> list[dict]:
+    """One full chaos scenario; returns the fired-event log records
+    (sorted per lane) so the caller can diff two runs."""
+    os.makedirs(tmp_path, exist_ok=True)
     cfg = _cfg()
     sigs = _corpus(n=180)
     batches = np.array_split(sigs, 6)
     q = _queries(sigs)
     ref = SketchStore(cfg)
+    log_path = str(tmp_path / "faults.jsonl")
     journal = IngestJournal(str(tmp_path / "ingest.journal"))
-    grid = spawn_replicated(cfg, 2, 2)
+    os.environ[FAULT_LOG_ENV] = log_path
+    try:
+        grid = spawn_replicated(cfg, 2, 2, faults=_chaos_plans(seed))
+    finally:
+        os.environ.pop(FAULT_LOG_ENV, None)
     store = sup = None
     try:
         store = connect_replicated(grid, cfg, journal=journal, timeout=60)
@@ -147,10 +181,9 @@ def test_chaos_failover_bit_identical(tmp_path):
         assert labelled, "per-lane labelled snapshots missing"
         assert snap["hists"]["worker.handle.query"]["count"] >= 2
 
-        # kill a NON-primary replica, then keep ingesting: writes must
-        # succeed on reduced redundancy (tolerant legs), not poison the
-        # plane
-        grid[0][1].terminate()
+        # batch 3's scatter is lane (0,1)'s 4th ADD: its plan kills it
+        # mid-ingest.  Writes must succeed on reduced redundancy
+        # (tolerant legs), not poison the plane
         for b in batches[3:5]:
             ref.add(b)
             store.add(b)
@@ -158,13 +191,16 @@ def test_chaos_failover_bit_identical(tmp_path):
         assert store._failed is None
         _assert_parity(ref, store, q)
 
-        # kill shard 1's PRIMARY, then query: the read fails over to the
-        # sibling replica (in-round via the failure hedge, or blocking
-        # retry) — bit-identical either way, never a wrong answer
-        grid[1][0].terminate()
+        # this round is lane (1,0)'s 3rd QUERY: its plan kills shard 1's
+        # PRIMARY mid-query.  The read fails over to the sibling replica
+        # (in-round via the failure hedge, or blocking retry) —
+        # bit-identical either way, never a wrong answer
         _assert_parity(ref, store, q)
+        assert not store.shards[1].lanes[0].up
 
-        # supervisor heals: respawn, journal replay, digest-verified
+        # supervisor heals: respawn (no fault plan rides along — plans
+        # are per-spawn, so a respawned slot cannot crash-loop on its
+        # predecessor's schedule), journal replay, digest-verified
         # rejoin, back to R=2 on every shard
         deadline = time.monotonic() + 240
         while time.monotonic() < deadline:
@@ -179,11 +215,10 @@ def test_chaos_failover_bit_identical(tmp_path):
         assert reg.get("replica.failovers", 0) >= 2
         _assert_parity(ref, store, q)
 
-        # now kill the ORIGINAL survivors: the resynced replicas must
-        # carry their shards alone, which proves the journal replay
-        # rebuilt bit-identical content, not just matching sizes
-        store.shards[0].lanes[0].handle.terminate()
-        store.shards[1].lanes[1].handle.terminate()
+        # batch 5's scatter is the 6th ADD of BOTH original survivors:
+        # their plans kill them, and the resynced replicas must carry
+        # their shards alone — proof the journal replay rebuilt
+        # bit-identical content, not just matching sizes
         ref.add(batches[5])
         store.add(batches[5])
         _assert_parity(ref, store, q)
@@ -200,6 +235,22 @@ def test_chaos_failover_bit_identical(tmp_path):
                 for h in row:
                     h.terminate()
         journal.close()
+    return read_fired_log(log_path)
+
+
+def test_chaos_failover_bit_identical(tmp_path):
+    """S=2 x R=2 tcp plane, every kill a FaultPlan event: answers stay
+    bit-identical to the single-store reference throughout; the
+    supervisor restores R=2 with digest-verified parity; the resynced
+    replicas then carry the plane alone.  The scenario runs twice on the
+    same seed and must inject the identical event sequence both times."""
+    seed = int(os.environ.get("REPRO_FAULT_SEED", "1234"))
+    fired_a = _chaos_once(tmp_path / "a", seed)
+    fired_b = _chaos_once(tmp_path / "b", seed)
+    # 4 kills + the seeded query jitter, identical record-for-record
+    assert fired_a, "no fault events fired"
+    assert sum(1 for r in fired_a if r["kind"] == "kill") == 4
+    assert fired_a == fired_b, (fired_a, fired_b)
 
 
 def test_all_replicas_down_is_an_error_not_a_hang(tmp_path):
